@@ -1,0 +1,80 @@
+"""Paper Figure 3: L2Miss vs BLK vs SPS vs MiniBatch on TPC-H lineitem
+(synthetic dbgen, data/tpch.py): running time, total sample size and
+simulated confidence across eps, delta, #groups and data size."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core import estimators
+from repro.core.l2miss import MissConfig, exact_answer, run_l2miss
+from repro.data.tpch import make_lineitem
+
+from .common import CsvEmitter, simulated_confidence, timed
+
+
+def _run_all(emit, data, eps_abs, delta, label, *, trials=60,
+             include_sps=True):
+    truth = exact_answer(data, estimators.get("avg"))
+    m = data.num_groups
+    # --- L2Miss ---
+    cfg = MissConfig(epsilon=eps_abs, delta=delta, B=200, n_min=1000,
+                     n_max=2000, max_iters=60, seed=0)
+    tr, dt = timed(run_l2miss, data, "avg", cfg)
+    conf = simulated_confidence(data, "avg", tr.n, eps_abs, trials=trials,
+                                theta_truth=truth) if tr.success else 0.0
+    emit.add(f"fig3/{label}/L2Miss", dt, {
+        "C": tr.total_sample_size, "conf": round(conf, 3),
+        "iters": tr.iterations, "status": tr.status})
+    # --- BLK ---
+    res, dt = timed(bl.run_blk, data, "avg", eps_abs, delta)
+    conf = simulated_confidence(data, "avg", res.n, eps_abs, trials=trials,
+                                theta_truth=truth) if res.success else 0.0
+    emit.add(f"fig3/{label}/BLK", dt, {
+        "C": int(res.n.sum()), "conf": round(conf, 3)})
+    # --- SPS (full scan) ---
+    if include_sps:
+        rel = eps_abs / max(float(np.linalg.norm(truth.ravel())), 1e-9)
+        res, dt = timed(bl.run_sps, data, "avg", max(rel, 1e-3), delta)
+        emit.add(f"fig3/{label}/SPS", dt, {
+            "C": int(res.total_sampled), "scan": "full"})
+    # --- MiniBatch (model-free searcher) ---
+    res, dt = timed(bl.run_minibatch, data, "avg", eps_abs, delta,
+                    step=2000, B=200)
+    emit.add(f"fig3/{label}/MiniBatch", dt, {
+        "C": int(res.n.sum()), "iters": res.iterations,
+        "touched": res.total_sampled})
+
+
+def run(emit: CsvEmitter, *, full: bool = False, trials: int = 60):
+    base_rows = 2_000_000 if full else 600_000
+
+    # (a) vary relative error bound
+    data, _ = make_lineitem(rows=base_rows, group_by="linestatus", seed=3)
+    truth = exact_answer(data, estimators.get("avg"))
+    scale = float(np.linalg.norm(truth.ravel()))
+    for rel in ((0.01, 0.005, 0.002) if full else (0.01, 0.004)):
+        _run_all(emit, data, rel * scale, 0.05, f"eps{rel}", trials=trials)
+
+    # (b) vary error probability
+    for delta in ((0.1, 0.05, 0.01) if full else (0.1, 0.01)):
+        _run_all(emit, data, 0.01 * scale, delta, f"delta{delta}",
+                 trials=trials, include_sps=False)
+
+    # (c) vary number of groups
+    for gb in (("linestatus", "shipinstruct", "tax") if full
+               else ("linestatus", "tax")):
+        data_g, _ = make_lineitem(rows=base_rows, group_by=gb, seed=3)
+        truth_g = exact_answer(data_g, estimators.get("avg"))
+        scale_g = float(np.linalg.norm(truth_g.ravel()))
+        _run_all(emit, data_g, 0.01 * scale_g, 0.05,
+                 f"groups{data_g.num_groups}", trials=trials,
+                 include_sps=False)
+
+    # (d) vary data size: MISS cost ~ sample size, SPS cost ~ N
+    for n in ((600_000, 2_000_000, 6_000_000) if full
+              else (300_000, 1_200_000)):
+        data_n, _ = make_lineitem(rows=n, group_by="linestatus", seed=3)
+        truth_n = exact_answer(data_n, estimators.get("avg"))
+        scale_n = float(np.linalg.norm(truth_n.ravel()))
+        _run_all(emit, data_n, 0.01 * scale_n, 0.05, f"N{n}", trials=trials)

@@ -1,0 +1,106 @@
+"""Kernel-level microbenchmarks (CPU wall times are proxies; the TPU story
+is the structural roofline in EXPERIMENTS.md SSRoofline):
+
+  * Poisson-bootstrap: moments-matmul path vs per-replicate weighted
+    reductions vs gather-based multinomial -- the paper's hot loop,
+    reformulated (DESIGN.md SS3).
+  * Fused on-device MISS loop vs host loop (dispatch-overhead elimination).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bootstrap as bs
+from repro.core import estimators
+from repro.core.fused import fused_l2miss
+from repro.core.l2miss import MissConfig, run_l2miss
+from repro.data import make_grouped
+
+from .common import CsvEmitter
+
+
+def _time_jit(fn, *args, warmup=1, repeats=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / repeats
+
+
+def run(emit: CsvEmitter, *, full: bool = False):
+    n, B = (262_144, 500) if full else (65_536, 200)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    mask = jnp.ones((n,), jnp.float32)
+    est = estimators.get("avg")
+
+    # (1) moments-matmul (the kernel formulation, jnp reference path)
+    @jax.jit
+    def matmul_path(key):
+        return bs.replicates(est, x, mask, key, B)
+
+    dt = _time_jit(matmul_path, jax.random.PRNGKey(0))
+    emit.add("kern/bootstrap-matmul", dt, {
+        "n": n, "B": B, "gflops": round(2 * n * B * 3 / dt / 1e9, 1)})
+
+    # (2) per-replicate vmapped weighted mean (no moments fast path)
+    @jax.jit
+    def vmap_path(key):
+        w = bs.poisson_weights(key, B, n) * mask[None, :]
+        aux = est.prepare(x)
+        return jax.vmap(lambda wb: est.apply(aux, wb))(w)
+
+    dt2 = _time_jit(vmap_path, jax.random.PRNGKey(0))
+    emit.add("kern/bootstrap-vmap", dt2, {"speedup_vs_matmul":
+                                          round(dt2 / dt, 2)})
+
+    # (3) gather-based multinomial (the paper's original formulation)
+    nb_small = min(n, 4_096)
+    xs = x[:nb_small]
+    ms = mask[:nb_small]
+
+    @jax.jit
+    def gather_path(key):
+        return bs.replicates(est, xs, ms, key, B, backend="multinomial")
+
+    dt3 = _time_jit(gather_path, jax.random.PRNGKey(0))
+    # normalize to the same n for the derived comparison
+    emit.add("kern/bootstrap-gather", dt3, {
+        "n": nb_small, "B": B,
+        "per_row_vs_matmul": round((dt3 / nb_small) / (dt / n), 1)})
+
+    # (4) fused on-device MISS vs host loop
+    data = make_grouped(["normal", "exp"], 120_000, seed=1, biases=[4., 2.])
+    eps = 0.02
+    t0 = time.perf_counter()
+    res = fused_l2miss(
+        data.values, jnp.asarray(data.offsets), jnp.ones(2, jnp.float32),
+        jax.random.PRNGKey(0), jnp.float32(eps), 0.05,
+        est_name="avg", B=B, n_min=500, n_max=1000, l=8, max_iters=24,
+        n_cap=1 << 15)
+    jax.block_until_ready(res.n)
+    dt_fused_compile = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = fused_l2miss(
+        data.values, jnp.asarray(data.offsets), jnp.ones(2, jnp.float32),
+        jax.random.PRNGKey(1), jnp.float32(eps), 0.05,
+        est_name="avg", B=B, n_min=500, n_max=1000, l=8, max_iters=24,
+        n_cap=1 << 15)
+    jax.block_until_ready(res.n)
+    dt_fused = time.perf_counter() - t0
+    emit.add("kern/miss-fused", dt_fused, {
+        "iters": int(res.iterations), "C": int(np.asarray(res.n).sum()),
+        "compile_s": round(dt_fused_compile, 1)})
+    cfg = MissConfig(epsilon=eps, delta=0.05, B=B, n_min=500, n_max=1000,
+                     l=8, seed=1)
+    t0 = time.perf_counter()
+    tr = run_l2miss(data, "avg", cfg)
+    dt_host = time.perf_counter() - t0
+    emit.add("kern/miss-host", dt_host, {
+        "iters": tr.iterations, "C": tr.total_sample_size,
+        "fused_speedup": round(dt_host / max(dt_fused, 1e-9), 2)})

@@ -1,0 +1,45 @@
+"""SSRoofline table emission: read results/dryrun*/ JSONs and print the
+three roofline terms, dominant bottleneck, MODEL_FLOPS ratio per cell."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import CsvEmitter
+
+
+def run(emit: CsvEmitter, *, result_dirs=("results/dryrun_v2",
+                                          "results/dryrun")):
+    seen = set()
+    for d in result_dirs:
+        for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+            name = os.path.basename(path)[:-5]
+            if name in seen:
+                continue
+            seen.add(name)
+            try:
+                r = json.load(open(path))
+            except Exception:
+                continue
+            if r.get("status") == "skipped":
+                emit.add(f"roofline/{name}", 0.0,
+                         {"status": "skip", "reason": r["reason"][:40]})
+                continue
+            if r.get("status") != "ok":
+                emit.add(f"roofline/{name}", 0.0, {"status": r.get("status")})
+                continue
+            t = r["roofline"]
+            dom_t = max(t["t_compute_s"], t["t_memory_s"],
+                        t["t_collective_s"])
+            emit.add(f"roofline/{name}", dom_t, {
+                "tC": f"{t['t_compute_s']:.3g}",
+                "tM": f"{t['t_memory_s']:.3g}",
+                "tX": f"{t['t_collective_s']:.3g}",
+                "dom": t["dominant"],
+                "mf_ratio": (round(r["model_flops_ratio"], 3)
+                             if r.get("model_flops_ratio") else "n/a"),
+                "temp_gb": round(
+                    r["memory_analysis"].get("temp_size_in_bytes", 0) / 1e9,
+                    1),
+            })

@@ -1,0 +1,51 @@
+"""Benchmark driver: one section per paper table/figure + kernels + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # standard pass
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
+    PYTHONPATH=src python -m benchmarks.run --only fig3
+
+Prints ``name,us_per_call,derived`` CSV rows (skeleton contract).
+"""
+from __future__ import annotations
+
+import argparse
+
+from .common import CsvEmitter
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale data sizes (slow on CPU)")
+    ap.add_argument("--only", default=None,
+                    help="fig1|fig2|fig3|fig4|kern|roofline")
+    ap.add_argument("--trials", type=int, default=40,
+                    help="simulated-confidence trials")
+    args = ap.parse_args()
+    emit = CsvEmitter()
+    emit.header()
+    only = args.only
+
+    if only in (None, "fig1"):
+        from . import bench_applicability
+        bench_applicability.run(emit, full=args.full, trials=args.trials)
+    if only in (None, "fig2"):
+        from . import bench_applicability
+        bench_applicability.run_multigroup(emit, full=args.full,
+                                           trials=args.trials)
+    if only in (None, "fig3"):
+        from . import bench_efficiency
+        bench_efficiency.run(emit, full=args.full, trials=args.trials)
+    if only in (None, "fig4"):
+        from . import bench_ordering
+        bench_ordering.run(emit, full=args.full, trials=args.trials)
+    if only in (None, "kern"):
+        from . import bench_kernels
+        bench_kernels.run(emit, full=args.full)
+    if only in (None, "roofline"):
+        from . import bench_roofline
+        bench_roofline.run(emit)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Distributed AQP demo: exact GROUP BY + Poisson-bootstrap error estimation
+over a row-sharded dataset with shard_map + psum (8 simulated devices).
+
+    PYTHONPATH=src python examples/distributed_aqp.py
+
+Only (groups x moments) partials cross the interconnect -- the TPU-native
+replacement for the paper's inverted-index scan avoidance (DESIGN.md SS3).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.aqp import distributed as D  # noqa: E402
+
+
+def main():
+    rng = np.random.default_rng(0)
+    N, m = 2_000_000, 4
+    gid = rng.integers(0, m, N)
+    x = (rng.standard_normal(N) + gid).astype(np.float32)
+
+    mesh = D.make_data_mesh()
+    print(f"mesh: {mesh.devices.size} devices, {N:,} rows sharded over "
+          f"'data'")
+    gid_s, x_s = D.shard_dataset(mesh, gid, x)
+
+    stats = D.sharded_group_stats(mesh, gid_s, x_s, m)
+    print("\nexact GROUP BY (one pass, psum of (m x 5) partials):")
+    for g in range(m):
+        cnt = float(stats['count'][g])
+        print(f"  group {g}: count={cnt:,.0f} mean="
+              f"{float(stats['sum'][g]) / cnt:.4f} "
+              f"min={float(stats['min'][g]):.3f} "
+              f"max={float(stats['max'][g]):.3f}")
+
+    rate = jnp.full((m,), 0.02, jnp.float32)
+    e, theta = D.sharded_bootstrap_estimate(mesh, gid_s, x_s, m, rate, 42,
+                                            B=300)
+    truth = np.asarray([x[gid == g].mean() for g in range(m)])
+    print(f"\ndistributed 2% sample + Poisson bootstrap (B=300):")
+    print(f"  estimate {np.asarray(theta).round(4)}")
+    print(f"  truth    {truth.round(4)}")
+    print(f"  certified L2 error (95%): {float(e):.4f}; "
+          f"actual {np.linalg.norm(np.asarray(theta) - truth):.4f}")
+    print(f"  network traffic: {m} groups x 301 replicates x 3 moments "
+          f"floats = {m * 301 * 3 * 4 / 1024:.1f} KiB (data size independent)")
+
+
+if __name__ == "__main__":
+    main()

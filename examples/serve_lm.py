@@ -1,0 +1,9 @@
+"""Serve a small model with continuously batched requests.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "qwen3-1.7b", "--smoke", "--requests", "6",
+                "--slots", "3", "--max-new", "12"])

@@ -1,0 +1,4 @@
+from .query import Query
+from .engine import AQPEngine
+
+__all__ = ["AQPEngine", "Query"]

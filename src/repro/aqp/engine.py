@@ -1,0 +1,81 @@
+"""The AQP engine: Listing-1 queries -> MISS-driven samples -> answers.
+
+Single-host path: GroupedData + core L2Miss/extensions (the paper's system).
+Distributed path (aqp/distributed.py): dataset sharded over the mesh's data
+axis; sampling, bootstrap moments and exact GROUP BY all run shard-local
+with only (m x moments) partials crossing the interconnect.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from ..core import estimators, extensions
+from ..core.framework import MissTrace
+from ..core.l2miss import MissConfig, run_l2miss
+from ..core.sampling import GroupedData
+from .query import Query
+
+
+@dataclasses.dataclass
+class AQPEngine:
+    data: GroupedData
+    B: int = 500
+    n_min: int = 1000
+    n_max: int = 2000
+    seed: int = 0
+    use_kernel: bool = False
+
+    def _pilot_scale(self, q: Query) -> float:
+        """|theta| scale for relative bounds, from a small pilot sample."""
+        est = estimators.get(q.func)
+        rng = np.random.default_rng(self.seed + 1)
+        from ..core.sampling import stratified_sample_host
+
+        n_vec = np.minimum(2000, self.data.sizes)
+        sample, mask = stratified_sample_host(rng, self.data, n_vec, 2048)
+        th = jax.vmap(lambda xg, mg: est.apply(est.prepare(xg), mg))(
+            sample, mask)
+        scale = (self.data.scale if est.needs_population_scale
+                 else np.ones(self.data.num_groups))
+        return float(np.linalg.norm(np.asarray(th)[:, 0] * scale))
+
+    def _config(self, q: Query, epsilon: float) -> MissConfig:
+        return MissConfig(
+            epsilon=epsilon, delta=q.delta, B=self.B, n_min=self.n_min,
+            n_max=self.n_max, seed=self.seed, use_kernel=self.use_kernel)
+
+    def execute(self, q: Query) -> MissTrace:
+        data = self.data
+        if q.predicate is not None:
+            vals = np.asarray(data.values)
+            ind = q.predicate(vals).astype(np.float32)
+            data = GroupedData(ind, data.offsets.copy(), data.scale.copy())
+        eps = q.epsilon
+        if eps is None and q.metric != "order":
+            eps = q.epsilon_rel * self._pilot_scale(q)
+        cfg = self._config(q, eps if eps is not None else 0.0)
+        if q.metric == "l2":
+            return run_l2miss(data, q.func, cfg)
+        if q.metric == "linf":
+            return extensions.run_maxmiss(data, q.func, cfg)
+        if q.metric == "l1":
+            return extensions.run_lpmiss(data, q.func, cfg, p=1)
+        if q.metric == "diff":
+            return extensions.run_diffmiss(data, q.func, cfg)
+        if q.metric == "order":
+            return extensions.run_ordermiss(data, q.func, cfg)
+        raise ValueError(q.metric)
+
+    def exact(self, q: Query) -> np.ndarray:
+        from ..core.l2miss import exact_answer
+
+        data = self.data
+        if q.predicate is not None:
+            vals = np.asarray(data.values)
+            ind = q.predicate(vals).astype(np.float32)
+            data = GroupedData(ind, data.offsets.copy(), data.scale.copy())
+        return exact_answer(data, estimators.get(q.func))

@@ -1,0 +1,35 @@
+"""Approximate analytical queries (paper Listing 1):
+
+    SELECT X, f(Y) FROM D GROUP BY X [WHERE P]
+    ERROR WITHIN eps CONFIDENCE 1-delta [METRIC m]
+
+``predicate`` turns a COUNT query into COUNT-with-predicate by mapping the
+measure column to an indicator before estimation (paper SS2.1).
+``epsilon_rel`` expresses the bound relative to the true result magnitude
+(the paper's experiments use relative bounds; resolved by the engine
+against a pilot estimate).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+METRICS = ("l2", "linf", "l1", "order", "diff")
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    func: str                              # estimator name (core.estimators)
+    epsilon: Optional[float] = None        # absolute bound
+    epsilon_rel: Optional[float] = None    # relative bound (vs pilot |theta|)
+    delta: float = 0.05
+    metric: str = "l2"
+    predicate: Optional[Callable] = None   # row predicate for COUNT queries
+    lp: Optional[float] = None             # for metric="lp"
+
+    def __post_init__(self):
+        if self.metric not in METRICS:
+            raise ValueError(f"metric {self.metric!r} not in {METRICS}")
+        if self.metric != "order" and (self.epsilon is None) == (
+                self.epsilon_rel is None):
+            raise ValueError("exactly one of epsilon / epsilon_rel required")

@@ -1,0 +1,3 @@
+from .registry import ARCHS, SHAPES, get_config, get_shape, list_archs
+
+__all__ = ["ARCHS", "SHAPES", "get_config", "get_shape", "list_archs"]

@@ -1,0 +1,270 @@
+"""Baseline SSO / AQP algorithms the paper compares against (SS6.3):
+
+  BLK       BlinkDB-style closed-form sample sizing from the CLT/normality
+            assumption [Agarwal+ 13].  Near-oracle when it applies (AVG-like
+            aggregates) -- the paper's "best method as long as it can be
+            applied".
+  SPS       Sample+Seek [Ding+ 16]: measure-biased sampling with a
+            Chernoff-type distribution-precision bound; needs a full scan.
+  IFOCUS    IFocus [Kim+ 15]: incremental sampling with Hoeffding CIs,
+            ordering guarantees.
+  MINIBATCH iOLAP-style model-free searcher: grow the sample a step at a
+            time until the bootstrap error meets the bound.
+
+All return a ``BaselineResult`` with the same cost accounting as MissTrace so
+benchmarks/bench_efficiency.py can tabulate them side by side.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bootstrap as B_
+from . import sampling as S
+from .estimators import get as get_estimator
+from .sampling import GroupedData
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    name: str
+    success: bool
+    n: np.ndarray
+    theta: Optional[np.ndarray]
+    total_sampled: int          # rows touched incl. scans/pilots (cost proxy)
+    iterations: int
+    wall_time_s: float
+    info: dict
+
+
+def _norm_ppf(p: float) -> float:
+    """Inverse standard-normal CDF (Acklam's rational approximation).
+
+    scipy is not available in this container; |err| < 1.2e-8 over (0,1).
+    """
+    a = [-3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+         1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00]
+    b = [-5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+         6.680131188771972e+01, -1.328068155288572e+01]
+    c = [-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+         -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00]
+    d = [7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+         3.754408661907416e+00]
+    p_low, p_high = 0.02425, 1 - 0.02425
+    if p < p_low:
+        q = np.sqrt(-2 * np.log(p))
+        return (((((c[0]*q+c[1])*q+c[2])*q+c[3])*q+c[4])*q+c[5]) / \
+               ((((d[0]*q+d[1])*q+d[2])*q+d[3])*q+1)
+    if p <= p_high:
+        q = p - 0.5
+        r = q * q
+        return (((((a[0]*r+a[1])*r+a[2])*r+a[3])*r+a[4])*r+a[5])*q / \
+               (((((b[0]*r+b[1])*r+b[2])*r+b[3])*r+b[4])*r+1)
+    q = np.sqrt(-2 * np.log(1 - p))
+    return -(((((c[0]*q+c[1])*q+c[2])*q+c[3])*q+c[4])*q+c[5]) / \
+           ((((d[0]*q+d[1])*q+d[2])*q+d[3])*q+1)
+
+
+def _group_pilot_stats(data: GroupedData, rng, pilot_n: int):
+    """Per-group pilot mean/var/range/4th-moment from a small uniform sample."""
+    m = data.num_groups
+    stats = np.zeros((m, 5))
+    vals = np.asarray(data.values)[:, 0]
+    for i in range(m):
+        lo, hi = data.offsets[i], data.offsets[i + 1]
+        k = min(pilot_n, hi - lo)
+        idx = rng.integers(lo, hi, size=k)
+        x = vals[idx]
+        mu = x.mean()
+        var = x.var()
+        mu4 = np.mean((x - mu) ** 4)
+        stats[i] = (mu, var, x.max() - x.min(), mu4, k)
+    return stats
+
+
+def run_blk(
+    data: GroupedData, estimator: str, epsilon: float, delta: float,
+    *, pilot_n: int = 1000, seed: int = 0,
+) -> BaselineResult:
+    """BlinkDB-style closed form, equal error split across groups (SS6.3.1).
+
+    Per group: eps_i = eps / sqrt(m) at confidence 1 - delta/m (Bonferroni),
+    n_i = (z * sigma_i / eps_i)^2.  Supports avg/sum/count/var (CLT cases).
+    """
+    t0 = time.perf_counter()
+    est = get_estimator(estimator)
+    if estimator not in ("avg", "sum", "count", "proportion", "var"):
+        return BaselineResult("BLK", False, np.zeros(data.num_groups),
+                              None, 0, 0, 0.0,
+                              {"reason": f"closed form unavailable for {estimator}"})
+    rng = np.random.default_rng(seed)
+    m = data.num_groups
+    stats = _group_pilot_stats(data, rng, pilot_n)
+    z = _norm_ppf(1.0 - delta / (2.0 * m))
+    eps_i = epsilon / np.sqrt(m)
+    scale = data.scale if est.needs_population_scale else np.ones((m,))
+    if estimator == "var":
+        # Var(s^2) ~ (mu4 - sigma^4) / n  (delta method)
+        avar = np.maximum(stats[:, 3] - stats[:, 1] ** 2, 1e-12)
+    else:
+        avar = np.maximum(stats[:, 1], 1e-12)
+    n = np.ceil((z**2) * avar * (scale**2) / (eps_i**2)).astype(np.int64)
+    n = np.minimum(np.maximum(n, 2), data.sizes)
+    # Final answer from a sample of the computed size.
+    key = jax.random.PRNGKey(seed)
+    n_cap = S.bucket_cap(int(n.max()))
+    sample, mask = S.stratified_sample(
+        key, data.values, jnp.asarray(data.offsets), jnp.asarray(n), n_cap)
+    theta = jax.vmap(lambda xg, mg: est.apply(est.prepare(xg), mg))(sample, mask)
+    theta = np.asarray(theta) * scale[:, None]
+    return BaselineResult(
+        "BLK", True, n, theta, int(n.sum() + pilot_n * m), 1,
+        time.perf_counter() - t0, {"z": z, "pilot_n": pilot_n})
+
+
+def run_sps(
+    data: GroupedData, estimator: str, epsilon_rel: float, delta: float,
+    *, seed: int = 0,
+) -> BaselineResult:
+    """Sample+Seek flavored baseline: full scan + measure-biased sample.
+
+    Sample size from the distribution-precision bound n >= log(2/delta) /
+    (2 eps^2); the full scan (to build measure weights) dominates cost at
+    scale, reproducing Fig. 3(d)'s behaviour.
+    """
+    t0 = time.perf_counter()
+    est = get_estimator(estimator)
+    vals = np.asarray(data.values)[:, 0]
+    N = len(vals)
+    # ---- the full scan (cost accounted below) ----
+    w = np.abs(vals) + 1e-12
+    w_sum_per_group = np.add.reduceat(w, data.offsets[:-1])
+    n_draw = int(np.ceil(np.log(2.0 / delta) / (2.0 * epsilon_rel**2)))
+    rng = np.random.default_rng(seed)
+    m = data.num_groups
+    n = np.zeros((m,), np.int64)
+    theta = np.zeros((m, 1))
+    for i in range(m):
+        lo, hi = data.offsets[i], data.offsets[i + 1]
+        k = int(min(n_draw, hi - lo))
+        p = w[lo:hi] / w_sum_per_group[i]
+        idx = rng.choice(hi - lo, size=k, p=p, replace=True)
+        x = vals[lo + idx]
+        # measure-biased AVG: E[x] = sum w / (N * E_w[1/|x| * x])... for AVG we
+        # use the self-normalized importance estimate.
+        iw = 1.0 / (p[idx] * (hi - lo))
+        theta[i, 0] = np.sum(x * iw) / np.sum(iw)
+        n[i] = k
+    scale = data.scale if est.needs_population_scale else np.ones((m,))
+    theta = theta * scale[:, None]
+    return BaselineResult(
+        "SPS", True, n, theta, int(N + n.sum()), 1,
+        time.perf_counter() - t0, {"n_draw": n_draw, "full_scan_rows": N})
+
+
+def run_ifocus(
+    data: GroupedData, estimator: str, delta: float,
+    *, step0: int = 200, growth: float = 1.5, max_rounds: int = 200, seed: int = 0,
+) -> BaselineResult:
+    """IFocus: grow samples until Hoeffding CIs of all group means separate.
+
+    CI half-width: R * sqrt(log(2 m T / delta) / (2 n)) with R the data range
+    (estimated from the pilot) -- the conservative concentration bound that
+    makes IFocus need several-times-larger samples than OrderMiss (Fig. 4).
+    """
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(seed)
+    vals = np.asarray(data.values)[:, 0]
+    m = data.num_groups
+    stats = _group_pilot_stats(data, rng, 500)
+    R = np.maximum(stats[:, 2], 1e-9)
+    n = np.full((m,), step0, np.int64)
+    sums = np.zeros((m,))
+    cnts = np.zeros((m,), np.int64)
+    total = 0
+    for i in range(m):
+        lo, hi = data.offsets[i], data.offsets[i + 1]
+        idx = rng.integers(lo, hi, size=int(n[i]))
+        sums[i] += vals[idx].sum()
+        cnts[i] += len(idx)
+        total += len(idx)
+    rounds = 1
+    while rounds < max_rounds:
+        mu = sums / np.maximum(cnts, 1)
+        hw = R * np.sqrt(np.log(2 * m * max_rounds / delta) / (2 * np.maximum(cnts, 1)))
+        order = np.argsort(mu)
+        unresolved = []
+        for a, b in zip(order[:-1], order[1:]):
+            if mu[b] - hw[b] <= mu[a] + hw[a]:  # CIs overlap
+                unresolved.extend([a, b])
+        if not unresolved:
+            break
+        step = int(step0 * growth ** rounds)
+        for i in set(unresolved):
+            lo, hi = data.offsets[i], data.offsets[i + 1]
+            k = int(min(step, hi - lo))
+            idx = rng.integers(lo, hi, size=k)
+            sums[i] += vals[idx].sum()
+            cnts[i] += k
+            total += k
+        rounds += 1
+    mu = sums / np.maximum(cnts, 1)
+    return BaselineResult(
+        "IFOCUS", rounds < max_rounds, cnts.astype(np.int64), mu[:, None],
+        total, rounds, time.perf_counter() - t0, {"range_est": R})
+
+
+def run_minibatch(
+    data: GroupedData, estimator: str, epsilon: float, delta: float,
+    *, step: int = 500, B: int = 500, max_iters: int = 400, seed: int = 0,
+) -> BaselineResult:
+    """Model-free searcher (iOLAP-style): n += step until bootstrap e <= eps.
+
+    The paper's motivating strawman -- a huge number of trials (SS1)."""
+    t0 = time.perf_counter()
+    est = get_estimator(estimator)
+    m = data.num_groups
+    scale = (np.asarray(data.scale, np.float32)
+             if est.needs_population_scale else np.ones((m,), np.float32))
+    key = jax.random.PRNGKey(seed)
+    n = np.full((m,), step, np.int64)
+    total = 0
+    it = 0
+    e = np.inf
+    theta = None
+    while it < max_iters:
+        it += 1
+        n = np.minimum(n, data.sizes)
+        total += int(n.sum())
+        n_cap = S.bucket_cap(int(n.max()))
+        key, k1 = jax.random.split(key)
+        fn = _mb_estimate(est.name, m, n_cap, data.num_columns, B)
+        e_dev, th = fn(k1, data.values, jnp.asarray(data.offsets),
+                       jnp.asarray(n), jnp.asarray(scale), delta)
+        e, theta = float(e_dev), np.asarray(th)
+        if e <= epsilon:
+            break
+        n = n + step
+    return BaselineResult(
+        "MINIBATCH", e <= epsilon, n, theta, total, it,
+        time.perf_counter() - t0, {"step": step})
+
+
+from functools import lru_cache
+
+
+@lru_cache(maxsize=128)
+def _mb_estimate(est_name: str, m: int, n_cap: int, c: int, B: int):
+    est = get_estimator(est_name)
+
+    def fn(key, values, offsets, n_vec, scale, delta):
+        ks, kb = jax.random.split(key)
+        sample, mask = S.stratified_sample(ks, values, offsets, n_vec, n_cap)
+        return B_.estimate_error(est, sample, mask, scale, kb, delta, B=B)
+
+    return jax.jit(fn)

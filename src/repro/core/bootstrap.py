@@ -1,0 +1,205 @@
+"""Bootstrap error estimation (paper SS4.2), vectorized for TPU.
+
+Two interchangeable resampling backends:
+
+  * ``poisson``      -- replicate weights w_b = mask * Poisson(1); every
+                        replicate is a weighted reduction (vmap over B).
+                        TPU-native: no gathers (DESIGN.md SS3).  Default.
+  * ``multinomial``  -- classic with-replacement index resampling (gathers);
+                        kept as the statistical reference / CPU oracle.
+
+The ESTIMATE subroutine of MISS: given a stratified sample and an estimator,
+return the 1-delta quantile of the bootstrap distribution of the *joint*
+error metric across groups (groups are resampled independently, matching
+stratified sampling independence).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .estimators import Estimator
+
+Array = jax.Array
+
+
+# Poisson(1) CDF ladder: P(X <= k) for k = 0..9.  Inverse-CDF sampling via
+# 10 fused comparisons is ~30x cheaper than jax.random.poisson's rejection
+# sampler and is exactly the scheme the Pallas kernel uses on TPU, so the
+# jnp path and the kernel share a distribution (truncation mass < 1e-10).
+_POISSON1_CDF = (
+    0.36787944117144233, 0.7357588823428847, 0.9196986029286058,
+    0.9810118431238462, 0.9963401531726563, 0.9994058151824183,
+    0.9999167588507119, 0.9999897508033253, 0.9999988747974149,
+    0.9999998885745217,
+)
+
+
+def poisson_weights(key: Array, B: int, n: int, dtype=jnp.float32) -> Array:
+    """(B, n) iid Poisson(1) resample-count weights (inverse-CDF ladder)."""
+    u = jax.random.uniform(key, (B, n))
+    w = jnp.zeros((B, n), dtype)
+    for c in _POISSON1_CDF:
+        w = w + (u >= c).astype(dtype)
+    return w
+
+
+def multinomial_weights(key: Array, B: int, mask: Array, dtype=jnp.float32) -> Array:
+    """(B, n) exact multinomial resample counts over the valid rows.
+
+    Inverse-CDF sampling (searchsorted over the cumulative mask) -- O(B n
+    log n); jax.random.categorical would materialize the O(B n^2) gumbel
+    tensor.  Gather/scatter-bound; reference backend only.
+    """
+    n = mask.shape[0]
+    w = mask.astype(jnp.float32)
+    cdf = jnp.cumsum(w) / jnp.maximum(jnp.sum(w), 1e-9)
+    u = jax.random.uniform(key, (B, n))
+    idx = jnp.clip(jnp.searchsorted(cdf, u, side="right"), 0, n - 1)
+    # Replicates must have exactly n_valid draws: drop the padding draws.
+    n_valid = jnp.sum(mask)
+    keep = jnp.broadcast_to(jnp.arange(n)[None, :] < n_valid, (B, n))
+    counts = jax.vmap(
+        lambda ix, kp: jnp.zeros((n,), dtype).at[ix].add(kp.astype(dtype))
+    )(idx, keep)
+    return counts * mask[None, :]
+
+
+def _weights(est, x, mask, key, B, backend):
+    if backend == "poisson":
+        w = poisson_weights(key, B, x.shape[0]) * mask[None, :]
+        # Guard against an all-zero Poisson draw on tiny samples: fall back to
+        # the original mask (identity replicate) when a row of weights is 0.
+        dead = jnp.sum(w, axis=1, keepdims=True) <= 0
+        w = jnp.where(dead, mask[None, :], w)
+        return w
+    if backend == "multinomial":
+        return multinomial_weights(key, B, mask)
+    raise ValueError(f"unknown bootstrap backend {backend!r}")
+
+
+# Estimators whose CLT standard error NormalMiss can compute in closed form.
+_NORMAL_OK = ("avg", "proportion", "sum", "count", "var", "std")
+
+
+def normal_replicates(est: Estimator, x: Array, mask: Array, key: Array,
+                      B: int) -> Array:
+    """NormalMiss backend (paper SS6.2): CLT-based Gaussian replicates
+    theta* ~ N(theta_hat, avar/n) -- no resampling, B cheap draws.  Only
+    valid where asymptotic normality holds (BLK's assumption set)."""
+    if est.name not in _NORMAL_OK:
+        raise ValueError(f"normal backend unsupported for {est.name}")
+    v = (x[:, 0] if x.ndim == 2 else x).astype(jnp.float32)
+    w = mask.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(w), 1.0)
+    mean = jnp.sum(w * v) / n
+    var = jnp.sum(w * (v - mean) ** 2) / n
+    if est.name == "var":
+        mu4 = jnp.sum(w * (v - mean) ** 4) / n
+        theta, avar = var, jnp.maximum(mu4 - var**2, 1e-12)
+    elif est.name == "std":
+        sd = jnp.sqrt(jnp.maximum(var, 1e-12))
+        mu4 = jnp.sum(w * (v - mean) ** 4) / n
+        theta, avar = sd, jnp.maximum(mu4 - var**2, 1e-12) / (4 * var)
+    else:
+        theta, avar = mean, var
+    se = jnp.sqrt(avar / n)
+    z = jax.random.normal(key, (B, 1))
+    return theta + se * z
+
+
+def replicates(
+    est: Estimator,
+    x: Array,
+    mask: Array,
+    key: Array,
+    B: int,
+    backend: str = "poisson",
+) -> Array:
+    """(B, p) bootstrap replicates of f on one group's sample.
+
+    Moment estimators take the matmul fast path: all B replicates are one
+    (B, n) @ (n, 3) product over [1, x, x^2] -- the same formulation the
+    Pallas kernel implements on TPU (kernels/poisson_bootstrap)."""
+    if backend == "normal":
+        return normal_replicates(est, x, mask, key, B)
+    w = _weights(est, x, mask, key, B, backend)
+    if est.moments_finish is not None:
+        v = x[:, 0] if x.ndim == 2 else x
+        feats = jnp.stack([jnp.ones_like(v), v, v * v], axis=1)  # (n, 3)
+        M = w @ feats                                            # (B, 3)
+        return est.moments_finish(M)
+    aux = est.prepare(x)
+    return jax.vmap(lambda wb: est.apply(aux, wb))(w)
+
+
+@partial(jax.jit, static_argnames=("est", "B", "backend", "metric"))
+def estimate_error(
+    est: Estimator,
+    sample: Array,   # (m, n_cap, c) stratified sample
+    mask: Array,     # (m, n_cap)
+    scale: Array,    # (m,) per-group |D|_i scale (1.0 for consistent f)
+    key: Array,
+    delta: float,
+    B: int = 500,
+    backend: str = "poisson",
+    metric: str = "l2",
+) -> Tuple[Array, Array]:
+    """ESTIMATE: (e, theta_hat) for the joint metric across m groups.
+
+    e is the (1 - delta) quantile of d(theta*_b, theta_hat) where every group
+    is independently resampled in replicate b.  metric in {l2, linf, l1, per
+    -group-max aka linf}.  Per-group multi-output estimators (regressions)
+    contribute their own L2 coefficient error before the cross-group combine.
+    """
+    m = sample.shape[0]
+    keys = jax.random.split(key, m)
+
+    def per_group(xg, mg, kg):
+        aux = est.prepare(xg)
+        theta = est.apply(aux, mg)
+        reps = replicates(est, xg, mg, kg, B, backend)
+        return theta, reps
+
+    theta_hat, reps = jax.vmap(per_group)(sample, mask, keys)  # (m,p),(m,B,p)
+    # Per-group scalar error per replicate: L2 over the estimator outputs.
+    dev = reps - theta_hat[:, None, :]                # (m, B, p)
+    per_group_err = jnp.sqrt(jnp.sum(dev**2, axis=-1))  # (m, B)
+    per_group_err = per_group_err * scale[:, None]
+    if metric == "l2":
+        joint = jnp.sqrt(jnp.sum(per_group_err**2, axis=0))  # (B,)
+    elif metric == "linf":
+        joint = jnp.max(per_group_err, axis=0)
+    elif metric == "l1":
+        joint = jnp.sum(per_group_err, axis=0)
+    else:  # pragma: no cover - defensive
+        raise ValueError(f"unknown metric {metric!r}")
+    e = jnp.quantile(joint, 1.0 - delta)
+    return e, theta_hat * scale[:, None]
+
+
+def per_group_errors(
+    est: Estimator,
+    sample: Array,
+    mask: Array,
+    scale: Array,
+    key: Array,
+    delta: float,
+    B: int = 500,
+    backend: str = "poisson",
+) -> Array:
+    """(m,) per-group (1-delta)-quantile errors (used by BLK-style baselines)."""
+    m = sample.shape[0]
+    keys = jax.random.split(key, m)
+
+    def per_group(xg, mg, kg):
+        aux = est.prepare(xg)
+        theta = est.apply(aux, mg)
+        reps = replicates(est, xg, mg, kg, B, backend)
+        err = jnp.sqrt(jnp.sum((reps - theta[None, :]) ** 2, axis=-1))
+        return jnp.quantile(err, 1.0 - delta)
+
+    return jax.vmap(per_group)(sample, mask, keys) * scale

@@ -1,0 +1,245 @@
+"""Analytical functions (the ``f`` in ``SELECT X, f(Y)``) as weighted estimators.
+
+Every estimator implements a *weighted* evaluation ``apply(aux, w)`` where ``w``
+is a non-negative per-row weight vector.  This single interface serves three
+roles at once:
+
+  * plain evaluation            -> ``w = mask`` (1.0 for valid rows, 0 padding)
+  * Poisson-bootstrap replicate -> ``w = mask * Poisson(1) counts``
+  * predicate / COUNT queries   -> predicate folded into the indicator column
+
+The split into ``prepare(x) -> aux`` and ``apply(aux, w)`` lets the bootstrap
+``vmap`` over B weight vectors while any O(n log n) work (sorting for
+quantiles, feature assembly for regressions) is hoisted out of the vmap.
+
+This is the TPU-native re-formulation of the paper's gather-based bootstrap:
+resampling-with-replacement counts are approximated entrywise by Poisson(1)
+(the standard "Poisson bootstrap"), turning every replicate into a weighted
+reduction -- matmul/VPU work instead of HBM gathers.  See DESIGN.md SS3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class Estimator:
+    """A weighted analytical function.
+
+    Attributes:
+      name: registry key.
+      prepare: ``x (n, c) -> aux`` pytree; hoisted out of the bootstrap vmap.
+      apply: ``(aux, w (n,)) -> theta (p,)``; must tolerate zero weights.
+      out_dim: ``c -> p`` output dimensionality given input column count.
+      bootstrap_consistent: whether Lemma 3 (bootstrap consistency) applies.
+      needs_population_scale: SUM/COUNT-style estimators whose result is
+        ``|D|_i * consistent_estimator``; the engine applies the per-group
+        scale outside (paper SS2.2.1 transformation of inconsistent estimators).
+    """
+
+    name: str
+    prepare: Callable[[Array], Any]
+    apply: Callable[[Any, Array], Array]
+    out_dim: Callable[[int], int]
+    bootstrap_consistent: bool = True
+    needs_population_scale: bool = False
+    # Optional fast path: theta_b = moments_finish(M_b) where
+    # M_b = [sum w, sum w x, sum w x^2] for replicate b.  Lets the bootstrap
+    # compute ALL replicates as one (B, n) @ (n, 3) matmul -- the MXU
+    # formulation implemented by kernels/poisson_bootstrap (DESIGN.md SS3).
+    moments_finish: Optional[Callable[[Array], Array]] = None
+
+
+REGISTRY: Dict[str, Estimator] = {}
+
+
+def register(est: Estimator) -> Estimator:
+    REGISTRY[est.name] = est
+    return est
+
+
+def get(name: str) -> Estimator:
+    try:
+        return REGISTRY[name]
+    except KeyError:  # pragma: no cover - defensive
+        raise KeyError(f"unknown estimator {name!r}; have {sorted(REGISTRY)}")
+
+
+# ---------------------------------------------------------------------------
+# Scalar moment estimators
+# ---------------------------------------------------------------------------
+
+def _col0(x: Array) -> Array:
+    return x[:, 0] if x.ndim == 2 else x
+
+
+def _wmean(v: Array, w: Array) -> Array:
+    return jnp.sum(w * v) / jnp.maximum(jnp.sum(w), _EPS)
+
+
+def _avg_apply(aux: Array, w: Array) -> Array:
+    return _wmean(aux, w)[None]
+
+
+def _var_apply(aux: Array, w: Array) -> Array:
+    m = _wmean(aux, w)
+    return _wmean((aux - m) ** 2, w)[None]
+
+
+def _std_apply(aux: Array, w: Array) -> Array:
+    return jnp.sqrt(_var_apply(aux, w))
+
+
+def _mean_finish(M: Array) -> Array:
+    return (M[..., 1:2] / jnp.maximum(M[..., 0:1], _EPS))
+
+
+def _var_finish(M: Array) -> Array:
+    mu = M[..., 1] / jnp.maximum(M[..., 0], _EPS)
+    return (M[..., 2] / jnp.maximum(M[..., 0], _EPS) - mu**2)[..., None]
+
+
+def _std_finish(M: Array) -> Array:
+    return jnp.sqrt(jnp.maximum(_var_finish(M), 0.0))
+
+
+register(Estimator("avg", _col0, _avg_apply, lambda c: 1,
+                   moments_finish=_mean_finish))
+register(Estimator("proportion", _col0, _avg_apply, lambda c: 1,
+                   moments_finish=_mean_finish))
+register(Estimator("var", _col0, _var_apply, lambda c: 1,
+                   moments_finish=_var_finish))
+register(Estimator("std", _col0, _std_apply, lambda c: 1,
+                   moments_finish=_std_finish))
+# SUM(Y) = |D| * AVG(Y); COUNT(pred) = |D| * PROPORTION(pred)  (paper SS2.2.1)
+register(Estimator("sum", _col0, _avg_apply, lambda c: 1,
+                   needs_population_scale=True, moments_finish=_mean_finish))
+register(Estimator("count", _col0, _avg_apply, lambda c: 1,
+                   needs_population_scale=True, moments_finish=_mean_finish))
+
+
+# ---------------------------------------------------------------------------
+# Order statistics: QUANTILE / MEDIAN / MIN / MAX
+# ---------------------------------------------------------------------------
+# Weighted quantile on pre-sorted values: the bootstrap replicate is the value
+# at the first index where the (weight-permuted) cumulative weight reaches
+# q * total_weight.  Sorting happens once in `prepare`; each replicate is a
+# cumsum + searchsorted -- O(n) vector work, vmap-friendly.
+
+def _sorted_prepare(x: Array):
+    v = _col0(x)
+    order = jnp.argsort(v)
+    return v[order], order
+
+
+def _quantile_apply(q: float, aux, w: Array) -> Array:
+    v_sorted, order = aux
+    w_sorted = w[order]
+    cw = jnp.cumsum(w_sorted)
+    total = jnp.maximum(cw[-1], _EPS)
+    # Right-continuous generalized inverse CDF.
+    idx = jnp.searchsorted(cw, q * total, side="left")
+    idx = jnp.clip(idx, 0, v_sorted.shape[0] - 1)
+    return v_sorted[idx][None]
+
+
+def make_quantile(q: float, name: Optional[str] = None) -> Estimator:
+    name = name or f"quantile_{q:g}"
+    est = Estimator(name, _sorted_prepare, partial(_quantile_apply, q),
+                    lambda c: 1)
+    return est
+
+
+register(make_quantile(0.5, "median"))
+# Paper SS4.2: MIN/MAX are approximated by alpha / 1-alpha quantiles so that the
+# bootstrap stays consistent.
+register(make_quantile(0.99, "maxq"))
+register(make_quantile(0.01, "minq"))
+
+
+def _max_apply(aux: Array, w: Array) -> Array:
+    # True sample extremum of the resample: max over rows with weight > 0.
+    # Bootstrap-INconsistent (kept to reproduce the paper's negative cases).
+    return jnp.max(jnp.where(w > 0, aux, -jnp.inf))[None]
+
+
+def _min_apply(aux: Array, w: Array) -> Array:
+    return jnp.min(jnp.where(w > 0, aux, jnp.inf))[None]
+
+
+register(Estimator("max", _col0, _max_apply, lambda c: 1,
+                   bootstrap_consistent=False))
+register(Estimator("min", _col0, _min_apply, lambda c: 1,
+                   bootstrap_consistent=False))
+
+
+# ---------------------------------------------------------------------------
+# M-estimators: LINREG / LOGREG
+# ---------------------------------------------------------------------------
+# x has c columns: features x[:, :-1], target x[:, -1]; an intercept column is
+# prepended.  Output is the coefficient vector (c columns -> c outputs: c-1
+# features + intercept).
+
+_RIDGE = 1e-6
+
+
+def _design(x: Array):
+    if x.ndim == 1:
+        x = x[:, None]
+    feats, y = x[:, :-1], x[:, -1]
+    ones = jnp.ones((x.shape[0], 1), x.dtype)
+    X = jnp.concatenate([ones, feats], axis=1)
+    return X, y
+
+
+def _linreg_apply(aux, w: Array) -> Array:
+    X, y = aux
+    Xw = X * w[:, None]
+    G = X.T @ Xw + _RIDGE * jnp.eye(X.shape[1], dtype=X.dtype)
+    b = Xw.T @ y
+    return jnp.linalg.solve(G, b)
+
+
+register(Estimator("linreg", _design, _linreg_apply, lambda c: max(c, 2)))
+
+
+def _logreg_apply(aux, w: Array, newton_iters: int = 12) -> Array:
+    X, y = aux
+    p_dim = X.shape[1]
+
+    def newton_step(theta, _):
+        logits = X @ theta
+        p = jax.nn.sigmoid(logits)
+        s = jnp.clip(p * (1.0 - p), 1e-6, None) * w
+        G = (X * s[:, None]).T @ X + _RIDGE * jnp.eye(p_dim, dtype=X.dtype)
+        g = (X * w[:, None]).T @ (p - y)
+        theta = theta - jnp.linalg.solve(G, g)
+        return theta, None
+
+    theta0 = jnp.zeros((p_dim,), X.dtype)
+    theta, _ = jax.lax.scan(newton_step, theta0, None, length=newton_iters)
+    return theta
+
+
+register(Estimator("logreg", _design, _logreg_apply, lambda c: max(c, 2)))
+
+
+# ---------------------------------------------------------------------------
+# Convenience: plain (unweighted) evaluation
+# ---------------------------------------------------------------------------
+
+def evaluate(est: Estimator, x: Array, mask: Optional[Array] = None) -> Array:
+    """theta-hat = f(S): weighted apply with unit weights (times mask)."""
+    aux = est.prepare(x)
+    n = x.shape[0]
+    w = jnp.ones((n,), jnp.float32) if mask is None else mask.astype(jnp.float32)
+    return est.apply(aux, w)

@@ -1,0 +1,161 @@
+"""Metric extensions of L2Miss (paper SS5): MaxMiss, LpMiss, OrderMiss, DiffMiss.
+
+Each extension is an error-bound conversion Gamma mapping a user bound in
+metric d' to an equivalent L2 bound eps' with R subset R' (Lemma 9), followed
+by a plain L2Miss call (Algorithm 4):
+
+  MaxMiss  (L-inf, Thm 10):   Gamma(eps) = eps
+  LpMiss   (p > 2):           Gamma(eps) = eps           (||.||_2 >= ||.||_p)
+  LpMiss   (p = 1):           Gamma(eps) = eps / sqrt(m) (||.||_1 <= sqrt(m)||.||_2)
+  OrderMiss (Thm 11/12):      Gamma = min adjacent gap of theta-hat / sqrt(2)
+                              via OrderBound (Alg. 5, O(m log m))
+  DiffMiss (Thm 13):          Gamma(eps) = eps / sqrt(2)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .estimators import Estimator, get as get_estimator
+from .framework import MissTrace
+from .l2miss import MissConfig, run_l2miss
+from .sampling import GroupedData
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# OrderBound (Algorithm 5)
+# ---------------------------------------------------------------------------
+
+def order_bound(theta_hat: Array) -> Array:
+    """eps' = min adjacent gap of sorted(theta) / sqrt(2)   [Thm 12].
+
+    O(m log m); equals min over all pairs of point-to-hyperplane distances
+    rho_ij = |theta_i - theta_j| / sqrt(2) (property-tested vs brute force).
+    """
+    t = jnp.sort(jnp.ravel(theta_hat))
+    gaps = t[1:] - t[:-1]
+    return jnp.min(gaps) / jnp.sqrt(2.0)
+
+
+def order_bound_bruteforce(theta_hat: np.ndarray) -> float:
+    """O(m^2) reference used in tests (the 'naive algorithm' of SS5.3)."""
+    t = np.ravel(np.asarray(theta_hat))
+    m = len(t)
+    best = np.inf
+    for i in range(m):
+        for j in range(i + 1, m):
+            best = min(best, abs(t[i] - t[j]) / np.sqrt(2.0))
+    return float(best)
+
+
+# ---------------------------------------------------------------------------
+# Conversion functions Gamma
+# ---------------------------------------------------------------------------
+
+def gamma_linf(eps: float, m: int) -> float:
+    return eps                       # Thm 10
+
+
+def gamma_lp(eps: float, m: int, p: float) -> float:
+    if p == 1:
+        return eps / float(np.sqrt(m))
+    if p >= 2:
+        return eps
+    raise ValueError("L^p conversion defined for p = 1 or p >= 2")
+
+
+def gamma_diff(eps: float, m: int) -> float:
+    return eps / float(np.sqrt(2.0))  # Thm 13
+
+
+# ---------------------------------------------------------------------------
+# Extension drivers (Algorithm 4)
+# ---------------------------------------------------------------------------
+
+def run_maxmiss(data: GroupedData, estimator, cfg: MissConfig) -> MissTrace:
+    cfg2 = dataclasses.replace(cfg, epsilon=gamma_linf(cfg.epsilon, data.num_groups))
+    return run_l2miss(data, estimator, cfg2)
+
+
+def run_lpmiss(data: GroupedData, estimator, cfg: MissConfig, p: float) -> MissTrace:
+    cfg2 = dataclasses.replace(cfg, epsilon=gamma_lp(cfg.epsilon, data.num_groups, p))
+    return run_l2miss(data, estimator, cfg2)
+
+
+def run_diffmiss(data: GroupedData, estimator, cfg: MissConfig) -> MissTrace:
+    cfg2 = dataclasses.replace(cfg, epsilon=gamma_diff(cfg.epsilon, data.num_groups))
+    return run_l2miss(data, estimator, cfg2)
+
+
+def run_normalmiss(data: GroupedData, estimator, cfg: MissConfig) -> MissTrace:
+    """NormalMiss (paper SS6.2): L2Miss with the CLT Gaussian-replicate
+    ESTIMATE instead of the bootstrap -- B cheap draws, valid exactly where
+    BLK's normality assumptions hold."""
+    cfg2 = dataclasses.replace(cfg, backend="normal")
+    return run_l2miss(data, estimator, cfg2)
+
+
+def run_ordermiss(
+    data: GroupedData,
+    estimator,
+    cfg: MissConfig,
+    *,
+    pilot_n: int = 2000,
+    pilot_repeats: int = 4,
+    seed: Optional[int] = None,
+) -> MissTrace:
+    """OrderMiss (SS5.3): the bound depends on theta-hat, so we first compute a
+    pilot estimate (averaged over a few samples, as the paper suggests), run
+    OrderBound to get eps', then call L2Miss."""
+    est: Estimator = (
+        get_estimator(estimator) if isinstance(estimator, str) else estimator
+    )
+    from . import sampling as S
+    from .estimators import evaluate
+
+    key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+    m = data.num_groups
+    n_vec = jnp.minimum(jnp.full((m,), pilot_n), jnp.asarray(data.sizes))
+    thetas = []
+    for _ in range(pilot_repeats):
+        key, sub = jax.random.split(key)
+        sample, mask = S.stratified_sample(
+            sub, data.values, jnp.asarray(data.offsets), n_vec,
+            S.bucket_cap(pilot_n))
+        th = jax.vmap(lambda xg, mg: est.apply(est.prepare(xg), mg))(sample, mask)
+        thetas.append(np.asarray(th))
+    theta_bar = np.mean(np.stack(thetas), axis=0)
+    scale = data.scale if est.needs_population_scale else np.ones((m,))
+    eps_prime = float(order_bound(jnp.asarray(theta_bar[:, 0] * scale)))
+    cfg2 = dataclasses.replace(cfg, epsilon=max(eps_prime, 1e-12))
+    trace = run_l2miss(data, est, cfg2)
+    trace.info["order_bound_eps"] = eps_prime
+    trace.info["pilot_theta"] = theta_bar
+    return trace
+
+
+# ---------------------------------------------------------------------------
+# Metric evaluation helpers (shared by tests / simulated-confidence harness)
+# ---------------------------------------------------------------------------
+
+def metric_value(name: str, theta_hat: np.ndarray, theta: np.ndarray) -> float:
+    th, t = np.ravel(theta_hat), np.ravel(theta)
+    d = th - t
+    if name == "l2":
+        return float(np.sqrt(np.sum(d**2)))
+    if name == "linf":
+        return float(np.max(np.abs(d)))
+    if name == "l1":
+        return float(np.sum(np.abs(d)))
+    if name == "diff":
+        # max_{i,j} |(th_i - th_j) - (t_i - t_j)|  (Def. 4) = max d - min d
+        return float(np.max(d) - np.min(d))
+    if name == "order":
+        return 0.0 if bool(np.all(np.argsort(th) == np.argsort(t))) else 1.0
+    raise ValueError(f"unknown metric {name!r}")

@@ -1,0 +1,180 @@
+"""Fused on-device L2Miss: the whole MISS loop as one XLA program.
+
+Beyond-paper optimization (DESIGN.md SS7 phase B): the host-loop Algorithm 3
+round-trips device<->host every iteration (sample sizes out, errors in).  On a
+real TPU pod each round-trip costs dispatch latency and loses the collective
+schedule; here the *entire* sample->estimate->fit->predict->test loop runs
+inside ``lax.while_loop`` with fixed-capacity buffers:
+
+  * sample buffer   (m, n_cap)  -- masked to the current n
+  * error profile   (max_iters, m) + (max_iters,) -- row-masked WLS
+  * two-point init rows are drawn inside the loop from the carried PRNG key
+
+A second entry point ``fused_l2miss_batch`` vmaps the loop over a batch of
+independent queries (same shapes, different data/eps) -- the multi-tenant
+AQP-server configuration; per-query early exit becomes predicated compute.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import bootstrap, error_model, sampling
+from .estimators import get as get_estimator
+
+Array = jax.Array
+LOG_FLOOR = -60.0
+
+
+class FusedResult(NamedTuple):
+    n: Array            # (m,) final sizes
+    error: Array        # final estimated error
+    theta: Array        # (m, p) final estimate (scaled)
+    iterations: Array   # iterations executed
+    success: Array      # bool: constraint met
+    failed: Array       # bool: Algorithm-2 unrecoverable failure
+    beta: Array         # (m+1,) final model parameters
+    r2: Array
+    profile_n: Array    # (max_iters, m)
+    profile_e: Array    # (max_iters,)
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "est_name", "B", "n_min", "n_max", "l", "tau", "max_iters", "n_cap",
+        "backend", "metric", "growth_cap",
+    ),
+)
+def fused_l2miss(
+    values: Array,        # (N, c) group-sorted rows
+    offsets: Array,       # (m + 1,)
+    scale: Array,         # (m,)
+    key: Array,
+    epsilon: Array,
+    delta: float,
+    *,
+    est_name: str = "avg",
+    B: int = 500,
+    n_min: int = 100,
+    n_max: int = 200,
+    l: int = 10,
+    tau: float = 1e-3,
+    max_iters: int = 32,
+    n_cap: int = 1 << 16,
+    backend: str = "poisson",
+    metric: str = "l2",
+    growth_cap: float = 8.0,
+) -> FusedResult:
+    est = get_estimator(est_name)
+    m = offsets.shape[0] - 1
+    sizes = (offsets[1:] - offsets[:-1]).astype(jnp.int32)
+    log_eps = jnp.log(epsilon.astype(jnp.float32))
+    # Deterministic balanced two-point design (Eq. 15/16): cyclic shifts give
+    # every group both levels, keeping all slopes identifiable.
+    l_min = min(max(int(round(l * n_max / (n_min + n_max))), 1), l - 1)
+
+    def sample_estimate(k, n_vec):
+        ks, kb = jax.random.split(k)
+        sample, mask = sampling.stratified_sample(
+            ks, values, offsets, n_vec, n_cap)
+        e, theta = bootstrap.estimate_error(
+            est, sample, mask, scale, kb, delta, B=B,
+            backend=backend, metric=metric)
+        return e, theta
+
+    p_dim = est.out_dim(values.shape[1])
+
+    class Carry(NamedTuple):
+        key: Array
+        k: Array
+        n_cur: Array
+        prof_n: Array
+        prof_loge: Array
+        e: Array
+        theta: Array
+        done: Array
+        failed: Array
+        beta: Array
+        r2: Array
+
+    def cond(c: Carry):
+        return (~c.done) & (~c.failed) & (c.k < max_iters)
+
+    def body(c: Carry) -> Carry:
+        key, k_est = jax.random.split(c.key)
+        # ---- generate this iteration's n ----
+        phase = (c.k + jnp.arange(m)) % l
+        n_init = jnp.where(phase < l_min, n_min, n_max).astype(jnp.int32)
+
+        def predicted():
+            row_valid = (jnp.arange(max_iters) < c.k).astype(jnp.float32)
+            n_hat, fit = error_model.fit_and_predict(
+                c.prof_n, c.prof_loge, row_valid, log_eps, tau)
+            n_next = jnp.ceil(n_hat).astype(jnp.int32)
+            # Local-model correction from the last iterate (see l2miss).
+            s = jnp.maximum(jnp.sum(fit.beta[1:]), 1e-3)
+            ratio = jnp.maximum(c.e / epsilon, 1.0)
+            local = jnp.ceil(
+                c.n_cur.astype(jnp.float32) * ratio ** (1.0 / s)).astype(jnp.int32)
+            n_next = jnp.maximum(n_next, local)
+            # Trust region + growth guard (see l2miss.MissConfig.growth_cap).
+            cap = (c.n_cur.astype(jnp.float32) * growth_cap).astype(jnp.int32) + 1
+            n_next = jnp.minimum(n_next, cap)
+            n_next = jnp.maximum(n_next, c.n_cur + 1)
+            failed = fit.status == error_model.DIAG_FAILURE
+            return n_next, fit.beta, fit.r2, failed
+
+        init_phase = c.k < l
+        n_pred, beta, r2, failed = predicted()
+        n_vec = jnp.where(init_phase, n_init, n_pred)
+        n_vec = jnp.clip(n_vec, 1, jnp.minimum(sizes, n_cap))
+        failed = (~init_phase) & failed
+        # ---- sample + bootstrap estimate ----
+        e, theta = sample_estimate(k_est, n_vec)
+        loge = jnp.maximum(jnp.log(jnp.maximum(e, 1e-30)), LOG_FLOOR)
+        prof_n = c.prof_n.at[c.k].set(n_vec.astype(jnp.float32))
+        prof_loge = c.prof_loge.at[c.k].set(loge)
+        done = e <= epsilon
+        return Carry(key, c.k + 1, n_vec, prof_n, prof_loge,
+                     e, theta, done, failed,
+                     jnp.where(init_phase, c.beta, beta),
+                     jnp.where(init_phase, c.r2, r2))
+
+    c0 = Carry(
+        key=key,
+        k=jnp.zeros((), jnp.int32),
+        n_cur=jnp.full((m,), n_min, jnp.int32),
+        prof_n=jnp.ones((max_iters, m), jnp.float32),
+        prof_loge=jnp.zeros((max_iters,), jnp.float32),
+        e=jnp.asarray(jnp.inf, jnp.float32),
+        theta=jnp.zeros((m, p_dim), jnp.float32),
+        done=jnp.asarray(False),
+        failed=jnp.asarray(False),
+        beta=jnp.zeros((m + 1,), jnp.float32),
+        r2=jnp.asarray(0.0, jnp.float32),
+    )
+    c = jax.lax.while_loop(cond, body, c0)
+    return FusedResult(
+        n=c.n_cur, error=c.e, theta=c.theta, iterations=c.k,
+        success=c.done, failed=c.failed, beta=c.beta, r2=c.r2,
+        profile_n=c.prof_n,
+        profile_e=jnp.exp(c.prof_loge) * (jnp.arange(max_iters) < c.k),
+    )
+
+
+def fused_l2miss_batch(values_batch, offsets, scale_batch, keys, epsilons,
+                       delta, **static_kwargs):
+    """vmap the fused loop over a batch of same-shape queries.
+
+    ``values_batch (q, N, c)``, ``scale_batch (q, m)``, ``keys (q, 2)``,
+    ``epsilons (q,)``.  Offsets are shared (same grouping layout).  This is
+    the multi-query AQP-server configuration: one XLA program answers q
+    queries; per-query convergence is handled by the while_loop predicate.
+    """
+    fn = partial(fused_l2miss, delta=delta, **static_kwargs)
+    return jax.vmap(lambda v, s, k, e: fn(v, offsets, s, k, e))(
+        values_batch, scale_batch, keys, epsilons)

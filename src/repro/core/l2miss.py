@@ -1,0 +1,225 @@
+"""L2Miss (paper Algorithm 3): the concrete SSO algorithm for the L2 metric.
+
+Host loop = Algorithm 1 (core/framework.py); all numeric subroutines are
+jitted fixed-shape device programs, cached per (m, n_cap, B) bucket so a full
+MISS run compiles only O(log final_size) distinct programs:
+
+  SAMPLE    stratified_sample     (core/sampling.py)
+  ESTIMATE  Poisson bootstrap     (core/bootstrap.py, kernels/poisson_bootstrap)
+  PREDICT   WLS fit + Algorithm-2 diagnostic + Eq.-13 closed form
+            (core/error_model.py)
+
+Implementation hardening vs. the paper (recorded in DESIGN.md SS9):
+  * growth guard: when the constraint is unmet, n^(k+1) >= n^(k) + 1
+    elementwise (Lemma 5 gives this under ideal fits; we enforce it so
+    termination never hinges on fit quality);
+  * exact fallback: if a group's predicted size reaches its population we
+    clamp, and if every group is clamped we return the exact answer;
+  * error floor: log e is clamped at LOG_FLOOR for degenerate zero errors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bootstrap, error_model, sampling
+from .estimators import Estimator, get as get_estimator
+from .framework import MissFailure, MissTrace, run_miss
+
+LOG_FLOOR = -60.0
+
+
+@dataclasses.dataclass
+class MissConfig:
+    """Parameters of Algorithm 3 (defaults follow paper SS6)."""
+
+    epsilon: float                      # error bound (absolute, post-Gamma)
+    delta: float = 0.05                 # error probability
+    B: int = 500                        # bootstrap resamples
+    n_min: int = 100                    # initialization interval I_n
+    n_max: int = 200
+    l: Optional[int] = None             # init length; default 5*(m+1) (SS6.3)
+    tau: float = 1e-3                   # Algorithm-2 failure threshold
+    max_iters: int = 64
+    budget_rows: Optional[int] = None   # resource cap (failure type 1, SS4.3.4)
+    backend: str = "poisson"            # bootstrap backend
+    metric: str = "l2"
+    growth_guard: bool = True
+    # Trust region: cap the per-iteration growth of any group's size at
+    # growth_cap x.  A noisy init fit can overshoot Eq. 13 by orders of
+    # magnitude; stepping there directly both wastes sample budget AND
+    # accepts at the overshoot (e <= eps holds there).  Intermediate steps
+    # add high-leverage profile points, so the refit converges to the true
+    # optimum -- Lemma 5 monotonicity and termination are unaffected.
+    growth_cap: float = 8.0
+    seed: int = 0
+    use_kernel: bool = False            # route bootstrap through Pallas kernel
+    # Non-uniform linear sampling cost (paper SS8): minimize sum_i c_i n_i.
+    cost_weights: Optional[Tuple[float, ...]] = None
+
+
+@lru_cache(maxsize=256)
+def _sample_estimate_fn(est_name: str, m: int, n_cap: int, c: int, B: int,
+                        backend: str, metric: str, use_kernel: bool):
+    """Jit-compiled SAMPLE+ESTIMATE for one shape bucket."""
+    est = get_estimator(est_name)
+
+    if use_kernel and est_name in ("avg", "proportion", "sum", "count", "var"):
+        from ..kernels.poisson_bootstrap import ops as pb_ops
+
+        def fn(key, values, offsets, n_vec, scale, delta):
+            ks, kb = jax.random.split(key)
+            sample, mask = sampling.stratified_sample(
+                ks, values, offsets, n_vec, n_cap)
+            return pb_ops.estimate_error_moments(
+                est_name, sample, mask, scale, kb, delta, B=B, metric=metric)
+    else:
+        def fn(key, values, offsets, n_vec, scale, delta):
+            ks, kb = jax.random.split(key)
+            sample, mask = sampling.stratified_sample(
+                ks, values, offsets, n_vec, n_cap)
+            return bootstrap.estimate_error(
+                est, sample, mask, scale, kb, delta, B=B,
+                backend=backend, metric=metric)
+
+    return jax.jit(fn)
+
+
+class _L2MissSubroutines:
+    """Algorithm 3's concrete INITIALIZE/SAMPLE/ESTIMATE/PREDICT."""
+
+    def __init__(self, data: sampling.GroupedData, est: Estimator,
+                 cfg: MissConfig):
+        self.data = data
+        self.est = est
+        self.cfg = cfg
+        self.m = data.num_groups
+        self.sizes = data.sizes.astype(np.int64)
+        self.key = jax.random.PRNGKey(cfg.seed)
+        self.scale = (
+            np.asarray(data.scale, np.float32)
+            if est.needs_population_scale
+            else np.ones((self.m,), np.float32)
+        )
+        self.last_fit: Optional[error_model.ErrorModelFit] = None
+        self._offsets_dev = jnp.asarray(data.offsets)
+        self._scale_dev = jnp.asarray(self.scale)
+        self._prev_n: Optional[np.ndarray] = None
+        self._all_clamped = False
+
+    # -- INITIALIZE (SS4.4) -------------------------------------------------
+    def initialize(self) -> np.ndarray:
+        cfg = self.cfg
+        # Default l: paper suggests >= m+1 for the regression but "not too
+        # large"; 5(m+1) (their SS6.3 choice) uncapped starves the prediction
+        # phase for m ~ 9, so cap at 16 while keeping l >= m+2.
+        l = cfg.l if cfg.l is not None else max(
+            self.m + 2, min(5 * (self.m + 1), 16))
+        self.key, sub = jax.random.split(self.key)
+        rows = sampling.two_point_init_sizes(sub, self.m, l, cfg.n_min, cfg.n_max)
+        return np.minimum(rows, self.sizes[None, :])
+
+    # -- SAMPLE + ESTIMATE (jitted together per bucket) ----------------------
+    def sample(self, n_vec: np.ndarray, it: int):
+        return np.minimum(np.asarray(n_vec, np.int64), self.sizes)
+
+    def estimate(self, n_vec: np.ndarray, it: int) -> Tuple[float, np.ndarray]:
+        cfg = self.cfg
+        n_cap = sampling.bucket_cap(int(n_vec.max()))
+        fn = _sample_estimate_fn(
+            self.est.name, self.m, n_cap, self.data.num_columns, cfg.B,
+            cfg.backend, cfg.metric, cfg.use_kernel)
+        self.key, sub = jax.random.split(self.key)
+        e, theta = fn(sub, self.data.values, self._offsets_dev,
+                      jnp.asarray(n_vec), self._scale_dev, cfg.delta)
+        return float(e), np.asarray(theta)
+
+    # -- PREDICT (SS4.3): WLS fit -> diagnose -> Eq. 13 ----------------------
+    def predict(self, profile_n: np.ndarray, profile_e: np.ndarray, it: int):
+        cfg = self.cfg
+        loge = np.log(np.maximum(profile_e, np.exp(LOG_FLOOR)))
+        valid = np.ones((len(loge),), np.float32)
+        cw = (jnp.asarray(cfg.cost_weights, jnp.float32)
+              if cfg.cost_weights is not None else None)
+        n_hat, fit = error_model.fit_and_predict(
+            jnp.asarray(profile_n, jnp.float32), jnp.asarray(loge, jnp.float32),
+            jnp.asarray(valid), jnp.log(jnp.float32(cfg.epsilon)), cfg.tau,
+            cost_weights=cw)
+        self.last_fit = fit
+        if int(fit.status) == error_model.DIAG_FAILURE:
+            raise MissFailure("sum(beta) <= tau: error will not shrink with n")
+        alloc = np.maximum(np.asarray(n_hat, np.float64), 1.0)
+        prev = self._prev_n if self._prev_n is not None else profile_n.max(axis=0)
+        # Local-model correction: if Eq.-13 total lands at/below the
+        # proven-direction step from the last iterate (intercept misfit near
+        # convergence), upscale the WHOLE allocation uniformly -- this keeps
+        # the (possibly cost-weighted) allocation shape and can only reduce
+        # H (feasible-safe), instead of crawling by +1.
+        slopes = np.asarray(fit.beta)[1:]
+        s = max(float(slopes.sum()), 1e-3)
+        ratio = float(profile_e[-1]) / cfg.epsilon
+        cost = (np.asarray(cfg.cost_weights, np.float64)
+                if cfg.cost_weights is not None else np.ones(self.m))
+        if ratio > 1.0:
+            floor_alloc = profile_n[-1] * ratio ** (1.0 / s)
+            c_hat = float((alloc * cost).sum())
+            c_floor = float((floor_alloc * cost).sum())
+            if c_hat < c_floor:
+                alloc = alloc * (c_floor / c_hat)
+        # Trust region on the TOTAL (cost-weighted) size, scaling the whole
+        # allocation uniformly so the predicted shape survives clipping.
+        c_alloc = float((alloc * cost).sum())
+        c_cap = float((prev * cfg.growth_cap * cost).sum()) + 1.0
+        if c_alloc > c_cap:
+            alloc = alloc * (c_cap / c_alloc)
+        n_next = np.ceil(alloc).astype(np.int64)
+        if cfg.growth_guard:
+            n_next = np.maximum(n_next, prev + 1)
+        clamped = n_next >= self.sizes
+        n_next = np.minimum(n_next, self.sizes)
+        self._all_clamped = bool(clamped.all())
+        self._prev_n = n_next
+        info = {
+            "beta": np.asarray(fit.beta),
+            "r2": float(fit.r2),
+            "diag_status": int(fit.status),
+            "all_clamped": self._all_clamped,
+        }
+        return n_next, info
+
+
+def exact_answer(data: sampling.GroupedData, est: Estimator) -> np.ndarray:
+    """Ground-truth theta on the full dataset (used by tests/benchmarks)."""
+    from .estimators import evaluate
+
+    outs = []
+    vals = np.asarray(data.values)
+    for i in range(data.num_groups):
+        seg = jnp.asarray(vals[data.offsets[i]:data.offsets[i + 1]])
+        th = np.asarray(evaluate(est, seg))
+        if est.needs_population_scale:
+            th = th * data.scale[i]
+        outs.append(th)
+    return np.stack(outs)
+
+
+def run_l2miss(
+    data: sampling.GroupedData,
+    estimator: "Estimator | str",
+    cfg: MissConfig,
+) -> MissTrace:
+    """Run Algorithm 3 end to end on a grouped dataset."""
+    est = get_estimator(estimator) if isinstance(estimator, str) else estimator
+    subs = _L2MissSubroutines(data, est, cfg)
+    trace = run_miss(
+        subs, cfg.epsilon, max_iters=cfg.max_iters, budget_rows=cfg.budget_rows
+    )
+    if subs.last_fit is not None:
+        trace.info.setdefault("beta", np.asarray(subs.last_fit.beta))
+        trace.info.setdefault("r2", float(subs.last_fit.r2))
+    return trace

@@ -1,0 +1,189 @@
+"""Sampling substrate: grouped datasets, stratified sampling, two-point init.
+
+The paper avoids full scans with (i) gap sampling and (ii) an inverted index
+on the group-by attributes (SS4.1).  The TPU-idiomatic analogue (DESIGN.md SS3):
+the dataset lives *sorted by group* with an offset table -- the dense inverted
+index -- and per-group sampling draws uniform indices into each group's
+contiguous extent.  Only the sampled rows are ever touched.
+
+All device-side sampling is fixed-shape: groups are padded to a common cap and
+masked, so the same jitted program serves every MISS iteration in a size
+bucket (see l2miss.py bucketing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Grouped dataset = sorted-by-group values + offset table (inverted index)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GroupedData:
+    """A dataset pre-partitioned by the GROUP BY attribute.
+
+    values:  (N, c) rows, sorted so each group occupies a contiguous extent.
+    offsets: (m + 1,) int64 group boundaries into ``values``.
+    scale:   (m,) per-group population scale |D|_i used by SUM/COUNT
+             (paper SS2.2.1 transformation); defaults to group sizes.
+    """
+
+    values: Array
+    offsets: np.ndarray
+    scale: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        self.values = jnp.asarray(self.values)
+        if self.values.ndim == 1:
+            self.values = self.values[:, None]
+        self.offsets = np.asarray(self.offsets, dtype=np.int64)
+        if self.scale is None:
+            self.scale = self.sizes.astype(np.float64)
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+    @property
+    def num_columns(self) -> int:
+        return self.values.shape[1]
+
+    @staticmethod
+    def from_columns(group_ids, values) -> "GroupedData":
+        """Build from unsorted (group_id, value) columns -- the 'index build'."""
+        group_ids = np.asarray(group_ids)
+        values = np.asarray(values)
+        if values.ndim == 1:
+            values = values[:, None]
+        order = np.argsort(group_ids, kind="stable")
+        gid_sorted = group_ids[order]
+        m = int(gid_sorted[-1]) + 1 if len(gid_sorted) else 0
+        offsets = np.searchsorted(gid_sorted, np.arange(m + 1))
+        return GroupedData(jnp.asarray(values[order]), offsets)
+
+    @staticmethod
+    def from_group_arrays(groups: Sequence[np.ndarray]) -> "GroupedData":
+        arrs = [np.asarray(g) for g in groups]
+        arrs = [a[:, None] if a.ndim == 1 else a for a in arrs]
+        offsets = np.concatenate([[0], np.cumsum([len(a) for a in arrs])])
+        return GroupedData(jnp.asarray(np.concatenate(arrs, axis=0)), offsets)
+
+
+# ---------------------------------------------------------------------------
+# Stratified uniform sampling (device-side, fixed shape, masked)
+# ---------------------------------------------------------------------------
+
+def stratified_sample(
+    key: Array,
+    values: Array,
+    offsets: Array,
+    n_vec: Array,
+    n_cap: int,
+) -> Tuple[Array, Array]:
+    """Draw ``n_vec[i]`` uniform rows from each group's extent.
+
+    Returns ``(sample (m, n_cap, c), mask (m, n_cap))``.  Draws are with
+    replacement -- statistically identical to iid draws from each group's
+    empirical distribution, which is what the bootstrap theory assumes, and
+    gather-free shape-wise (a single fancy-index per group row block).
+    """
+    m = offsets.shape[0] - 1
+    starts = offsets[:-1]
+    sizes = offsets[1:] - offsets[:-1]
+    u = jax.random.uniform(key, (m, n_cap))
+    idx = starts[:, None] + jnp.minimum(
+        (u * sizes[:, None]).astype(jnp.int32), (sizes[:, None] - 1).astype(jnp.int32)
+    )
+    sample = values[idx]  # (m, n_cap, c)
+    mask = (jnp.arange(n_cap)[None, :] < n_vec[:, None]).astype(jnp.float32)
+    return sample, mask
+
+
+def stratified_sample_host(
+    rng: np.random.Generator, data: GroupedData, n_vec: np.ndarray, n_cap: int
+) -> Tuple[Array, Array]:
+    """Host-side variant (numpy RNG) used by the reference/benchmark path."""
+    m = data.num_groups
+    idx = np.zeros((m, n_cap), dtype=np.int64)
+    mask = np.zeros((m, n_cap), dtype=np.float32)
+    sizes = data.sizes
+    for i in range(m):
+        k = int(min(n_vec[i], n_cap))
+        idx[i, :k] = data.offsets[i] + rng.integers(0, sizes[i], size=k)
+        mask[i, :k] = 1.0
+    return jnp.asarray(np.asarray(data.values)[idx]), jnp.asarray(mask)
+
+
+# ---------------------------------------------------------------------------
+# Two-point initialization (paper SS4.4, Eq. 17)
+# ---------------------------------------------------------------------------
+
+def two_point_init_sizes(
+    key, m: int, l: int, n_min: int, n_max: int
+) -> np.ndarray:
+    """Initial l x m sample-size matrix from the Bhatia-Davis optimal design.
+
+    Paper Eq. 15/16: of the l probes per group, l_max/l_min = n_min/n_max,
+    i.e. a fraction n_max/(n_min+n_max) of entries sit at n_min and the rest
+    at n_max -- this minimizes (E N)^2 / D N and hence the WLS MSE (SS4.4).
+    We allocate the counts deterministically (clamped so both design points
+    appear at least once -- a constant column makes the slope unidentifiable)
+    and shuffle each column independently.
+    """
+    l_min = int(round(l * n_max / (n_min + n_max)))
+    l_min = min(max(l_min, 1), l - 1)
+    col = np.concatenate([
+        np.full((l_min,), n_min, np.int64),
+        np.full((l - l_min,), n_max, np.int64),
+    ])
+    sizes = np.tile(col[:, None], (1, m))
+    rng = np.random.default_rng(np.asarray(jax.random.key_data(key)).ravel()[-1])
+    for j in range(m):
+        rng.shuffle(sizes[:, j])
+    return sizes
+
+
+# ---------------------------------------------------------------------------
+# Gap sampling (paper SS4.1, [Erlandson 2014]) -- host-side reference
+# ---------------------------------------------------------------------------
+
+def gap_sample_indices(rng: np.random.Generator, n_rows: int, p: float) -> np.ndarray:
+    """Bernoulli(p) row subset without touching every row.
+
+    Gaps between successive kept rows are Geometric(p); we jump by the gap
+    instead of flipping a coin per row.  Kept for paper fidelity and used by
+    the CPU AQP path; the TPU path uses stratified_sample (DESIGN.md SS3).
+    """
+    if p <= 0.0:
+        return np.empty((0,), dtype=np.int64)
+    if p >= 1.0:
+        return np.arange(n_rows, dtype=np.int64)
+    # E[#kept] = n*p; oversample the geometric draws and trim.
+    est = int(n_rows * p + 10 * np.sqrt(n_rows * p + 1)) + 16
+    gaps = rng.geometric(p, size=est)
+    pos = np.cumsum(gaps) - 1
+    return pos[pos < n_rows].astype(np.int64)
+
+
+def bucket_cap(n: int, *, base: int = 256) -> int:
+    """Round ``n`` up to the next power-of-two bucket >= base.
+
+    MISS resizes the sample every iteration; bucketing the padded cap keeps
+    the number of distinct jit signatures logarithmic in the final size.
+    """
+    cap = base
+    while cap < n:
+        cap *= 2
+    return cap

@@ -1,0 +1,4 @@
+from .synthetic import DISTRIBUTIONS, make_grouped, make_single_group
+from .tpch import make_lineitem
+
+__all__ = ["DISTRIBUTIONS", "make_grouped", "make_single_group", "make_lineitem"]

@@ -1,0 +1,88 @@
+"""Deterministic, stateless token pipeline.
+
+``batch_for_step(step, ...)`` derives every batch purely from the step
+counter via the counter PRNG (kernels/prng.py) -- the property the elastic
+runbook relies on: a restarted job at step k reproduces batch k exactly, on
+any mesh, with no pipeline state to checkpoint (DESIGN.md SS5).
+
+The synthetic corpus is a Zipf-ish unigram stream with a short Markov
+flavour (next-token biased toward f(prev)) so that losses are learnable in
+examples/tests while still exercising the full vocab embedding.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import prng
+from ..models.config import ModelConfig
+
+
+@partial(jax.jit, static_argnames=("global_batch", "seq_len", "vocab",
+                                   "extra"))
+def batch_for_step(
+    step,
+    *,
+    global_batch: int,
+    seq_len: int,
+    vocab: int,
+    seed: int = 0,
+    extra: Optional[str] = None,      # None | "frames" | "image_embeds"
+    extra_len: int = 0,
+    extra_dim: int = 0,
+) -> Dict[str, jax.Array]:
+    B, S = global_batch, seq_len
+    rows = (jnp.asarray(step, jnp.uint32) * jnp.uint32(B)
+            + jnp.arange(B, dtype=jnp.uint32))[:, None]
+    cols = jnp.arange(S + 1, dtype=jnp.uint32)[None, :]
+    u = prng.uniform01(prng.hash3(jnp.uint32(seed), rows, cols))
+    # Zipf-ish unigram: p(k) ~ 1/(k+1); inverse CDF of that is exp-ish.
+    toks = jnp.minimum((jnp.exp(u * jnp.log(float(vocab))) - 1.0),
+                       vocab - 1).astype(jnp.int32)
+    # Markov flavour: every 3rd position repeats a hash of the previous.
+    prev = jnp.roll(toks, 1, axis=1)
+    mix = (prng.hash3(jnp.uint32(seed + 1), rows, cols) % 3) == 0
+    toks = jnp.where(mix, (prev * 31 + 7) % vocab, toks)
+    batch = {"tokens": toks[:, :S], "labels": toks[:, 1:S + 1]}
+    if extra == "frames":
+        f = prng.uniform01(prng.hash3(
+            jnp.uint32(seed + 2),
+            rows * jnp.uint32(extra_len) + jnp.arange(
+                extra_len, dtype=jnp.uint32)[None, :],
+            jnp.zeros((1, 1), jnp.uint32)))
+        f = (f[..., None] * jnp.ones((extra_dim,), jnp.float32) - 0.5)
+        batch["frames"] = f.astype(jnp.bfloat16)
+    elif extra == "image_embeds":
+        f = prng.uniform01(prng.hash3(
+            jnp.uint32(seed + 3),
+            rows * jnp.uint32(extra_len) + jnp.arange(
+                extra_len, dtype=jnp.uint32)[None, :],
+            jnp.zeros((1, 1), jnp.uint32)))
+        f = (f[..., None] * jnp.ones((extra_dim,), jnp.float32) - 0.5)
+        batch["image_embeds"] = f.astype(jnp.bfloat16)
+    return batch
+
+
+def batch_kwargs_for(cfg: ModelConfig, seq_len: int) -> Dict:
+    if cfg.is_encdec:
+        return dict(extra="frames", extra_len=seq_len, extra_dim=cfg.d_model)
+    if cfg.family == "vision":
+        return dict(extra="image_embeds", extra_len=cfg.n_frontend_tokens,
+                    extra_dim=cfg.d_model)
+    return dict(extra=None)
+
+
+def eval_domains(vocab: int, *, n_domains: int = 3, n_per: int = 512,
+                 seq_len: int = 64, seed: int = 100):
+    """Held-out per-domain eval sets for integration/miss_eval."""
+    import numpy as np
+
+    out = []
+    for d in range(n_domains):
+        b = batch_for_step(jnp.uint32(10_000 + d), global_batch=n_per,
+                           seq_len=seq_len, vocab=vocab, seed=seed + d)
+        out.append(np.asarray(b["tokens"]))
+    return out

@@ -1,0 +1,148 @@
+"""MISS-certified approximate evaluation -- the paper's technique as a
+first-class training-loop feature.
+
+Problem: a production eval suite spans m domains x millions of held-out
+sequences; full eval costs a significant slice of the training budget.  The
+per-domain mean loss IS an m-group AVG query (paper Listing 1), so MISS
+applies verbatim: find the minimal number of eval sequences per domain such
+that the joint L2 error of the per-domain loss vector is <= eps with
+confidence 1-delta.
+
+The evaluator is lazy and incremental: per MISS iteration it runs the model
+ONLY on newly requested examples (per-example losses are deterministic, so
+previously evaluated examples are cached), then bootstrap-estimates the
+error from the evaluated pool.  The savings vs full eval is exactly the
+paper's total-sample-size story, with model-forward cost standing in for
+row-scan cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import bootstrap, error_model
+from ..core.framework import MissFailure, MissTrace, run_miss
+from ..core.sampling import two_point_init_sizes
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class MissEvalConfig:
+    epsilon: float                  # L2 bound on the per-domain loss vector
+    delta: float = 0.05
+    B: int = 200
+    n_min: int = 32
+    n_max: int = 64
+    l: int = 6
+    tau: float = 1e-3
+    max_iters: int = 24
+    growth_cap: float = 8.0
+    eval_batch: int = 32            # model-forward microbatch
+    seed: int = 0
+
+
+class MissEvaluator:
+    """certify() returns a MissTrace whose theta is the certified per-domain
+    loss vector and whose total_sampled counts model forwards saved."""
+
+    def __init__(self, per_example_loss: Callable[[Array], Array],
+                 domains: Sequence[np.ndarray], cfg: MissEvalConfig):
+        """per_example_loss(batch_tokens (b, S)) -> (b,) losses.
+        domains: list of (N_g, S) token arrays (held-out sets)."""
+        self.loss_fn = per_example_loss
+        self.domains = [np.asarray(d) for d in domains]
+        self.cfg = cfg
+        self.m = len(domains)
+        rngs = np.random.default_rng(cfg.seed)
+        # Random evaluation order per domain; prefix = evaluated pool.
+        self._order = [rngs.permutation(len(d)) for d in self.domains]
+        self._losses: List[np.ndarray] = [
+            np.zeros((0,), np.float32) for _ in range(self.m)]
+        self.model_forwards = 0
+        self.key = jax.random.PRNGKey(cfg.seed)
+        self._prev_n = None
+
+    # -- incremental evaluation --------------------------------------------
+    def _ensure(self, g: int, n: int):
+        have = len(self._losses[g])
+        n = min(n, len(self.domains[g]))
+        if have >= n:
+            return
+        idx = self._order[g][have:n]
+        new = []
+        bs = self.cfg.eval_batch
+        for i in range(0, len(idx), bs):
+            chunk = self.domains[g][idx[i:i + bs]]
+            new.append(np.asarray(self.loss_fn(jnp.asarray(chunk))))
+            self.model_forwards += len(chunk)
+        self._losses[g] = np.concatenate([self._losses[g]] + new)
+
+    # -- MISS subroutines ----------------------------------------------------
+    def initialize(self):
+        self.key, sub = jax.random.split(self.key)
+        rows = two_point_init_sizes(sub, self.m, self.cfg.l, self.cfg.n_min,
+                                    self.cfg.n_max)
+        caps = np.asarray([len(d) for d in self.domains])
+        return np.minimum(rows, caps[None, :])
+
+    def sample(self, n_vec, it):
+        for g in range(self.m):
+            self._ensure(g, int(n_vec[g]))
+        return np.minimum(np.asarray(n_vec, np.int64),
+                          [len(d) for d in self.domains])
+
+    def estimate(self, n_vec, it):
+        cfg = self.cfg
+        n_cap = int(max(n_vec))
+        sample = np.zeros((self.m, n_cap, 1), np.float32)
+        mask = np.zeros((self.m, n_cap), np.float32)
+        for g in range(self.m):
+            k = int(n_vec[g])
+            sample[g, :k, 0] = self._losses[g][:k]
+            mask[g, :k] = 1.0
+        from ..core.estimators import get as get_est
+
+        self.key, sub = jax.random.split(self.key)
+        e, theta = bootstrap.estimate_error(
+            get_est("avg"), jnp.asarray(sample), jnp.asarray(mask),
+            jnp.ones((self.m,), jnp.float32), sub, cfg.delta, B=cfg.B)
+        return float(e), np.asarray(theta)
+
+    def predict(self, profile_n, profile_e, it):
+        cfg = self.cfg
+        loge = np.log(np.maximum(profile_e, 1e-30))
+        n_hat, fit = error_model.fit_and_predict(
+            jnp.asarray(profile_n, jnp.float32),
+            jnp.asarray(loge, jnp.float32),
+            jnp.ones((len(loge),), jnp.float32),
+            jnp.log(jnp.float32(cfg.epsilon)), cfg.tau)
+        if int(fit.status) == error_model.DIAG_FAILURE:
+            raise MissFailure("eval loss error does not shrink with n")
+        n_next = np.maximum(np.asarray(jnp.ceil(n_hat), np.int64), 1)
+        prev = (self._prev_n if self._prev_n is not None
+                else profile_n.max(axis=0).astype(np.int64))
+        slopes = np.asarray(fit.beta)[1:]
+        s = max(float(slopes.sum()), 1e-3)
+        ratio = float(profile_e[-1]) / cfg.epsilon
+        if ratio > 1.0:
+            n_next = np.maximum(n_next, np.ceil(
+                profile_n[-1] * ratio ** (1.0 / s)).astype(np.int64))
+        n_next = np.minimum(n_next, (prev * cfg.growth_cap).astype(np.int64) + 1)
+        n_next = np.maximum(n_next, prev + 1)
+        caps = np.asarray([len(d) for d in self.domains])
+        n_next = np.minimum(n_next, caps)
+        self._prev_n = n_next
+        return n_next, {"beta": np.asarray(fit.beta), "r2": float(fit.r2)}
+
+    def certify(self) -> MissTrace:
+        trace = run_miss(self, self.cfg.epsilon,
+                         max_iters=self.cfg.max_iters)
+        trace.info["model_forwards"] = self.model_forwards
+        trace.info["full_eval_forwards"] = int(
+            sum(len(d) for d in self.domains))
+        return trace

@@ -1,0 +1,127 @@
+"""MISS-certified MoE router load estimation.
+
+Expert-parallel rebalancing (capacity factors, expert replication) needs
+per-expert load fractions over the token stream.  Exact counting costs a
+full pass; the load vector is a single-group VECTOR-valued PROPORTION query
+-- each bootstrap replicate reweights the sampled tokens' one-hot expert
+choices -- so MISS finds the minimal token sample certifying
+||load_hat - load||_2 <= eps at 1-delta.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import bootstrap as bs
+from ..core.estimators import Estimator
+from ..core import error_model
+from ..core.framework import MissFailure, run_miss
+from ..core.sampling import two_point_init_sizes
+
+
+def _colmean_estimator(E: int) -> Estimator:
+    """Vector estimator: per-column weighted mean of (n, E) indicators."""
+
+    def prepare(x):
+        return x                                   # (n, E)
+
+    def apply(aux, w):
+        tot = jnp.maximum(jnp.sum(w), 1e-9)
+        return (w @ aux) / tot                     # (E,)
+
+    return Estimator("colmean", prepare, apply, lambda c: E)
+
+
+@dataclasses.dataclass
+class RouterLoadResult:
+    load: np.ndarray          # (E,) certified load fractions
+    n_tokens: int             # tokens routed to certify
+    iterations: int
+    error: float
+    success: bool
+
+
+def estimate_router_load(
+    route_fn: Callable[[np.ndarray], np.ndarray],
+    token_source: Callable[[int], np.ndarray],
+    num_experts: int,
+    *,
+    epsilon: float = 0.01,
+    delta: float = 0.05,
+    B: int = 200,
+    n_min: int = 256,
+    n_max: int = 512,
+    max_iters: int = 16,
+    seed: int = 0,
+) -> RouterLoadResult:
+    """route_fn(tokens (n, S)) -> (n*S*top_k,) expert indices (flattened);
+    token_source(n) -> (n, S) fresh token batch."""
+    est = _colmean_estimator(num_experts)
+    key = jax.random.PRNGKey(seed)
+    state = {"onehots": np.zeros((0, num_experts), np.float32), "tokens": 0}
+
+    class Subs:
+        def initialize(self):
+            nonlocal key
+            key, sub = jax.random.split(key)
+            return two_point_init_sizes(sub, 1, 4, n_min, n_max)
+
+        def sample(self, n_vec, it):
+            need = int(n_vec[0]) - len(state["onehots"])
+            if need > 0:
+                toks = token_source(need)
+                idx = np.asarray(route_fn(toks)).reshape(-1)
+                oh = np.zeros((len(idx), num_experts), np.float32)
+                oh[np.arange(len(idx)), idx] = 1.0
+                # aggregate per token-batch row into one routing sample each
+                oh = oh.reshape(need, -1, num_experts).mean(axis=1)
+                state["onehots"] = np.concatenate([state["onehots"], oh])
+                state["tokens"] += need
+            return n_vec
+
+        def estimate(self, n_vec, it):
+            nonlocal key
+            n = int(n_vec[0])
+            x = jnp.asarray(state["onehots"][:n][None])        # (1, n, E)
+            mask = jnp.ones((1, n), jnp.float32)
+            key, sub = jax.random.split(key)
+            e, theta = bs.estimate_error(
+                est, x, mask, jnp.ones((1,), jnp.float32), sub, delta, B=B)
+            return float(e), np.asarray(theta)
+
+        _prev = None
+
+        def predict(self, profile_n, profile_e, it):
+            loge = np.log(np.maximum(profile_e, 1e-30))
+            n_hat, fit = error_model.fit_and_predict(
+                jnp.asarray(profile_n, jnp.float32),
+                jnp.asarray(loge, jnp.float32),
+                jnp.ones((len(loge),), jnp.float32),
+                jnp.log(jnp.float32(epsilon)), 1e-3)
+            if int(fit.status) == error_model.DIAG_FAILURE:
+                raise MissFailure("router load error not shrinking")
+            prev = self._prev if self._prev is not None else \
+                profile_n.max(axis=0).astype(np.int64)
+            n_next = np.maximum(np.asarray(jnp.ceil(n_hat), np.int64), 1)
+            s = max(float(np.asarray(fit.beta)[1:].sum()), 1e-3)
+            ratio = float(profile_e[-1]) / epsilon
+            if ratio > 1:
+                n_next = np.maximum(n_next, np.ceil(
+                    profile_n[-1] * ratio ** (1 / s)).astype(np.int64))
+            n_next = np.minimum(n_next, prev * 8 + 1)
+            n_next = np.maximum(n_next, prev + 1)
+            self._prev = n_next
+            return n_next, {"r2": float(fit.r2)}
+
+    trace = run_miss(Subs(), epsilon, max_iters=max_iters)
+    return RouterLoadResult(
+        load=trace.theta[0] if trace.theta is not None else None,
+        n_tokens=state["tokens"],
+        iterations=trace.iterations,
+        error=trace.error,
+        success=trace.success,
+    )

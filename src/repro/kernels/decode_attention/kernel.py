@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: flash-decoding single-token GQA attention.
+
+The serving hot spot for ``decode_32k`` / ``long_500k`` shapes: one new query
+token attends over a KV cache of S entries.  The op is purely memory-bound
+(arithmetic intensity ~ 1 FLOP/byte of KV), so the kernel's job is to stream
+K and V through VMEM exactly once with an online-softmax carry -- never
+materializing the (H, S) score matrix in HBM.
+
+Layout: q (Hkv, G, d) -- G = query heads per KV head (GQA); k/v (Hkv, S, d).
+Grid = (Hkv, S/tk); the S axis is innermost so the per-(kv-head) carry
+(m, l, acc) persists in VMEM scratch across KV chunks.
+
+Carry update per chunk (standard online softmax, f32):
+    s     = q . k_chunk^T * scale            (G, tk)
+    m'    = max(m, rowmax(s))
+    alpha = exp(m - m')
+    l'    = alpha * l + rowsum(exp(s - m'))
+    acc'  = alpha * acc + exp(s - m') . v_chunk
+Final (at the last S step): out = acc' / l'.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, tk: int, kv_len: int, scale: float):
+    s_idx = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                  # (G, d)
+    k = k_ref[0]                                  # (tk, d)
+    v = v_ref[0]                                  # (tk, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (G, tk)
+    # Mask KV positions beyond the true cache length (S padded to tk mult).
+    pos = s_idx * tk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < kv_len, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (G, 128) row-replicated
+    m_cur = jnp.max(s, axis=1, keepdims=True)      # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+    alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])  # (G, 1)
+    p = jnp.exp(s - m_new[:, :1])                  # (G, tk)
+    l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (G, d)
+    m_ref[...] = m_new
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+    acc_ref[...] = acc_new
+
+    @pl.when(s_idx == n_chunks - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kv_len", "tk", "scale", "interpret"))
+def decode_attention_call(
+    q: jax.Array,    # (Hkv, G, d)
+    k: jax.Array,    # (Hkv, S_pad, d)
+    v: jax.Array,    # (Hkv, S_pad, d)
+    *,
+    kv_len: int,
+    tk: int = 512,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    hkv, G, d = q.shape
+    s_pad = k.shape[1]
+    assert s_pad % tk == 0
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    grid = (hkv, s_pad // tk)
+    return pl.pallas_call(
+        functools.partial(_kernel, tk=tk, kv_len=kv_len, scale=scale),
+        grid_spec=pl.GridSpec(
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, G, d), lambda h, s: (h, 0, 0)),
+                pl.BlockSpec((1, tk, d), lambda h, s: (h, s, 0)),
+                pl.BlockSpec((1, tk, d), lambda h, s: (h, s, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, G, d), lambda h, s: (h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 128), jnp.float32),  # running max (replicated)
+                pltpu.VMEM((G, 128), jnp.float32),  # running denominator
+                pltpu.VMEM((G, d), jnp.float32),    # output accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((hkv, G, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

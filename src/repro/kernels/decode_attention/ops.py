@@ -1,0 +1,51 @@
+"""jit'd wrapper: batched GQA decode attention over a KV cache.
+
+Public entry ``decode_attention(q, k, v, kv_len)`` with conventional LM
+layouts: q (B, Hq, d), k/v (B, S, Hkv, d).  Internally regrouped to the
+kernel's (Hkv, G, d) / (Hkv, S, d) layout and vmapped over batch.  Falls
+back to the jnp oracle for head_dim that violate TPU lane alignment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as K
+from .ref import decode_attention_ref
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("kv_len", "tk", "interpret"))
+def decode_attention(
+    q: jax.Array,      # (B, Hq, d) single new token per sequence
+    k: jax.Array,      # (B, S, Hkv, d) KV cache keys
+    v: jax.Array,      # (B, S, Hkv, d)
+    kv_len=None,       # int or (B,) lengths; None -> full S
+    *,
+    tk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Bsz, Hq, d = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    if kv_len is None:
+        kv_len = S
+    kv_len = int(kv_len)
+    s_pad = _round_up(S, tk)
+    pad = s_pad - S
+
+    qg = q.reshape(Bsz, Hkv, G, d)
+    kk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    vv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+
+    fn = functools.partial(
+        K.decode_attention_call, kv_len=kv_len, tk=tk, interpret=interpret)
+    out = jax.vmap(fn)(qg, kk, vv)          # (B, Hkv, G, d)
+    return out.reshape(Bsz, Hq, d)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for decode_attention: dense single-query GQA softmax."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, *, kv_len: int, scale: float | None = None):
+    """q (Hkv, G, d); k/v (Hkv, S_pad, d) -> (Hkv, G, d)."""
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("hgd,hsd->hgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(s.shape[-1])
+    s = jnp.where(pos[None, None, :] < kv_len, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hgs,hsd->hgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from .ops import bootstrap_moments, estimate_error_moments
+
+__all__ = ["bootstrap_moments", "estimate_error_moments"]

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: fused Poisson-bootstrap moment accumulation.
+
+Computes, for B bootstrap replicates over an n-row sample,
+
+    M[p, b] = sum_j feats[p, j] * W[j, b],     W[j, b] ~ Poisson(1) iid
+
+where feats rows are the masked moment features [m, m*x, m*x^2, m*x^3,
+m*x^4, 0, 0, 0].  The weight matrix W (n x B -- up to 500x the sample size)
+is NEVER materialized in HBM: each (tn x tb) tile is generated inside the
+kernel from the counter-based PRNG (kernels/prng.py) and immediately
+contracted against the resident feats tile on the MXU.
+
+TPU adaptation story (DESIGN.md SS3): the paper's bootstrap is a gather-heavy
+CPU loop (B resamples x n index lookups).  Gathers bypass the MXU and thrash
+HBM on TPU; this kernel converts the resampling into a streaming matmul with
+O(B) FLOPs per byte of sample data -- compute-bound instead of gather-bound.
+
+Memory plan per grid step (defaults tb=256, tn=512):
+    feats tile  (8, tn)   VMEM   16 KiB
+    W tile      (tn, tb)  VMEM  512 KiB (generated in-register, never in HBM)
+    acc tile    (8, tb)   VMEM    8 KiB (revisited across the n-grid axis)
+Grid = (B/tb, n/tn); the n axis is innermost so the accumulator tile stays
+resident while the kernel streams the sample exactly once per B-tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .. import prng
+
+P = 8  # feature rows (moments 0..4 + padding to the f32 sublane tile)
+
+
+def _kernel(seed_ref, feats_ref, out_ref, *, tb: int, tn: int):
+    b_idx = pl.program_id(0)
+    n_idx = pl.program_id(1)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # Generate the (tn x tb) Poisson(1) weight tile from the counter PRNG.
+    rows = n_idx * tn + jax.lax.broadcasted_iota(jnp.uint32, (tn, tb), 0)
+    cols = b_idx * tb + jax.lax.broadcasted_iota(jnp.uint32, (tn, tb), 1)
+    w = prng.poisson1_weights_at(seed_ref[0], rows, cols)
+    # (P, tn) @ (tn, tb) -> (P, tb) on the MXU; accumulate in f32.
+    out_ref[...] += jnp.dot(
+        feats_ref[...], w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("B_pad", "tb", "tn", "interpret"))
+def poisson_bootstrap_moments(
+    feats: jax.Array,     # (P, n_pad) masked moment features, f32
+    seed: jax.Array,      # (1,) uint32 counter seed
+    B_pad: int | None = None,
+    *,
+    tb: int = 256,
+    tn: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (P, B_pad): row p, col b = sum_j feats[p, j] * W[j, b]."""
+    if B_pad is None:
+        B_pad = tb
+    n_pad = feats.shape[1]
+    if feats.shape[0] != P:
+        raise ValueError(f"feats must have {P} rows, got {feats.shape}")
+    if n_pad % tn or B_pad % tb:
+        raise ValueError(f"n_pad {n_pad} % tn {tn} or B_pad {B_pad} % tb {tb}")
+    grid = (B_pad // tb, n_pad // tn)
+    return pl.pallas_call(
+        functools.partial(_kernel, tb=tb, tn=tn),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((P, tn), lambda b, n, seed: (0, n))],
+            out_specs=pl.BlockSpec((P, tb), lambda b, n, seed: (0, b)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((P, B_pad), jnp.float32),
+        interpret=interpret,
+    )(seed, feats)

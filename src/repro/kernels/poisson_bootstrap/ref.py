@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the poisson_bootstrap kernel.
+
+Materializes the full (n_pad x B_pad) Poisson weight matrix from the SAME
+counter-based PRNG stream as the kernel (kernels/prng.py) and contracts it
+with a dense matmul.  The kernel must match this to f32 accumulation noise.
+Also provides the from-first-principles moment reference used to validate
+the finishers (mean/var) against direct weighted statistics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import prng
+
+
+def weight_matrix(seed: jax.Array, n_pad: int, B_pad: int) -> jax.Array:
+    """(n_pad, B_pad) Poisson(1) weights: entry (j, b) = hash3(seed, j, b)."""
+    rows = jax.lax.broadcasted_iota(jnp.uint32, (n_pad, B_pad), 0)
+    cols = jax.lax.broadcasted_iota(jnp.uint32, (n_pad, B_pad), 1)
+    return prng.poisson1_weights_at(seed[0], rows, cols)
+
+
+def poisson_bootstrap_moments_ref(feats: jax.Array, seed: jax.Array,
+                                  B_pad: int) -> jax.Array:
+    """(P, B_pad) = feats @ W -- the oracle for kernel.py."""
+    W = weight_matrix(seed, feats.shape[1], B_pad)
+    return feats @ W
+
+
+def moments_to_stats(M: jax.Array) -> dict:
+    """Finisher reference: M rows are [sum w, sum wx, sum wx^2, wx^3, wx^4]."""
+    cnt = jnp.maximum(M[0], 1e-12)
+    mean = M[1] / cnt
+    var = M[2] / cnt - mean**2
+    m3 = M[3] / cnt - 3 * mean * M[2] / cnt + 2 * mean**3
+    m4 = (M[4] / cnt - 4 * mean * M[3] / cnt + 6 * mean**2 * M[2] / cnt
+          - 3 * mean**4)
+    return {"count": M[0], "mean": mean, "var": var, "m3": m3, "m4": m4}

@@ -1,0 +1,3 @@
+from .ops import segment_aggregate
+
+__all__ = ["segment_aggregate"]

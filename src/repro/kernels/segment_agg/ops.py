@@ -1,0 +1,52 @@
+"""jit'd wrapper for the segment_agg kernel: GROUP BY <g> AGG(x) in one pass."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as K
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("m", "tn", "interpret"))
+def segment_aggregate(
+    gid: jax.Array,    # (n,) int32 group ids in [0, m)
+    x: jax.Array,      # (n,) f32 values
+    mask: jax.Array,   # (n,) validity
+    m: int,
+    *,
+    tn: int = 1024,
+    interpret: bool | None = None,
+):
+    """Per-group aggregates dict: count/sum/sumsq/sum3/sum4/min/max (m,).
+
+    m <= m_pad = 128 groups per pass; the AQP engine tiles larger group
+    counts across multiple passes.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if m > 128:
+        raise ValueError("segment_aggregate handles <= 128 groups per pass")
+    n = gid.shape[0]
+    n_pad = _round_up(max(n, tn), tn)
+    pad = n_pad - n
+    xf = jnp.pad(x.astype(jnp.float32), (0, pad))
+    mf = jnp.pad(mask.astype(jnp.float32), (0, pad))
+    gf = jnp.pad(gid.astype(jnp.int32), (0, pad))
+    x2 = xf * xf
+    feats = jnp.stack(
+        [mf, mf * xf, mf * x2, mf * x2 * xf, mf * x2 * x2,
+         jnp.zeros_like(xf), jnp.zeros_like(xf), jnp.zeros_like(xf)], axis=0)
+    mom, mn, mx = K.segment_agg_call(
+        feats, gf[None, :], xf[None, :], mf[None, :],
+        m_pad=128, tn=tn, interpret=interpret)
+    return {
+        "count": mom[0, :m], "sum": mom[1, :m], "sumsq": mom[2, :m],
+        "sum3": mom[3, :m], "sum4": mom[4, :m],
+        "min": mn[0, :m], "max": mx[0, :m],
+    }

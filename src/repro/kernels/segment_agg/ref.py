@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the segment_agg kernel: jax.ops.segment_* semantics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_aggregate_ref(gid, x, mask, m):
+    """Returns dict of per-group count/sum/sumsq/sum3/sum4/min/max (m,)."""
+    gid = gid.astype(jnp.int32)
+    w = mask.astype(jnp.float32)
+    out = {}
+    powers = {"count": w, "sum": w * x, "sumsq": w * x**2,
+              "sum3": w * x**3, "sum4": w * x**4}
+    for name, v in powers.items():
+        out[name] = jax.ops.segment_sum(v, gid, num_segments=m)
+    big = jnp.float32(3.0e38)
+    out["min"] = jax.ops.segment_min(jnp.where(w > 0, x, big), gid,
+                                     num_segments=m)
+    out["max"] = jax.ops.segment_max(jnp.where(w > 0, x, -big), gid,
+                                     num_segments=m)
+    return out

@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry run: lower + compile every (arch x shape) cell on the
+production mesh and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k [--multi-pod] [--out results/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Success criterion (assignment): .lower().compile() succeeds for the 16x16
+mesh AND the 2x16x16 multi-pod mesh for every applicable cell; the JSON
+written per cell feeds EXPERIMENTS.md SSDry-run and SSRoofline.
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES, get_config, get_shape
+from ..configs.registry import shape_applicable
+from ..models import model as M
+from ..models.flops import count_active_analytic, count_params_analytic, model_flops
+from ..train.optimizer import AdamWConfig, adamw_init
+from ..train.train_step import TrainConfig, build_train_step
+from . import hlo_analysis, sharding, specs
+from .mesh import make_production_mesh
+
+# Baseline per-arch training knobs (hill-climbed variants live in
+# benchmarks/perf_iterations.py; these are the SSDry-run baselines).
+TRAIN_OVERRIDES = {
+    "command-r-plus-104b": dict(microbatches=8, remat="full",
+                                moment_dtype="float32"),
+    "jamba-1.5-large-398b": dict(microbatches=8, remat="full",
+                                 moment_dtype="bfloat16"),
+    "llama-3.2-vision-90b": dict(microbatches=8, remat="full",
+                                 moment_dtype="float32"),
+    "_default": dict(microbatches=4, remat="dots_no_batch",
+                     moment_dtype="float32"),
+}
+
+
+def _train_cfg(arch: str) -> TrainConfig:
+    ov = TRAIN_OVERRIDES.get(arch, TRAIN_OVERRIDES["_default"])
+    return TrainConfig(
+        optimizer=AdamWConfig(moment_dtype=ov["moment_dtype"]),
+        remat=ov["remat"], microbatches=ov["microbatches"])
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, tcfg=None,
+               analysis: bool = False, constraints: bool = True):
+    """Returns the lowered computation for one cell on `mesh`.
+
+    analysis=True lowers with unrolled layers + microbatches=1 + no remat so
+    cost_analysis counts every layer exactly (scan bodies are costed once by
+    XLA) -- the SSRoofline methodology.  The production (scan) artifact is
+    what SSDry-run memory numbers come from.
+    """
+    cfg = get_config(arch)
+    shp = get_shape(shape_name)
+    kind, abstract = specs.input_specs(arch, shape_name)
+    tcfg = tcfg or _train_cfg(arch)
+    from ..models import shardctx
+    rules = (shardctx.make_rules(mesh, batch_shardable=shp.global_batch > 1,
+                                 n_heads=cfg.n_heads)
+             if constraints else None)
+    unroll = False
+    if analysis:
+        import dataclasses as _dc
+        tcfg = _dc.replace(tcfg, unroll=True, microbatches=1, remat=None)
+        unroll = True
+
+    # Abstract params (+opt) without allocating.
+    params_abs = jax.eval_shape(partial(M.init_model, cfg),
+                                jax.random.PRNGKey(0))
+    params_sh = sharding.param_shardings(params_abs, mesh)
+
+    if kind == "train":
+        opt_abs = jax.eval_shape(partial(adamw_init, tcfg.optimizer),
+                                 params_abs)
+        opt_sh = sharding.opt_shardings(opt_abs, params_sh, mesh)
+        batch_sh = sharding.batch_shardings(
+            abstract["batch"], mesh,
+            shard_batch=shp.global_batch > 1)
+        _, step = build_train_step(cfg, tcfg)
+        fn = jax.jit(step,
+                     in_shardings=(params_sh, opt_sh, batch_sh),
+                     out_shardings=(params_sh, opt_sh, None))
+        with mesh, shardctx.use_rules(rules):
+            lowered = fn.lower(params_abs, opt_abs, abstract["batch"])
+        return lowered
+
+    if kind == "prefill":
+        batch_sh = sharding.batch_shardings(abstract["batch"], mesh)
+
+        def prefill_step(params, batch):
+            logits, caches, memory = M.prefill(cfg, params, batch,
+                                               unroll=unroll)
+            return logits, caches
+
+        # Explicit cache out-shardings: without them GSPMD left prefill
+        # caches only 16-way sharded (17 GB/device for command-r+;
+        # SSPerf iteration log).
+        out_abs = jax.eval_shape(prefill_step, params_abs, abstract["batch"])
+        caches_out_sh = sharding.cache_shardings(
+            out_abs[1], mesh, batch=shp.global_batch)
+        fn = jax.jit(prefill_step, in_shardings=(params_sh, batch_sh),
+                     out_shardings=(None, caches_out_sh))
+        with mesh, shardctx.use_rules(rules):
+            lowered = fn.lower(params_abs, abstract["batch"])
+        return lowered
+
+    # decode
+    caches_abs = abstract["caches"]
+    caches_sh = sharding.cache_shardings(caches_abs, mesh,
+                                         batch=shp.global_batch)
+    token_sh = sharding.batch_shardings(
+        {"t": abstract["token"]}, mesh,
+        shard_batch=shp.global_batch > 1)["t"]
+
+    def serve_step(params, token, caches):
+        return M.decode_step(cfg, params, token, caches, unroll=unroll)
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(params_sh, token_sh, caches_sh),
+                 out_shardings=(None, caches_sh))
+    with mesh, shardctx.use_rules(rules):
+        lowered = fn.lower(params_abs, abstract["token"], caches_abs)
+    return lowered
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = "results/dryrun", tcfg=None, tag: str = "",
+             analysis: bool = False, constraints: bool = True):
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = f"{arch}__{shape_name}__{mesh_name}{tag}"
+    skip = shape_applicable(arch, shape_name)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, cell + ".json")
+    if skip:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": skip}
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"[dryrun] {cell}: SKIP ({skip})")
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        lowered = lower_cell(arch, shape_name, mesh, tcfg=tcfg,
+                             analysis=analysis, constraints=constraints)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        coll = hlo_analysis.collective_bytes(hlo)
+        cfg = get_config(arch)
+        shp = get_shape(shape_name)
+        chips = 512 if multi_pod else 256
+        flops = float(cost.get("flops", 0.0))
+        bytes_ = float(cost.get("bytes accessed", 0.0))
+        terms = hlo_analysis.roofline_terms(
+            hlo_flops=flops, hlo_bytes=bytes_,
+            coll_bytes=float(coll["total"]), chips=chips)
+        mf = model_flops(cfg, seq_len=shp.seq_len,
+                         global_batch=shp.global_batch, kind=shp.kind)
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "ok",
+            "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+            "memory_analysis": {
+                k: getattr(mem, k) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            },
+            "cost_analysis": {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float))},
+            "collective_bytes": coll,
+            "roofline": terms,
+            "model_flops": mf,
+            "model_flops_ratio": (mf / (flops * chips)) if flops else None,
+            "params_total": count_params_analytic(cfg),
+            "params_active": count_active_analytic(cfg),
+        }
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"[dryrun] {cell}: OK lower={t_lower:.0f}s "
+              f"compile={t_compile:.0f}s flops/part={flops:.3e} "
+              f"coll={coll['total']:.3e}B dominant={terms['dominant']}")
+        return rec
+    except Exception as e:  # noqa: BLE001 - recorded per cell
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"[dryrun] {cell}: ERROR {type(e).__name__}: {e}")
+        return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--analysis", action="store_true",
+                    help="unrolled exact-cost lowering (SSRoofline)")
+    ap.add_argument("--no-constraints", action="store_true",
+                    help="disable activation sharding anchors (baseline)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                meshes = (False, True) if args.both_meshes else (
+                    args.multi_pod,)
+                for mp in meshes:
+                    cells.append((arch, shape, mp))
+    else:
+        meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    tag = "__analysis" if args.analysis else ""
+    for arch, shape, mp in cells:
+        mesh_name = "2x16x16" if mp else "16x16"
+        path = os.path.join(args.out,
+                            f"{arch}__{shape}__{mesh_name}{tag}.json")
+        if args.skip_done and os.path.exists(path):
+            try:
+                rec = json.load(open(path))
+                if rec.get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] {arch}__{shape}__{mesh_name}: cached")
+                    continue
+            except Exception:
+                pass
+        run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                 tag=tag, analysis=args.analysis,
+                 constraints=not args.no_constraints)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Compiled-HLO analysis: collective byte counts + roofline terms.
+
+cost_analysis() gives FLOPs and HBM bytes; collective traffic is parsed
+from the compiled HLO text by summing result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(result bytes ~ wire bytes for the ICI per-link roofline; all-reduce counts
+once even though ring implementations move ~2x -- noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ag = bf16[2,1024,512]{2,1,0} all-gather(%x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes summed over the module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if kind.endswith("-done"):
+            continue
+        out[kind] += _shape_bytes(dtype, dims)
+        count[kind] += 1
+    total = sum(out.values())
+    return {"total": total, "counts": count, **out}
+
+
+# TPU v5e hardware constants (per chip) -- the roofline denominators.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW_PER_LINK = 50e9            # B/s (per direction per link)
+ICI_LINKS = 4                     # 2D torus: 4 links/chip on v5e
+
+
+def roofline_terms(
+    *, hlo_flops: float, hlo_bytes: float, coll_bytes: float, chips: int,
+) -> Dict[str, float]:
+    """The three roofline times in seconds (whole step, whole mesh).
+
+    cost_analysis flops/bytes on the CPU backend are PER PARTITION (the
+    module is compiled post-SPMD-partitioning), so per-chip values are the
+    reported numbers; collective bytes likewise come from the partitioned
+    module.
+    """
+    t_compute = hlo_flops / PEAK_FLOPS_BF16
+    t_memory = hlo_bytes / HBM_BW
+    t_coll = coll_bytes / (ICI_BW_PER_LINK * ICI_LINKS)
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1])[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+    }

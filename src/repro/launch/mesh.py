@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state -- dryrun.py must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) ("data", "model"); two pods: (2, 16, 16)
+    ("pod", "data", "model").  256 chips per pod (TPU v5e pod slice)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Smoke-test mesh over whatever devices exist (usually 1 CPU)."""
+    n = len(jax.devices())
+    mp = model_parallel if n % model_parallel == 0 else 1
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes: ("pod","data") on multi-pod, ("data",)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

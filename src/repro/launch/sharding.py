@@ -1,0 +1,199 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs.
+
+Strategy (DESIGN.md SS5): FSDP x TP --
+  * every weight is sharded on BOTH the data axis (outer/reduction dim,
+    ZeRO-3 style) and the model axis (TP dim: heads / ffn / experts / vocab);
+  * optimizer moments mirror their parameter's spec;
+  * activations: batch over (pod, data), TP dims over model (GSPMD infers
+    the rest);
+  * MoE expert stacks shard the expert axis over model (expert parallelism);
+  * KV caches shard batch over data-parallel axes and sequence over model
+    (flash-decoding style partial attention, GSPMD inserts the reduce);
+    long_500k (batch=1) shards sequence over ALL axes.
+
+Rules are name-pattern based over the flattened param tree -- the same
+mechanism scales to new architectures without touching this file as long as
+layer naming conventions hold.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .mesh import dp_axes
+
+PyTree = Any
+
+# (regex over path, spec WITHOUT the stacked-repeat axis).  First match wins.
+# "D" is replaced by the data axis name, "M" by the model axis name.
+_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # --- embeddings ---
+    (r"embed$", ("M", "D")),
+    (r"unembed$", ("D", "M")),
+    # --- attention ---
+    (r"(wq|wk|wv)$", ("D", "M")),
+    (r"mixer/wo$|xattn/wo$", ("M", "D")),
+    (r"(bq|bk|bv)$", ("M",)),
+    (r"(q_norm|k_norm)$", (None,)),
+    # --- MoE (leading E axis -> expert parallelism over model) ---
+    (r"router$", ("D", None)),
+    (r"we_(gate|up)$", ("M", "D", None)),
+    (r"we_down$", ("M", None, "D")),
+    (r"shared/(wi_gate|wi_up)$", ("D", "M")),
+    (r"shared/wo$", ("M", "D")),
+    # --- dense MLP ---
+    (r"(wi_gate|wi_up)$", ("D", "M")),
+    (r"ff/wo$", ("M", "D")),
+    # --- Mamba ---
+    (r"in_proj$", ("D", "M")),
+    (r"out_proj$", ("M", "D")),
+    (r"conv_w$", (None, "M")),
+    (r"bc_proj$", ("M", None)),
+    (r"dt_proj$", ("M", None)),
+    (r"(dt_bias|A_log|D)$", (None,)),
+    # --- RWKV ---
+    (r"tmix/(wr|wk|wv|wg)$", ("D", "M")),
+    (r"tmix/wo$", ("M", "D")),
+    (r"wA$", ("D", None)),
+    (r"wB$", (None, "D")),
+    (r"(mu|w0|u|ln_out)$", None),          # small: replicate
+    (r"cmix/wk$", ("D", "M")),
+    (r"cmix/wv$", ("M", "D")),
+    # --- norms, gates, scalars ---
+    (r"(ln1|ln2|ln_x|xgate|final_norm|enc_norm)$", None),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pk in path:
+        if hasattr(pk, "key"):
+            parts.append(str(pk.key))
+        elif hasattr(pk, "idx"):
+            parts.append(str(pk.idx))
+        else:
+            parts.append(str(pk))
+    return "/".join(parts)
+
+
+def _spec_for(path_s: str, ndim: int, mesh) -> P:
+    d_ax = "data"
+    m_ax = "model"
+
+    def conv(axes):
+        out = []
+        for a in axes:
+            out.append({"D": d_ax, "M": m_ax, None: None}[a])
+        return out
+
+    for pat, axes in _RULES:
+        if re.search(pat, path_s):
+            if axes is None:
+                return P()
+            axes = conv(axes)
+            # Prepend None for stacked-repeat leading axes.
+            while len(axes) < ndim:
+                axes = [None] + axes
+            if len(axes) != ndim:
+                axes = axes[-ndim:]
+            return P(*axes)
+    return P()                                # default: replicate
+
+
+def _shardable(spec: P, shape, mesh) -> P:
+    """Drop axis assignments that do not divide the dimension."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        total = int(np.prod([sizes[a] for a in axs]))
+        out.append(ax if dim % total == 0 else None)
+    return P(*out)
+
+
+def param_shardings(params: PyTree, mesh) -> PyTree:
+    """NamedSharding pytree for a params (or grads/moments) pytree."""
+    def leaf(path, x):
+        spec = _spec_for(_path_str(path), np.ndim(x), mesh)
+        spec = _shardable(spec, np.shape(x), mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def opt_shardings(opt_state: PyTree, params_sh: PyTree, mesh) -> PyTree:
+    """Moments mirror their parameter; step scalar replicated."""
+    rep = NamedSharding(mesh, P())
+    out = {"step": rep}
+    for key in ("mu", "nu", "master"):
+        if key in opt_state:
+            out[key] = params_sh
+    return out
+
+
+def batch_shardings(batch_like: PyTree, mesh, *, shard_batch: bool = True
+                    ) -> PyTree:
+    """tokens/labels (B, S): batch over DP axes; stub embeds likewise."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def leaf(x):
+        nd = np.ndim(x)
+        b = np.shape(x)[0]
+        dp_total = int(np.prod([dict(zip(mesh.axis_names,
+                                         mesh.devices.shape))[a]
+                                for a in (dp if isinstance(dp, tuple) else
+                                          (dp,))]))
+        if not shard_batch or b % dp_total:
+            # batch=1 (long_500k): shard the sequence axis over data instead.
+            if nd >= 2 and np.shape(x)[1] % dp_total == 0:
+                return NamedSharding(mesh, P(None, dp))
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(dp, *([None] * (nd - 1))))
+
+    return jax.tree.map(leaf, batch_like)
+
+
+def cache_shardings(caches: PyTree, mesh, *, batch: int) -> PyTree:
+    """Decode caches: KV (nr, B, S, Hkv, dh) -> B over DP, S over model;
+    batch=1 -> S over all axes.  States (nr, B, H, ...) -> H over model."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_total = int(np.prod([sizes[a] for a in (dp if isinstance(dp, tuple)
+                                               else (dp,))]))
+    all_axes = tuple(mesh.axis_names)
+
+    def leaf(x):
+        shape = np.shape(x)
+        nd = len(shape)
+        if nd == 5:                       # (nr, B, S, Hkv, dh) KV cache
+            if batch % dp_total == 0:
+                spec = P(None, dp, "model", None, None)
+            else:
+                spec = P(None, None, all_axes, None, None)
+            return NamedSharding(mesh, _shardable(spec, shape, mesh))
+        if nd == 4:                       # (nr, B, H, K) / conv tails etc.
+            spec = (P(None, dp, "model", None) if batch % dp_total == 0
+                    else P(None, None, "model", None))
+            return NamedSharding(mesh, _shardable(spec, shape, mesh))
+        if nd >= 2:
+            spec = (P(None, dp) if batch % dp_total == 0 else P())
+            return NamedSharding(mesh, _shardable(spec, shape, mesh))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(leaf, caches)
+
+
+def logits_sharding(mesh, *, shard_batch: bool = True):
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    return NamedSharding(mesh, P(dp if shard_batch else None, None, "model"))

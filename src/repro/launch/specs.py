@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+No device allocation: shapes + dtypes only (the shannon/kernels pattern).
+``input_specs(arch, shape)`` returns the abstract batch / decode inputs the
+lowered step function consumes; ``step_builder`` returns the function to
+lower for that shape kind.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, get_shape
+from ..configs.registry import shape_applicable
+from ..models import model as M
+from ..models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _abstract(tree):
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def batch_specs(cfg: ModelConfig, *, seq_len: int, global_batch: int,
+                with_labels: bool = True) -> Dict[str, Any]:
+    B, S = global_batch, seq_len
+    batch: Dict[str, Any] = {"tokens": SDS((B, S), jnp.int32)}
+    if with_labels:
+        batch["labels"] = SDS((B, S), jnp.int32)
+    if cfg.is_encdec:
+        # Audio stub: precomputed frame embeddings at d_model width.
+        batch["frames"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vision":
+        batch["image_embeds"] = SDS(
+            (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, *, global_batch: int, kv_len: int):
+    """Abstract decode caches with the KV buffer sized to kv_len."""
+    caches = jax.eval_shape(
+        lambda: M.init_caches(cfg, global_batch, S_max=kv_len,
+                              mem_len=(kv_len if cfg.is_encdec
+                                       else cfg.n_frontend_tokens or None),
+                              length=kv_len - 1))
+    return caches
+
+
+def decode_token_spec(cfg: ModelConfig, global_batch: int):
+    return SDS((global_batch, 1), jnp.int32)
+
+
+def input_specs(arch: str, shape_name: str) -> Tuple[str, Dict[str, Any]]:
+    """Returns (kind, abstract inputs dict) for the cell.
+
+    kind "train":   {"batch": ...}                 lowers train_step
+    kind "prefill": {"batch": ...}                 lowers prefill_step
+    kind "decode":  {"token": ..., "caches": ...}  lowers serve_step
+    """
+    cfg = get_config(arch)
+    shp = get_shape(shape_name)
+    skip = shape_applicable(arch, shape_name)
+    if skip:
+        raise ValueError(f"{arch} x {shape_name} skipped: {skip}")
+    if shp.kind == "train":
+        return "train", {"batch": batch_specs(
+            cfg, seq_len=shp.seq_len, global_batch=shp.global_batch)}
+    if shp.kind == "prefill":
+        return "prefill", {"batch": batch_specs(
+            cfg, seq_len=shp.seq_len, global_batch=shp.global_batch,
+            with_labels=False)}
+    # decode: one new token against a kv_len cache.
+    return "decode", {
+        "token": decode_token_spec(cfg, shp.global_batch),
+        "caches": cache_specs(cfg, global_batch=shp.global_batch,
+                              kv_len=shp.seq_len),
+    }

@@ -1,0 +1,4 @@
+from .model import Model, init_model
+from .config import ModelConfig, MoEConfig, SSMConfig
+
+__all__ = ["Model", "ModelConfig", "MoEConfig", "SSMConfig", "init_model"]

@@ -1,0 +1,171 @@
+"""GQA attention (full / sliding-window / cross) in train, prefill and
+decode modes, with preallocated KV caches for serving.
+
+Decode routes through the flash-decoding Pallas kernel on TPU and through
+its jnp oracle elsewhere (same math; see kernels/decode_attention).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .config import ModelConfig
+from .shardctx import constrain
+
+Array = jax.Array
+
+
+class KVCache(NamedTuple):
+    k: Array          # (B, S_max, Hkv, dh)
+    v: Array          # (B, S_max, Hkv, dh)
+    length: Array     # (B,) int32 per-sequence fill (continuous batching)
+
+
+def init_attn(key, cfg: ModelConfig, dtype, *, cross: bool = False):
+    dh, H, Hkv, d = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": nn.dense_init(ks[0], d, H * dh, dtype),
+        "wk": nn.dense_init(ks[1], d, Hkv * dh, dtype),
+        "wv": nn.dense_init(ks[2], d, Hkv * dh, dtype),
+        "wo": nn.dense_init(ks[3], H * dh, d, dtype, scale=(H * dh) ** -0.5),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * dh,), dtype)
+        p["bk"] = jnp.zeros((Hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((Hkv * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = nn.rms_norm_init(dh)
+        p["k_norm"] = nn.rms_norm_init(dh)
+    return p
+
+
+def _project_q(p, cfg: ModelConfig, x, positions, *, use_rope=True):
+    B, S, _ = x.shape
+    dh, H = cfg.head_dim, cfg.n_heads
+    q = constrain(nn.dense(p["wq"], x, p.get("bq")).reshape(B, S, H, dh),
+                  "heads")
+    if cfg.qk_norm:
+        q = nn.rms_norm(p["q_norm"], q, cfg.rms_eps)
+    if use_rope:
+        cos, sin = nn.rope_angles(positions, dh, cfg.rope_theta)
+        q = nn.apply_rope(q, cos, sin)
+    return q
+
+
+def _project_kv(p, cfg: ModelConfig, x, positions, *, use_rope=True):
+    B, S, _ = x.shape
+    dh, Hkv = cfg.head_dim, cfg.n_kv_heads
+    k = constrain(nn.dense(p["wk"], x, p.get("bk")).reshape(B, S, Hkv, dh),
+                  "heads")
+    v = constrain(nn.dense(p["wv"], x, p.get("bv")).reshape(B, S, Hkv, dh),
+                  "heads")
+    if cfg.qk_norm:
+        k = nn.rms_norm(p["k_norm"], k, cfg.rms_eps)
+    if use_rope:
+        cos, sin = nn.rope_angles(positions, dh, cfg.rope_theta)
+        k = nn.apply_rope(k, cos, sin)
+    return k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q (B,S,H,dh), k/v (B,T,Hkv,dh), mask (B,1,S,T) or (S,T) bool."""
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (dh ** -0.5)
+    # Context-parallel anchor: query-seq dim over the model axis when head
+    # sharding is unavailable (see shardctx "scores").
+    scores = constrain(scores, "scores")
+    scores = jnp.where(mask[:, None, None] if mask.ndim == 3 else mask,
+                       scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def causal_mask(S: int, T: int, window: Optional[int], offset: int = 0):
+    """(S, T) bool; query i attends keys j with j <= i+offset (and within
+    the sliding window if set)."""
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m = m & (kj > qi - window)
+    return m
+
+
+def self_attention(p, cfg: ModelConfig, x, *, positions=None):
+    """Training/prefill full-sequence self-attention."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = _project_q(p, cfg, x, positions)
+    k, v = _project_kv(p, cfg, x, positions)
+    mask = causal_mask(S, S, cfg.sliding_window)
+    out = constrain(_sdpa(q, k, v, mask, cfg), "heads")
+    return constrain(nn.dense(p["wo"], out.reshape(B, S, -1)), "resid"), (k, v)
+
+
+def decode_self_attention(p, cfg: ModelConfig, x, cache: KVCache):
+    """One-token decode against a preallocated cache; returns new cache.
+
+    ``cache.length`` is per-sequence (B,) so continuous batching can mix
+    sequences at different positions in one pool."""
+    B, S, _ = x.shape
+    assert S == 1
+    pos = cache.length[:, None]                   # (B, 1) per-row positions
+    q = _project_q(p, cfg, x, pos)
+    k_new, v_new = _project_kv(p, cfg, x, pos)
+    rows = jnp.arange(B)
+    k = cache.k.at[rows, cache.length].set(
+        k_new[:, 0].astype(cache.k.dtype), mode="drop")
+    v = cache.v.at[rows, cache.length].set(
+        v_new[:, 0].astype(cache.v.dtype), mode="drop")
+    T = k.shape[1]
+    kj = jnp.arange(T)[None, :]
+    valid = kj <= cache.length[:, None]           # (B, T)
+    if cfg.sliding_window is not None:
+        valid = valid & (kj > cache.length[:, None] - cfg.sliding_window)
+    mask = valid[:, None, :]                      # (B, 1, T)
+    out = _sdpa(q, k, v, mask, cfg)
+    out = nn.dense(p["wo"], out.reshape(B, 1, -1))
+    return out, KVCache(k, v, cache.length + 1)
+
+
+def cross_kv(p, cfg: ModelConfig, memory):
+    """Project the fixed memory (encoder output / image tokens) once."""
+    T = memory.shape[1]
+    return _project_kv(p, cfg, memory, jnp.zeros((1, T), jnp.int32),
+                       use_rope=False)
+
+
+def cross_attention(p, cfg: ModelConfig, x, kv, *, mem_mask=None):
+    """Cross-attention with precomputed (k, v) memory projections.
+
+    No RoPE (absolute memory positions)."""
+    B, S, _ = x.shape
+    k, v = kv
+    T = k.shape[1]
+    pos = jnp.zeros((1, S), jnp.int32)
+    q = _project_q(p, cfg, x, pos, use_rope=False)
+    if mem_mask is None:
+        mask = jnp.ones((B, S, T), bool)
+    else:
+        mask = jnp.broadcast_to(mem_mask[:, None, :], (B, S, T))
+    out = _sdpa(q, k, v, mask, cfg)
+    return nn.dense(p["wo"], out.reshape(B, S, -1))
+
+
+def init_cache(cfg: ModelConfig, B: int, S_max: int, dtype) -> KVCache:
+    dh, Hkv = cfg.head_dim, cfg.n_kv_heads
+    return KVCache(
+        k=jnp.zeros((B, S_max, Hkv, dh), dtype),
+        v=jnp.zeros((B, S_max, Hkv, dh), dtype),
+        length=jnp.zeros((B,), jnp.int32),
+    )

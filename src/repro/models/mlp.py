@@ -1,0 +1,130 @@
+"""Feed-forward blocks: SwiGLU dense MLP and token-choice top-k MoE with
+optional shared experts (DeepSeekMoE-style fine-grained routing).
+
+MoE dispatch is the sort-based fixed-shape scheme (MaxText-style): flatten
+(token, choice) pairs, sort by expert, position-within-expert via running
+counts, drop beyond capacity, run all experts as one stacked einsum, and
+scatter-add back with combine weights.  Expert weights carry a leading E axis
+that launch/sharding.py shards over the ``model`` mesh axis (expert
+parallelism); XLA inserts the all-to-alls at the gather/scatter boundaries.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .config import ModelConfig, MoEConfig
+from .shardctx import constrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": nn.dense_init(k1, d_model, d_ff, dtype),
+        "wi_up": nn.dense_init(k2, d_model, d_ff, dtype),
+        "wo": nn.dense_init(k3, d_ff, d_model, dtype, scale=d_ff ** -0.5),
+    }
+
+
+def mlp(p, x: Array) -> Array:
+    h = jax.nn.silu(nn.dense(p["wi_gate"], x)) * nn.dense(p["wi_up"], x)
+    h = constrain(h, "ffn")
+    return constrain(nn.dense(p["wo"], h), "resid")
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    mo = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    E, dff = mo.num_experts, mo.d_expert
+
+    def stack_init(k, d_in, d_out, n):
+        return jax.vmap(
+            lambda kk: nn.dense_init(kk, d_in, d_out, dtype)
+        )(jax.random.split(k, n))
+
+    p = {
+        "router": nn.dense_init(ks[0], d, E, jnp.float32, scale=0.02),
+        "we_gate": stack_init(ks[1], d, dff, E),
+        "we_up": stack_init(ks[2], d, dff, E),
+        "we_down": stack_init(ks[3], dff, d, E),
+    }
+    if mo.num_shared:
+        p["shared"] = init_mlp(ks[4], d, dff * mo.num_shared, dtype)
+    return p
+
+
+def _capacity(T: int, mo: MoEConfig) -> int:
+    cap = int(T * mo.top_k * mo.capacity_factor / mo.num_experts) + 1
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def moe(p, cfg: ModelConfig, x: Array):
+    """Token-choice top-k MoE.  x (B, S, d) -> (y, aux_loss)."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = mo.num_experts, mo.top_k
+    C = _capacity(T, mo)
+    xt = x.reshape(T, d)
+
+    logits = nn.dense(p["router"], xt.astype(jnp.float32))      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, choice = jax.lax.top_k(probs, k)                       # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Aux load-balance loss (Switch-style): E * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[choice.reshape(-1)].add(
+        1.0 / (T * k))
+    aux = mo.aux_loss_coef * E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch (fixed shapes) ----
+    flat_expert = choice.reshape(-1)                             # (T*k,)
+    flat_gate = gate.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_expert)                             # stable
+    e_sorted = flat_expert[order]
+    t_sorted = flat_token[order]
+    g_sorted = flat_gate[order]
+    # Position of each entry within its expert run.
+    idx = jnp.arange(T * k)
+    seg_start = jnp.searchsorted(e_sorted, jnp.arange(E))        # (E,)
+    pos_in_e = idx - seg_start[e_sorted]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, e_sorted * C + pos_in_e, E * C)       # drop -> pad
+
+    # Gather tokens into (E*C+1, d) buffer (last row = dropped slot).
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    buf = buf.at[slot].set(jnp.where(keep[:, None], xt[t_sorted], 0.0))
+    h = constrain(buf[: E * C].reshape(E, C, d), "experts")
+
+    # ---- stacked expert FFN (einsum over E) ----
+    hg = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, p["we_gate"]))
+    hu = jnp.einsum("ecd,edf->ecf", h, p["we_up"])
+    ho = constrain(jnp.einsum("ecf,efd->ecd", hg * hu, p["we_down"]),
+                   "experts")                                     # (E, C, d)
+
+    # ---- combine: scatter-add weighted outputs back to tokens ----
+    out_flat = ho.reshape(E * C, d)
+    contrib = out_flat[jnp.minimum(slot, E * C - 1)]             # (T*k, d)
+    contrib = jnp.where(keep[:, None], contrib, 0.0)
+    y = jnp.zeros((T, d), jnp.float32).at[t_sorted].add(
+        contrib.astype(jnp.float32) * g_sorted[:, None])
+
+    if mo.num_shared:
+        y = y + mlp(p["shared"], xt).astype(jnp.float32)
+    return y.reshape(B, S, d).astype(x.dtype), aux

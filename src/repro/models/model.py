@@ -1,0 +1,474 @@
+"""Model assembly for all 10 assigned architectures.
+
+A model is a stack of repeats of ``cfg.layer_pattern`` (a short tuple of
+layer kinds); parameters for each pattern position are stacked across
+repeats and the forward pass is a ``lax.scan`` over repeats -- keeping HLO
+size O(pattern) instead of O(n_layers) (essential for the 100-layer vision
+and 72-layer hybrid configs).
+
+Layer kinds:
+  dense        self-attn (causal / SWA / GQA / qk_norm / bias) + SwiGLU
+  moe          self-attn + token-choice top-k MoE (opt. shared experts)
+  attn+dense / attn+moe / mamba+dense / mamba+moe      (Jamba hybrid unit)
+  rwkv         RWKV6 time-mix + channel-mix
+  xonly        cross-attn + SwiGLU (Llama-3.2-V image layers)
+  cross        self-attn + cross-attn + SwiGLU (enc-dec decoder)
+
+Entry points (pure functions of a params pytree):
+  init_model(cfg, key)                    -> params
+  train_logits(cfg, params, batch)        -> (logits, aux)
+  loss_fn(cfg, params, batch)             -> scalar loss
+  prefill(cfg, params, batch)             -> (last logits, raw caches, memory)
+  decode_step(cfg, params, token, caches) -> (logits, caches)
+  init_caches(cfg, B, S_max, mem_len)     -> decode cache pytree
+
+``batch`` is a dict: tokens/labels for LMs, + frames (enc-dec audio stub) or
+image_embeds (vision stub).  Decode caches are per-pattern-position stacked
+pytrees (KVCache / MambaState / RWKVState / cross-KV / cmix shifts).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mlp as mlp_mod
+from . import nn, ssm
+from .config import ModelConfig
+from .shardctx import constrain
+
+Array = jax.Array
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def _parse_kind(kind: str) -> Tuple[str, str]:
+    """kind -> (mixer, ff)."""
+    if "+" in kind:
+        mixer, ff = kind.split("+")
+        return mixer, ff
+    if kind == "rwkv":
+        return "rwkv", "cmix"
+    if kind == "xonly":
+        return "xonly", "dense"
+    if kind == "cross":
+        return "cross", "dense"
+    return "attn", kind            # "dense" | "moe"
+
+
+# ---------------------------------------------------------------------------
+# Per-kind block init / apply
+# ---------------------------------------------------------------------------
+
+def _init_block(key, kind: str, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    mixer, ff = _parse_kind(kind)
+    p: Dict[str, Any] = {"ln1": nn.rms_norm_init(d)}
+    if mixer == "rwkv":
+        p["tmix"] = ssm.init_rwkv(ks[0], cfg, dtype)
+        p["ln2"] = nn.rms_norm_init(d)
+        p["cmix"] = ssm.init_rwkv_cmix(ks[1], cfg, dtype)
+        return p
+    if mixer == "mamba":
+        p["mixer"] = ssm.init_mamba(ks[0], cfg, dtype)
+    elif mixer in ("attn", "cross"):
+        p["mixer"] = attn.init_attn(ks[0], cfg, dtype)
+    if mixer in ("cross", "xonly"):
+        p["ln_x"] = nn.rms_norm_init(d)
+        p["xattn"] = attn.init_attn(ks[2], cfg, dtype, cross=True)
+        p["xgate"] = jnp.zeros((1,), jnp.float32)
+    p["ln2"] = nn.rms_norm_init(d)
+    if ff == "moe":
+        p["ff"] = mlp_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        p["ff"] = mlp_mod.init_mlp(ks[1], d, cfg.d_ff, dtype)
+    return p
+
+
+def _apply_block(
+    p, kind: str, cfg: ModelConfig, x, *,
+    mode: str,                     # "train" | "decode"
+    cache=None,                    # per-layer cache/state (decode)
+    memory=None,                   # cross-attention memory (train modes)
+    bidirectional: bool = False,
+):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    mixer, ff = _parse_kind(kind)
+    x = constrain(x, "resid")
+    h = nn.rms_norm(p["ln1"], x, cfg.rms_eps)
+
+    if mixer == "rwkv":
+        if mode == "decode":
+            y, tstate = ssm.rwkv_decode(p["tmix"], cfg, h, cache["tmix"])
+            shift = cache["cmix"]
+        else:
+            y, tstate = ssm.rwkv_forward(p["tmix"], cfg, h, None)
+            shift = jnp.zeros((x.shape[0], 1, cfg.d_model), x.dtype)
+        x = x + y
+        h2 = nn.rms_norm(p["ln2"], x, cfg.rms_eps)
+        y2, new_shift = ssm.rwkv_cmix(p["cmix"], cfg, h2, shift)
+        x = x + y2
+        return x, {"tmix": tstate, "cmix": new_shift}, aux
+
+    new_cache: Dict[str, Any] = {}
+    if mixer == "mamba":
+        if mode == "decode":
+            y, st = ssm.mamba_decode(p["mixer"], cfg, h, cache["mixer"])
+        else:
+            y, st = ssm.mamba_forward(p["mixer"], cfg, h, None)
+        new_cache["mixer"] = st
+        x = x + y
+    elif mixer in ("attn", "cross"):
+        if mode == "decode":
+            y, kv = attn.decode_self_attention(p["mixer"], cfg, h, cache["mixer"])
+            new_cache["mixer"] = kv
+        elif bidirectional:
+            y, kv = _bidir_attention(p["mixer"], cfg, h)
+            new_cache["mixer"] = kv
+        else:
+            y, kv = attn.self_attention(p["mixer"], cfg, h)
+            new_cache["mixer"] = kv
+        x = x + y
+
+    if mixer in ("cross", "xonly"):
+        hx = nn.rms_norm(p["ln_x"], x, cfg.rms_eps)
+        if mode == "decode":
+            xkv = cache["xkv"]
+        else:
+            xkv = attn.cross_kv(p["xattn"], cfg, memory)
+        yx = attn.cross_attention(p["xattn"], cfg, hx, xkv)
+        x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * yx
+        new_cache["xkv"] = xkv
+
+    h2 = nn.rms_norm(p["ln2"], x, cfg.rms_eps)
+    if ff == "moe":
+        y2, aux = mlp_mod.moe(p["ff"], cfg, h2)
+    else:
+        y2 = mlp_mod.mlp(p["ff"], h2)
+    x = x + y2
+    return x, new_cache, aux
+
+
+def _bidir_attention(p, cfg: ModelConfig, x):
+    """Full bidirectional self-attention (encoder stacks)."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q = attn._project_q(p, cfg, x, positions)
+    k, v = attn._project_kv(p, cfg, x, positions)
+    mask = jnp.ones((S, S), bool)
+    out = attn._sdpa(q, k, v, mask, cfg)
+    return nn.dense(p["wo"], out.reshape(B, S, -1)), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def _init_stack(key, kinds, nr: int, cfg: ModelConfig, dtype):
+    def init_one(k):
+        kk = jax.random.split(k, len(kinds))
+        return [_init_block(kk[i], kind, cfg, dtype)
+                for i, kind in enumerate(kinds)]
+    return jax.vmap(init_one)(jax.random.split(key, nr))
+
+
+def init_model(cfg: ModelConfig, key) -> Dict[str, Any]:
+    cfg.validate()
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": nn.embed_init(keys[0], cfg.vocab_size, d, dtype),
+        "final_norm": nn.rms_norm_init(d),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = nn.dense_init(keys[1], d, cfg.vocab_size, dtype)
+    if cfg.is_encdec:
+        params["enc"] = _init_stack(keys[2], ("dense",), cfg.n_layers, cfg,
+                                    dtype)
+        params["enc_norm"] = nn.rms_norm_init(d)
+        params["dec"] = _init_stack(keys[3], ("cross",), cfg.n_layers, cfg,
+                                    dtype)
+        return params
+    params["blocks"] = _init_stack(
+        keys[2], cfg.layer_pattern, cfg.n_pattern_repeats, cfg, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Stack runner (scan over repeats)
+# ---------------------------------------------------------------------------
+
+REMAT_POLICIES = {
+    "full": None,                          # save nothing, recompute all
+    "dots": "dots_saveable",
+    "dots_no_batch": "dots_with_no_batch_dims_saveable",
+}
+
+
+def _run_stack(cfg, params_stack, x, pattern, nr, *, mode, caches=None,
+               memory=None, bidirectional=False, remat=None,
+               unroll=False):
+    def body(carry, xs):
+        x, aux = carry
+        p_unit, cache_unit = xs
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            c = None if cache_unit is None else cache_unit[i]
+            x, nc, a = _apply_block(
+                p_unit[i], kind, cfg, x, mode=mode, cache=c, memory=memory,
+                bidirectional=bidirectional)
+            new_caches.append(nc)
+            aux = aux + a
+        return (x, aux), new_caches
+
+    if remat is not None:
+        policy_name = REMAT_POLICIES[remat]
+        policy = (getattr(jax.checkpoint_policies, policy_name)
+                  if policy_name else None)
+        body = jax.checkpoint(body, policy=policy)
+
+    if unroll:
+        # Analysis mode: Python loop instead of lax.scan so cost_analysis
+        # counts every layer (scan bodies are costed once, EXPERIMENTS.md
+        # SSRoofline methodology).
+        carry = (x, jnp.zeros((), jnp.float32))
+        new_caches_all = []
+        for i in range(nr):
+            p_unit = jax.tree.map(lambda t: t[i], params_stack)
+            cache_unit = (None if caches is None
+                          else jax.tree.map(lambda t: t[i], caches))
+            carry, ncs = body(carry, (p_unit, cache_unit))
+            new_caches_all.append(ncs)
+        (x, aux) = carry
+        stacked = (jax.tree.map(lambda *ts: jnp.stack(ts), *new_caches_all)
+                   if new_caches_all else None)
+        return x, stacked, aux
+
+    carry0 = (x, jnp.zeros((), jnp.float32))
+    if caches is None:
+        dummy = jnp.zeros((nr,), jnp.float32)
+        (x, aux), new_caches = jax.lax.scan(
+            lambda c, s: body(c, (s[0], None)), carry0, (params_stack, dummy))
+    else:
+        (x, aux), new_caches = jax.lax.scan(
+            body, carry0, (params_stack, caches))
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, tokens):
+    return constrain(params["embed"][tokens], "resid")
+
+
+def _unembed(cfg, params, x):
+    if cfg.tie_embeddings:
+        # Tied head: embed rows are ~N(0,1); scale by 1/sqrt(d) so logits
+        # start at unit variance (Gemma-style tying).
+        w = params["embed"].T * (cfg.d_model ** -0.5)
+    else:
+        w = params["unembed"]
+    return constrain(jnp.einsum("...d,dv->...v", x, w), "logits")
+
+
+def _encode(cfg, params, batch, remat=None, unroll=False):
+    h = batch["frames"].astype(_dtype(cfg))
+    h, _, _ = _run_stack(cfg, params["enc"], h, ("dense",), cfg.n_layers,
+                         mode="train", bidirectional=True, remat=remat,
+                         unroll=unroll)
+    return nn.rms_norm(params["enc_norm"], h, cfg.rms_eps)
+
+
+def train_logits(cfg: ModelConfig, params, batch,
+                 remat=None, unroll=False) -> Tuple[Array, Array]:
+    """Full teacher-forcing forward.  Returns (logits, aux_loss)."""
+    if cfg.is_encdec:
+        memory = _encode(cfg, params, batch, remat, unroll)
+        x = _embed(cfg, params, batch["tokens"])
+        x, _, aux = _run_stack(cfg, params["dec"], x, ("cross",),
+                               cfg.n_layers, mode="train", memory=memory,
+                               remat=remat, unroll=unroll)
+    else:
+        memory = batch.get("image_embeds") if cfg.family == "vision" else None
+        x = _embed(cfg, params, batch["tokens"])
+        x, _, aux = _run_stack(cfg, params["blocks"], x, cfg.layer_pattern,
+                               cfg.n_pattern_repeats, mode="train",
+                               memory=memory, remat=remat, unroll=unroll)
+    x = nn.rms_norm(params["final_norm"], x, cfg.rms_eps)
+    return _unembed(cfg, params, x), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat=None,
+            unroll=False) -> Array:
+    logits, aux = train_logits(cfg, params, batch, remat, unroll)
+    loss = nn.softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+    return loss + aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, batch, unroll=False):
+    """Full forward returning (last logits, raw caches, memory)."""
+    if cfg.is_encdec:
+        memory = _encode(cfg, params, batch, unroll=unroll)
+        x = _embed(cfg, params, batch["tokens"])
+        x, caches, _ = _run_stack(cfg, params["dec"], x, ("cross",),
+                                  cfg.n_layers, mode="train", memory=memory,
+                                  unroll=unroll)
+    else:
+        memory = batch.get("image_embeds") if cfg.family == "vision" else None
+        x = _embed(cfg, params, batch["tokens"])
+        x, caches, _ = _run_stack(cfg, params["blocks"], x, cfg.layer_pattern,
+                                  cfg.n_pattern_repeats, mode="train",
+                                  memory=memory, unroll=unroll)
+    x = nn.rms_norm(params["final_norm"], x, cfg.rms_eps)
+    return _unembed(cfg, params, x[:, -1:]), caches, memory
+
+
+def decode_step(cfg: ModelConfig, params, token, caches, unroll=False):
+    """One token for the whole stack.  token (B, 1) -> (logits, caches)."""
+    x = _embed(cfg, params, token)
+    if cfg.is_encdec:
+        x, new_caches, _ = _run_stack(cfg, params["dec"], x, ("cross",),
+                                      cfg.n_layers, mode="decode",
+                                      caches=caches, unroll=unroll)
+    else:
+        x, new_caches, _ = _run_stack(cfg, params["blocks"], x,
+                                      cfg.layer_pattern,
+                                      cfg.n_pattern_repeats, mode="decode",
+                                      caches=caches, unroll=unroll)
+    x = nn.rms_norm(params["final_norm"], x, cfg.rms_eps)
+    return _unembed(cfg, params, x), new_caches
+
+
+def _decode_pattern(cfg) -> Tuple[Tuple[str, ...], int]:
+    if cfg.is_encdec:
+        return ("cross",), cfg.n_layers
+    return cfg.layer_pattern, cfg.n_pattern_repeats
+
+
+def init_caches(cfg: ModelConfig, B: int, S_max: int,
+                mem_len: Optional[int] = None, *, length: int = 0):
+    """Decode cache pytree with KV buffers filled to ``length``."""
+    dtype = _dtype(cfg)
+    pattern, nr = _decode_pattern(cfg)
+    dh, Hkv = cfg.head_dim, cfg.n_kv_heads
+
+    def one(kind):
+        mixer, _ = _parse_kind(kind)
+        c: Dict[str, Any] = {}
+        if mixer == "rwkv":
+            return {
+                "tmix": ssm.init_rwkv_state(cfg, B, dtype),
+                "cmix": jnp.zeros((B, 1, cfg.d_model), dtype),
+            }
+        if mixer == "mamba":
+            c["mixer"] = ssm.init_mamba_state(cfg, B, dtype)
+        elif mixer in ("attn", "cross"):
+            cache = attn.init_cache(cfg, B, S_max, dtype)
+            c["mixer"] = attn.KVCache(cache.k, cache.v,
+                                      jnp.full((B,), length, jnp.int32))
+        if mixer in ("cross", "xonly"):
+            T = mem_len or cfg.n_frontend_tokens or 1
+            c["xkv"] = (jnp.zeros((B, T, Hkv, dh), dtype),
+                        jnp.zeros((B, T, Hkv, dh), dtype))
+        return c
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf[None], (nr,) + leaf.shape),
+            tree)
+
+    return [stack(one(kind)) for kind in pattern]
+
+
+def caches_from_prefill(cfg: ModelConfig, raw_caches, S_max: int):
+    """Convert prefill's raw caches into padded decode caches.
+
+    Attention (k, v) pairs of length S are zero-padded to S_max KVCache
+    buffers with length=S; SSM states and cross-KV pass through unchanged.
+    """
+    pattern, _ = _decode_pattern(cfg)
+    out = []
+    for i, kind in enumerate(pattern):
+        mixer, _ = _parse_kind(kind)
+        c = dict(raw_caches[i])
+        if mixer in ("attn", "cross"):
+            k, v = c["mixer"]
+            S = k.shape[2]              # (nr, B, S, Hkv, dh)
+            pad = [(0, 0)] * k.ndim
+            pad[2] = (0, S_max - S)
+            nr = k.shape[0]
+            B = k.shape[1]
+            c["mixer"] = attn.KVCache(
+                jnp.pad(k, pad), jnp.pad(v, pad),
+                jnp.full((nr, B), S, jnp.int32))
+        out.append(c)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Introspection
+# ---------------------------------------------------------------------------
+
+def count_params(params) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(params)))
+
+
+def _iter_named_leaves(p, prefix=""):
+    if isinstance(p, dict):
+        for k, v in p.items():
+            yield from _iter_named_leaves(v, prefix + "/" + k)
+    elif isinstance(p, (list, tuple)):
+        for i, v in enumerate(p):
+            yield from _iter_named_leaves(v, prefix + f"/{i}")
+    elif p is not None:
+        yield prefix, p
+
+
+def count_active_params(cfg: ModelConfig, params) -> int:
+    """Active params per token (MoE: only top_k of num_experts count)."""
+    total = count_params(params)
+    if cfg.moe is None:
+        return total
+    expert_total = sum(
+        v.size for k, v in _iter_named_leaves(params)
+        if k.endswith(("we_gate", "we_up", "we_down")))
+    active_frac = cfg.moe.top_k / cfg.moe.num_experts
+    return int(total - expert_total * (1.0 - active_frac))
+
+
+class Model:
+    """Thin OO veneer used by examples and the launcher."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg.validate()
+
+    def init(self, key):
+        return init_model(self.cfg, key)
+
+    def loss(self, params, batch):
+        return loss_fn(self.cfg, params, batch)
+
+    def logits(self, params, batch):
+        return train_logits(self.cfg, params, batch)
+
+    def prefill(self, params, batch):
+        return prefill(self.cfg, params, batch)
+
+    def decode(self, params, token, caches):
+        return decode_step(self.cfg, params, token, caches)
+
+    def init_caches(self, B, S_max, mem_len=None, length: int = 0):
+        return init_caches(self.cfg, B, S_max, mem_len, length=length)

@@ -1,0 +1,79 @@
+"""Minimal functional NN primitives (no flax/optax in this container).
+
+Parameters are plain pytrees (nested dicts of jax.Array).  Initializers take
+an explicit key; layers are pure functions ``apply(params, x, ...)``.
+Matmul-bearing ops keep params in ``param_dtype`` (bf16 at scale) and
+normalizations/softmax in f32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    if scale is None:
+        scale = d_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out),
+                                        jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d),
+                                        jnp.float32)).astype(dtype)
+
+
+def dense(params: Array, x: Array, bias: Optional[Array] = None) -> Array:
+    y = jnp.einsum("...d,df->...f", x, params)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def rms_norm(g: Array, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * g.astype(jnp.float32)).astype(dt)
+
+
+def rms_norm_init(d: int):
+    return jnp.ones((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: Array, d_head: int, theta: float) -> tuple[Array, Array]:
+    """(..., d_head/2) cos/sin tables for given positions."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x (..., S, H, d_head); cos/sin (..., S, half) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def softmax_xent(logits: Array, labels: Array, mask: Optional[Array] = None):
+    """Mean cross entropy over valid positions; logits f32 upcast."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

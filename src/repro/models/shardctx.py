@@ -1,0 +1,113 @@
+"""Activation-sharding constraint context.
+
+GSPMD propagates weight shardings to activations greedily; without anchors
+it can replicate whole activation paths across the model axis (observed in
+the baseline dry-run: per-partition FLOPs ~10x the ideal share, and the
+SPMD partitioner emitting 'involuntary full rematerialization' around the
+embedding gather).  The fix -- standard in MaxText/AXLearn -- is explicit
+``with_sharding_constraint`` anchors at block boundaries.
+
+The model code stays mesh-agnostic: it calls ``constrain(x, kind)`` with a
+semantic kind; the launcher installs concrete rules (mesh + PartitionSpec
+per kind) via ``use_rules``/``make_rules``.  With no rules installed the
+call is the identity, so single-device tests and smoke runs are unaffected.
+
+Kinds:
+  resid    (B, S, d)      residual stream      -> (dp, seq?, None)
+  heads    (B, S, H, dh)  post-QKV projections -> (dp, seq?, model, None)
+  ffn      (B, S, f)      MLP hidden           -> (dp, seq?, model)
+  logits   (B, S, V)      unembedded           -> (dp, None, model)
+  experts  (E, C, d)      MoE expert buffers   -> (model, None, None)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_RULES: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_sharding_rules", default=None)
+
+
+def make_rules(mesh, *, batch_shardable: bool = True,
+               seq_axis: Optional[str] = None,
+               n_heads: Optional[int] = None) -> Dict:
+    """Concrete spec table.  batch_shardable=False (long_500k, batch=1)
+    shards the sequence axis over the data axes instead.  ``n_heads``
+    decides the attention-score strategy: heads-sharded (divisible by the
+    model axis) or context-parallel (query-seq over model)."""
+    from ..launch.mesh import dp_axes
+
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    if batch_shardable:
+        b, s = dp, seq_axis
+    else:
+        b, s = None, dp
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    heads_shardable = n_heads is not None and n_heads % model_size == 0
+    return {
+        "mesh": mesh,
+        "specs": {
+            "resid": P(b, s, None),
+            "heads": P(b, s, "model", None),
+            # Attention scores (B, kv, G, S, T): when the head dims don't
+            # divide the model axis (qwen2: 12 heads vs 16) the "heads"
+            # anchor is dropped and the whole O(S^2) attention path would
+            # replicate across model; shard the QUERY sequence dim instead
+            # (context-parallel attention -- softmax reduces over T, which
+            # stays local).  Heads-shardable archs keep propagation from the
+            # "heads" anchor (no conflicting reshard).  SSPerf iteration 6.
+            "scores": (None if heads_shardable
+                       else P(b, None, None, "model", None)),
+            "ffn": P(b, s, "model"),
+            "logits": P(b, s, "model"),
+            # NOTE "experts" deliberately unconstrained: anchoring the
+            # (E, C, d) buffers to P(model, ...) makes GSPMD lower the
+            # token->expert scatter by replication, DOUBLING all-reduce
+            # traffic (jamba train_4k: 67.6 -> 142.2 GB measured).  Left
+            # to propagation the scatter stays token-sharded and expert
+            # weights all-gather per layer -- cheaper at these shapes.
+            # (SSPerf iteration 4, hypothesis refuted.)
+            "experts": None,
+        },
+    }
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Dict]):
+    tok = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(tok)
+
+
+def _fits(spec: P, shape, mesh) -> P:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        tot = int(np.prod([sizes[a] for a in axs]))
+        out.append(ax if dim % tot == 0 and dim >= tot else None)
+    return P(*out)
+
+
+def constrain(x, kind: str):
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    spec = rules["specs"].get(kind)
+    if spec is None:
+        return x
+    mesh = rules["mesh"]
+    spec = _fits(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

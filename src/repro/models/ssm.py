@@ -1,0 +1,351 @@
+"""State-space sequence mixers: Mamba (SSD chunked form) and RWKV6 (Finch).
+
+TPU adaptation (DESIGN.md SS3/SS6): the reference CUDA kernels for both
+architectures are fused recurrent scans relying on SM-local shared memory.
+On TPU we use the *chunked matmul* formulations instead -- intra-chunk work
+becomes (L x L) MXU contractions and only chunk-boundary states recur --
+wrapped in a ``lax.scan`` over chunks with per-chunk ``jax.checkpoint`` so
+activation memory stays O(S/L * state) rather than O(S * state).
+
+  * Mamba is implemented in the SSD (Mamba-2) head formulation: scalar decay
+    per head per token.  Jamba ships Mamba-1 (per-channel decay); the per-head
+    scalar is the TPU-native equivalent (noted in DESIGN.md SS9) and keeps the
+    intra-chunk decay matrix at (B, H, L, L) instead of an infeasible
+    (B, H, L, L, P).
+  * RWKV6 keeps its per-channel data-dependent decay exactly.  The chunked
+    path uses the exp(+/-cumlog) factorization; with chunk=32 and log-decay
+    clamped to [-2, -1e-4] all intermediates stay within f32 range (worst
+    case e^64 ~ 6e27 << 3.4e38).  A sequential-scan oracle is kept for tests
+    and as a fallback.
+
+Both mixers also expose a single-token ``*_decode`` step that carries the
+recurrent state -- this is what makes ``long_500k`` run at O(1) memory per
+token for the ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .config import ModelConfig, SSMConfig
+
+Array = jax.Array
+
+
+# ===========================================================================
+# Mamba (SSD chunked)
+# ===========================================================================
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    N = s.d_state
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": nn.dense_init(ks[0], d, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, d_in), jnp.float32)
+                   * 0.1).astype(dtype),
+        "bc_proj": nn.dense_init(ks[2], d_in, 2 * N, dtype),
+        "dt_proj": nn.dense_init(ks[3], d_in, H, dtype, scale=0.02),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_proj": nn.dense_init(ks[4], d_in, d, dtype, scale=d_in ** -0.5),
+    }
+
+
+class MambaState(NamedTuple):
+    ssm: Array      # (B, H, P, N) f32 recurrent state
+    conv: Array     # (B, conv_width - 1, d_in) conv tail
+
+
+def _mamba_preproject(p, cfg: ModelConfig, x, conv_tail=None):
+    """Shared projections: returns (xh, z, dt, a, Bv, Cv, new_conv_tail)."""
+    s = cfg.ssm
+    B_, S, _ = x.shape
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    xz = nn.dense(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    # Causal depthwise conv of width W over the sequence.
+    W = s.conv_width
+    if conv_tail is None:
+        conv_tail = jnp.zeros((B_, W - 1, d_in), xi.dtype)
+    xpad = jnp.concatenate([conv_tail, xi], axis=1)
+    xc = sum(xpad[:, i:i + S] * p["conv_w"][i][None, None, :]
+             for i in range(W))
+    xc = jax.nn.silu(xc)
+    new_tail = xpad[:, -(W - 1):] if W > 1 else conv_tail
+    dt = jax.nn.softplus(
+        nn.dense(p["dt_proj"], xc).astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(-dt * jnp.exp(p["A_log"]))           # (B,S,H) decay in (0,1)
+    bc = nn.dense(p["bc_proj"], xc).astype(jnp.float32)
+    Bv, Cv = jnp.split(bc, 2, axis=-1)               # (B,S,N) each
+    xraw = xc.reshape(B_, S, H, s.head_dim).astype(jnp.float32)  # raw heads
+    xh = xraw * dt[..., None]                         # dt-scaled input
+    return xh, xraw, z, dt, a, Bv, Cv, new_tail
+
+
+def mamba_forward(p, cfg: ModelConfig, x, state: MambaState | None = None):
+    """Chunked SSD scan.  x (B,S,d) -> (y (B,S,d), final MambaState)."""
+    s = cfg.ssm
+    B_, S, _ = x.shape
+    d_in = s.expand * cfg.d_model
+    H, P, N = d_in // s.head_dim, s.head_dim, s.d_state
+    L = min(s.chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+    conv_tail = state.conv if state is not None else None
+    xh, xraw, z, dt, a, Bv, Cv, new_tail = _mamba_preproject(p, cfg, x, conv_tail)
+
+    # Reshape into chunks and scan with the boundary state as carry.
+    def chunkify(t):
+        return t.reshape((B_, nc, L) + t.shape[2:]).swapaxes(0, 1)
+
+    xs = jax.tree.map(chunkify, (xh, a, Bv, Cv))
+    s0 = (state.ssm if state is not None
+          else jnp.zeros((B_, H, P, N), jnp.float32))
+
+    @jax.checkpoint
+    def chunk_step(carry, inp):
+        st = carry                                    # (B,H,P,N)
+        xh_c, a_c, B_c, C_c = inp                     # (B,L,...) per chunk
+        logw = jnp.log(jnp.maximum(a_c, 1e-20))       # (B,L,H)
+        csum = jnp.cumsum(logw, axis=1)               # inclusive
+        # Contribution of the incoming state: C_t . (exp(csum_t) * state).
+        y_state = jnp.einsum("bln,bhpn->blhp", C_c, st) * jnp.exp(
+            csum)[..., None]
+        # Intra-chunk: scores (B,L,L) shared over heads; per-head decay mask.
+        scores = jnp.einsum("bln,bsn->bls", C_c, B_c)
+        # Clamp the exponent at 0 BEFORE exp: entries with s > t would
+        # overflow to inf and poison gradients through the mask (0 * inf).
+        expo = jnp.minimum(csum[:, :, None, :] - csum[:, None, :, :], 0.0)
+        dec = jnp.exp(expo)                                        # (B,t,s,H)
+        mask = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])
+        dec = jnp.where(mask[None, :, :, None], dec, 0.0)
+        y_intra = jnp.einsum("bts,btsh,bshp->bthp", scores, dec, xh_c)
+        # State update to the chunk end.
+        decay_to_end = jnp.exp(csum[:, -1:, :] - csum)             # (B,L,H)
+        chunk_decay = jnp.exp(csum[:, -1])[..., None, None]        # (B,H,1,1)
+        st_new = chunk_decay * st + jnp.einsum(
+            "bsh,bshp,bsn->bhpn", decay_to_end, xh_c, B_c)
+        return st_new, y_state + y_intra
+
+    s_final, ys = jax.lax.scan(chunk_step, s0, xs)
+    y = ys.swapaxes(0, 1).reshape(B_, S, H, P)
+    y = y + xraw * p["D"][None, None, :, None]        # D skip path
+    y = y.reshape(B_, S, d_in).astype(x.dtype) * jax.nn.silu(z)
+    out = nn.dense(p["out_proj"], y)
+    return out, MambaState(ssm=s_final, conv=new_tail.astype(x.dtype))
+
+
+def mamba_decode(p, cfg: ModelConfig, x, state: MambaState):
+    """Single-token recurrent step.  x (B,1,d)."""
+    s = cfg.ssm
+    B_, S, _ = x.shape
+    assert S == 1
+    d_in = s.expand * cfg.d_model
+    H, P = d_in // s.head_dim, s.head_dim
+    xh, xraw, z, dt, a, Bv, Cv, new_tail = _mamba_preproject(p, cfg, x, state.conv)
+    st = state.ssm * a[:, 0, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xh[:, 0], Bv[:, 0])
+    y = jnp.einsum("bn,bhpn->bhp", Cv[:, 0], st)
+    y = y + xraw[:, 0] * p["D"][None, :, None]
+    y = y.reshape(B_, 1, d_in).astype(x.dtype) * jax.nn.silu(z)
+    return nn.dense(p["out_proj"], y), MambaState(ssm=st, conv=new_tail)
+
+
+def init_mamba_state(cfg: ModelConfig, B: int, dtype) -> MambaState:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    return MambaState(
+        ssm=jnp.zeros((B, H, s.head_dim, s.d_state), jnp.float32),
+        conv=jnp.zeros((B, s.conv_width - 1, d_in), dtype),
+    )
+
+
+# ===========================================================================
+# RWKV6 (Finch) time mix
+# ===========================================================================
+
+LOGW_MIN, LOGW_MAX = -2.0, -1e-4   # clamp keeps the chunked path in f32 range
+
+
+def init_rwkv(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    K = cfg.ssm.head_dim
+    H = d // K
+    ks = jax.random.split(key, 10)
+    lora = max(32, d // 64)
+    return {
+        # token-shift mix coefficients per stream (r,k,v,w,g)
+        "mu": (jnp.ones((5, d), jnp.float32) * 0.5),
+        "wr": nn.dense_init(ks[0], d, d, dtype),
+        "wk": nn.dense_init(ks[1], d, d, dtype),
+        "wv": nn.dense_init(ks[2], d, d, dtype),
+        "wg": nn.dense_init(ks[3], d, d, dtype),
+        "wo": nn.dense_init(ks[4], d, d, dtype, scale=d ** -0.5),
+        # data-dependent decay LoRA: w_t = exp(clamp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -0.6, jnp.float32),
+        "wA": nn.dense_init(ks[5], d, lora, dtype, scale=0.02),
+        "wB": nn.dense_init(ks[6], lora, d, dtype, scale=0.02),
+        "u": (jax.random.normal(ks[7], (H, K), jnp.float32) * 0.1),
+        "ln_out": nn.rms_norm_init(d),
+    }
+
+
+class RWKVState(NamedTuple):
+    wkv: Array      # (B, H, K, K) f32
+    shift: Array    # (B, 1, d) previous token embedding
+
+
+def _rwkv_project(p, cfg: ModelConfig, x, shift):
+    B_, S, d = x.shape
+    xprev = jnp.concatenate([shift, x[:, :-1]], axis=1)
+    mu = p["mu"][:, None, None, :]
+    mixed = [x * m + xprev * (1.0 - m) for m in mu.astype(x.dtype)]
+    xr, xk, xv, xw, xg = mixed
+    r = nn.dense(p["wr"], xr)
+    k = nn.dense(p["wk"], xk)
+    v = nn.dense(p["wv"], xv)
+    g = jax.nn.silu(nn.dense(p["wg"], xg))
+    logw = p["w0"] + jnp.tanh(nn.dense(p["wA"], xw).astype(jnp.float32)) @ \
+        p["wB"].astype(jnp.float32)
+    logw = jnp.clip(logw, LOGW_MIN, LOGW_MAX)         # (B,S,d)
+    new_shift = x[:, -1:]
+    return r, k, v, g, logw, new_shift
+
+
+def _heads(t, H, K):
+    B_, S, d = t.shape
+    return t.reshape(B_, S, H, K).astype(jnp.float32)
+
+
+def rwkv_forward(p, cfg: ModelConfig, x, state: RWKVState | None = None,
+                 *, sequential: bool = False):
+    """RWKV6 time mix.  x (B,S,d) -> (y, final state)."""
+    K = cfg.ssm.head_dim
+    d = cfg.d_model
+    H = d // K
+    B_, S, _ = x.shape
+    shift = (state.shift if state is not None
+             else jnp.zeros((B_, 1, d), x.dtype))
+    r, k, v, g, logw, new_shift = _rwkv_project(p, cfg, x, shift)
+    rh, kh, vh = _heads(r, H, K), _heads(k, H, K), _heads(v, H, K)
+    lw = logw.reshape(B_, S, H, K)
+    u = p["u"]
+    s0 = (state.wkv if state is not None
+          else jnp.zeros((B_, H, K, K), jnp.float32))
+
+    if sequential:
+        def step(carry, inp):
+            S_, = carry,
+            r_t, k_t, v_t, lw_t = inp
+            out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                             S_ + u[None, :, :, None] * jnp.einsum(
+                                 "bhk,bhv->bhkv", k_t, v_t))
+            S_new = jnp.exp(lw_t)[..., None] * S_ + jnp.einsum(
+                "bhk,bhv->bhkv", k_t, v_t)
+            return S_new, out
+
+        xs = jax.tree.map(lambda t: t.swapaxes(0, 1), (rh, kh, vh, lw))
+        s_final, ys = jax.lax.scan(step, s0, xs)
+        y = ys.swapaxes(0, 1)                          # (B,S,H,K)
+    else:
+        L = min(cfg.ssm.chunk, 32, S)
+        assert S % L == 0, (S, L)
+        nc = S // L
+
+        def chunkify(t):
+            return t.reshape((B_, nc, L) + t.shape[2:]).swapaxes(0, 1)
+
+        xs = jax.tree.map(chunkify, (rh, kh, vh, lw))
+
+        @jax.checkpoint
+        def chunk_step(carry, inp):
+            S_ = carry                                  # (B,H,K,K)
+            r_c, k_c, v_c, lw_c = inp                   # (B,L,H,K)
+            csum = jnp.cumsum(lw_c, axis=1)             # inclusive cumlog
+            # exp(csum_{t-1}) with csum_{-1} = 0.
+            cprev = csum - lw_c
+            r_tilde = r_c * jnp.exp(cprev)              # decays-to-t
+            k_tilde = k_c * jnp.exp(-csum)              # bounded by clamp
+            scores = jnp.einsum("blhk,bshk->bhls", r_tilde, k_tilde)
+            mask = (jnp.arange(L)[:, None] > jnp.arange(L)[None, :])
+            scores = scores * mask[None, None]
+            # u-bonus diagonal: r_t . (u * k_t) v_t.
+            diag = jnp.einsum("blhk,blhk->blh", r_c, u[None, None] * k_c)
+            y_intra = jnp.einsum("bhls,bshv->blhv", scores, v_c)
+            y_intra = y_intra + diag[..., None] * v_c
+            y_state = jnp.einsum("blhk,bhkv->blhv", r_tilde, S_)
+            # State to chunk end.
+            dec_end = jnp.exp(csum[:, -1:] - csum)      # (B,L,H,K)
+            S_new = jnp.exp(csum[:, -1])[..., None] * S_ + jnp.einsum(
+                "blhk,blhv->bhkv", k_c * dec_end, v_c)
+            return S_new, y_state + y_intra
+
+        s_final, ys = jax.lax.scan(chunk_step, s0, xs)
+        y = ys.swapaxes(0, 1).reshape(B_, S, H, K)
+
+    y = y.reshape(B_, S, d)
+    y = nn.rms_norm(p["ln_out"], y.astype(x.dtype), cfg.rms_eps)
+    y = y * g
+    return nn.dense(p["wo"], y), RWKVState(wkv=s_final, shift=new_shift)
+
+
+def rwkv_decode(p, cfg: ModelConfig, x, state: RWKVState):
+    """Single-token step (B,1,d)."""
+    K = cfg.ssm.head_dim
+    d = cfg.d_model
+    H = d // K
+    B_ = x.shape[0]
+    r, k, v, g, logw, new_shift = _rwkv_project(p, cfg, x, state.shift)
+    r_t = _heads(r, H, K)[:, 0]
+    k_t = _heads(k, H, K)[:, 0]
+    v_t = _heads(v, H, K)[:, 0]
+    lw_t = logw.reshape(B_, 1, H, K)[:, 0]
+    kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+    out = jnp.einsum("bhk,bhkv->bhv", r_t, state.wkv +
+                     p["u"][None, :, :, None] * kv)
+    S_new = jnp.exp(lw_t)[..., None] * state.wkv + kv
+    y = out.reshape(B_, 1, d)
+    y = nn.rms_norm(p["ln_out"], y.astype(x.dtype), cfg.rms_eps) * g
+    return nn.dense(p["wo"], y), RWKVState(wkv=S_new, shift=new_shift)
+
+
+def init_rwkv_state(cfg: ModelConfig, B: int, dtype) -> RWKVState:
+    K = cfg.ssm.head_dim
+    H = cfg.d_model // K
+    return RWKVState(
+        wkv=jnp.zeros((B, H, K, K), jnp.float32),
+        shift=jnp.zeros((B, 1, cfg.d_model), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RWKV channel mix (the FFN half of an RWKV block)
+# ---------------------------------------------------------------------------
+
+def init_rwkv_cmix(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "mu": jnp.full((cfg.d_model,), 0.5, jnp.float32),
+        "wk": nn.dense_init(k1, cfg.d_model, cfg.d_ff, dtype),
+        "wv": nn.dense_init(k2, cfg.d_ff, cfg.d_model, dtype,
+                            scale=cfg.d_ff ** -0.5),
+    }
+
+
+def rwkv_cmix(p, cfg: ModelConfig, x, shift):
+    xprev = jnp.concatenate([shift, x[:, :-1]], axis=1)
+    mu = p["mu"].astype(x.dtype)
+    xk = x * mu + xprev * (1 - mu)
+    h = jnp.square(jax.nn.relu(nn.dense(p["wk"], xk)))
+    return nn.dense(p["wv"], h), x[:, -1:]

@@ -1,0 +1,3 @@
+from .batching import ContinuousBatcher, Request
+
+__all__ = ["ContinuousBatcher", "Request"]

@@ -1,0 +1,88 @@
+"""AQP-as-a-service: a multi-tenant query server over a resident dataset.
+
+Queries arrive with per-request (func, epsilon, delta, metric); same-shaped
+moment queries are answered in fused batches via ``fused_l2miss_batch`` (one
+XLA program, vmapped over requests — the multi-query configuration of
+DESIGN.md SS7 phase B); everything else falls back to the host engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..aqp.engine import AQPEngine
+from ..aqp.query import Query
+from ..core.fused import fused_l2miss
+from ..core.sampling import GroupedData
+
+
+@dataclasses.dataclass
+class AQPResponse:
+    qid: int
+    theta: np.ndarray
+    error: float
+    success: bool
+    n: np.ndarray
+    wall_time_s: float
+
+
+class AQPService:
+    """Serve Listing-1 queries against one resident GroupedData."""
+
+    FUSABLE = ("avg", "proportion", "var", "std")
+
+    def __init__(self, data: GroupedData, *, B: int = 300, n_min: int = 1000,
+                 n_max: int = 2000, max_iters: int = 24,
+                 n_cap: int = 1 << 16, seed: int = 0):
+        self.data = data
+        self.engine = AQPEngine(data, B=B, n_min=n_min, n_max=n_max,
+                                seed=seed)
+        self.B, self.n_min, self.n_max = B, n_min, n_max
+        self.max_iters, self.n_cap = max_iters, n_cap
+        self.key = jax.random.PRNGKey(seed)
+        self._offsets = jnp.asarray(data.offsets)
+        self._m = data.num_groups
+
+    def answer(self, queries: List[Query]) -> List[AQPResponse]:
+        """Answer a batch of queries; fuse the L2 moment queries on device."""
+        out: dict[int, AQPResponse] = {}
+        fused_idx = [i for i, q in enumerate(queries)
+                     if (q.metric == "l2" and q.func in self.FUSABLE
+                         and q.epsilon is not None)]
+        rest = [i for i in range(len(queries)) if i not in fused_idx]
+
+        # --- fused on-device pass: one while_loop per func group ---
+        by_func: dict[str, List[int]] = {}
+        for i in fused_idx:
+            by_func.setdefault(queries[i].func, []).append(i)
+        for func, idxs in by_func.items():
+            t0 = time.perf_counter()
+            self.key, *keys = jax.random.split(self.key, len(idxs) + 1)
+            for i, k in zip(idxs, keys):
+                q = queries[i]
+                res = fused_l2miss(
+                    self.data.values, self._offsets,
+                    jnp.ones((self._m,), jnp.float32), k,
+                    jnp.float32(q.epsilon), q.delta, est_name=func,
+                    B=self.B, n_min=self.n_min, n_max=self.n_max,
+                    l=min(self._m + 2, 12), max_iters=self.max_iters,
+                    n_cap=self.n_cap)
+                out[i] = AQPResponse(
+                    qid=i, theta=np.asarray(res.theta),
+                    error=float(res.error), success=bool(res.success),
+                    n=np.asarray(res.n),
+                    wall_time_s=time.perf_counter() - t0)
+
+        # --- host-engine fallback (order/diff/linf/predicates/quantiles) ---
+        for i in rest:
+            t0 = time.perf_counter()
+            tr = self.engine.execute(queries[i])
+            out[i] = AQPResponse(
+                qid=i, theta=tr.theta, error=tr.error, success=tr.success,
+                n=tr.n, wall_time_s=time.perf_counter() - t0)
+        return [out[i] for i in range(len(queries))]

@@ -1,0 +1,115 @@
+"""Continuous batching for single-token decode serving.
+
+A fixed pool of B slots decodes in lockstep (one jitted decode_step per
+tick); finished or empty slots are refilled from the request queue by
+prefilling the new prompt and splicing its KV into the slot.  Per-slot
+lengths are tracked host-side; the decode step itself is shape-static so
+one compiled program serves the whole session.
+
+Splicing uses per-slot cache updates (dynamic_update_slice on the batch
+axis) -- O(slot) not O(pool).  EOS or max_new_tokens retires a slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as M
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 s_max: int = 256, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.s_max = s_max
+        self.greedy = greedy
+        self.queue: List[Request] = []
+        self.active: Dict[int, Request] = {}
+        self.lengths = np.zeros((slots,), np.int64)
+        self.budget = np.zeros((slots,), np.int64)
+        self.caches = M.init_caches(cfg, slots, S_max=s_max,
+                                    mem_len=cfg.n_frontend_tokens or 8)
+        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        self._decode = jax.jit(
+            lambda p, t, c: M.decode_step(cfg, p, t, c))
+        self._prefill1 = jax.jit(
+            lambda p, b: M.prefill(cfg, p, b))
+        self.completed: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _splice(self, slot: int, req: Request):
+        """Prefill the prompt with batch=1 and write into slot's cache row."""
+        batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+        logits, raw, _ = self._prefill1(self.params, batch)
+        one = M.caches_from_prefill(self.cfg, raw, S_max=self.s_max)
+
+        def put(pool, single):
+            # pool leaf (nr, slots, ...), single leaf (nr, 1, ...)
+            return jax.lax.dynamic_update_slice_in_dim(
+                pool, single.astype(pool.dtype), slot, axis=1)
+
+        self.caches = jax.tree.map(
+            lambda pool, sg: (put(pool, sg)
+                              if hasattr(pool, 'ndim') and pool.ndim >= 2
+                              else pool),
+            self.caches, one)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        self.tokens = self.tokens.at[slot, 0].set(nxt)
+        req.out_tokens.append(nxt)
+        self.lengths[slot] = len(req.prompt)
+        self.budget[slot] = req.max_new_tokens - 1
+        self.active[slot] = req
+
+    def _refill(self):
+        for slot in range(self.slots):
+            if slot not in self.active and self.queue:
+                self._splice(slot, self.queue.pop(0))
+
+    def step(self) -> int:
+        """One decode tick for all active slots; returns #active."""
+        self._refill()
+        if not self.active:
+            return 0
+        logits, self.caches = self._decode(self.params, self.tokens,
+                                           self.caches)
+        nxt = jnp.argmax(logits[:, 0], axis=-1)
+        self.tokens = nxt[:, None].astype(jnp.int32)
+        nxt_np = np.asarray(nxt)
+        for slot, req in list(self.active.items()):
+            tok = int(nxt_np[slot])
+            req.out_tokens.append(tok)
+            self.budget[slot] -= 1
+            self.lengths[slot] += 1
+            done = (self.budget[slot] <= 0
+                    or (req.eos_id is not None and tok == req.eos_id)
+                    or self.lengths[slot] >= self.s_max - 1)
+            if done:
+                self.completed.append(req)
+                del self.active[slot]
+        return len(self.active)
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        ticks = 0
+        while (self.queue or self.active) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.completed

@@ -1,0 +1,113 @@
+"""AdamW optimizer + LR schedules (built here -- no optax in the container).
+
+Supports reduced-precision moments (``moment_dtype=bfloat16``): at Jamba-398B
+scale, fp32 m/v would not fit 16 GB/chip HBM on the single-pod mesh (see
+EXPERIMENTS.md SS Dry-run); bf16 moments are a standard large-scale trade.
+Master weights are kept in the params' own dtype with an optional fp32
+upcast ("mixed" mode keeps fp32 masters for bf16 params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 2_000
+    total_steps: int = 100_000
+    lr_min_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"        # "float32" | "bfloat16"
+    master_fp32: bool = False            # keep fp32 master copies
+
+
+def lr_schedule(cfg: AdamWConfig, step: Array) -> Array:
+    """Linear warmup -> cosine decay to lr_min_ratio * peak."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.lr_min_ratio + (1 - cfg.lr_min_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.lr_peak * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, Array]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(
+        g.dtype), grads), gnorm
+
+
+def _mdt(cfg: AdamWConfig):
+    return jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+
+def adamw_init(cfg: AdamWConfig, params: PyTree) -> Dict[str, Any]:
+    mdt = _mdt(cfg)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(
+    cfg: AdamWConfig, grads: PyTree, state: Dict[str, Any], params: PyTree,
+) -> Tuple[PyTree, Dict[str, Any], Dict[str, Array]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = _mdt(cfg)
+    base = state.get("master", params)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                        + cfg.weight_decay * pf)
+        return m32.astype(mdt), v32.astype(mdt), pf
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(state["mu"])
+    flat_v = tdef.flatten_up_to(state["nu"])
+    flat_p = tdef.flatten_up_to(base)
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_mu = tdef.unflatten([o[0] for o in out])
+    new_nu = tdef.unflatten([o[1] for o in out])
+    new_master = tdef.unflatten([o[2] for o in out])
+    tgt_dtypes = jax.tree.leaves(jax.tree.map(lambda p: p.dtype, params))
+    new_params = tdef.unflatten([
+        pf.astype(dt) for pf, dt in zip([o[2] for o in out], tgt_dtypes)])
+    new_state = {"step": step, "mu": new_mu, "nu": new_nu}
+    if cfg.master_fp32:
+        new_state["master"] = new_master
+    metrics = {"lr": lr, "grad_norm": gnorm, "step": step}
+    return new_params, new_state, metrics

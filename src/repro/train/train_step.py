@@ -1,0 +1,83 @@
+"""Train-step factory: loss -> grads -> AdamW, with activation remat and
+microbatch gradient accumulation (lax.scan), ready for jit + NamedSharding.
+
+The returned step is a pure function
+    (params, opt_state, batch, key) -> (params, opt_state, metrics)
+that the launcher jits with in/out shardings from launch/sharding.py.
+Microbatching splits the LOCAL batch axis: each accumulation step's
+reduce-scatter (inserted by GSPMD for the data axis) overlaps the next
+microbatch's compute under XLA's latency-hiding scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models.config import ModelConfig
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    remat: Optional[str] = "dots"          # None | "full" | "dots" | "dots_no_batch"
+    microbatches: int = 1
+    z_loss: float = 0.0                    # optional logit-norm regularizer
+    unroll: bool = False                   # analysis mode: no scan-over-layers
+
+
+def build_train_step(
+    cfg: ModelConfig, tcfg: TrainConfig
+) -> Tuple[Callable, Callable]:
+    """Returns (init_fn, step_fn).
+
+    init_fn(key)                        -> (params, opt_state)
+    step_fn(params, opt_state, batch)   -> (params, opt_state, metrics)
+    """
+
+    def loss_of(params, batch):
+        return M.loss_fn(cfg, params, batch, remat=tcfg.remat,
+                         unroll=tcfg.unroll)
+
+    def init_fn(key):
+        params = M.init_model(cfg, key)
+        return params, adamw_init(tcfg.optimizer, params)
+
+    def grads_of(params, batch):
+        if tcfg.microbatches <= 1:
+            return jax.value_and_grad(loss_of)(params, batch)
+        k = tcfg.microbatches
+
+        def split(x):
+            b = x.shape[0]
+            assert b % k == 0, (b, k)
+            return x.reshape((k, b // k) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def acc_step(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_of)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        (loss_sum, g_sum), _ = jax.lax.scan(
+            acc_step, (jnp.zeros((), jnp.float32), zero), micro)
+        inv = 1.0 / k
+        grads = jax.tree.map(lambda g: g * inv, g_sum)
+        return loss_sum * inv, grads
+
+    def step_fn(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        params, opt_state, metrics = adamw_update(
+            tcfg.optimizer, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return init_fn, step_fn

@@ -1,0 +1,68 @@
+"""Baseline algorithm tests (BLK / SPS / IFocus / MiniBatch): correctness of
+their answers and the qualitative cost profile the paper reports (SS6.3)."""
+import numpy as np
+import pytest
+
+from repro.core import baselines as bl
+from repro.core import estimators
+from repro.core.l2miss import MissConfig, exact_answer, run_l2miss
+from repro.data import make_grouped
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_grouped(["normal", "exp"], 120_000, seed=3, biases=[4.0, 2.0])
+
+
+def test_norm_ppf():
+    # Spot checks against standard normal table.
+    assert bl._norm_ppf(0.975) == pytest.approx(1.959964, abs=1e-4)
+    assert bl._norm_ppf(0.5) == pytest.approx(0.0, abs=1e-6)
+    assert bl._norm_ppf(0.995) == pytest.approx(2.575829, abs=1e-4)
+
+
+def test_blk_closed_form(data):
+    res = bl.run_blk(data, "avg", epsilon=0.05, delta=0.05)
+    assert res.success
+    truth = exact_answer(data, estimators.get("avg")).ravel()
+    err = float(np.sqrt(np.sum((res.theta.ravel() - truth) ** 2)))
+    assert err <= 2 * 0.05
+    # n should be near (z sqrt(2)/eps)^2 per group (sigma ~ 1).
+    z = bl._norm_ppf(1 - 0.05 / 4)
+    expect = (z * np.sqrt(2) / 0.05) ** 2
+    assert np.all(res.n > expect / 6) and np.all(res.n < expect * 6)
+
+
+def test_blk_rejects_unsupported(data):
+    res = bl.run_blk(data, "median", epsilon=0.05, delta=0.05)
+    assert not res.success  # no closed form for quantiles
+
+
+def test_sps_full_scan_cost(data):
+    res = bl.run_sps(data, "avg", epsilon_rel=0.05, delta=0.05)
+    assert res.success
+    # Cost accounting must include the full scan (the paper's Fig 3(d) story).
+    assert res.total_sampled >= len(np.asarray(data.values))
+    truth = exact_answer(data, estimators.get("avg")).ravel()
+    err = np.abs(res.theta.ravel() - truth)
+    assert np.all(err <= 0.3)  # measure-biased estimate is coarse but sane
+
+
+def test_ifocus_orders_groups():
+    data = make_grouped(["normal", "normal", "normal"], 80_000, seed=5,
+                        biases=[1.0, 1.5, 2.0])
+    res = bl.run_ifocus(data, "avg", delta=0.05)
+    assert res.success
+    mu = res.theta.ravel()
+    assert np.all(np.diff(mu) > 0)
+
+
+def test_minibatch_terminates_but_is_costly(data):
+    res = bl.run_minibatch(data, "avg", epsilon=0.05, delta=0.05, step=400,
+                           B=100)
+    assert res.success
+    # The model-free searcher must take >= as many iterations as MISS.
+    tr = run_l2miss(data, "avg", MissConfig(
+        epsilon=0.05, delta=0.05, B=100, n_min=400, n_max=800, l=6, seed=0))
+    assert res.iterations >= 1
+    assert res.total_sampled >= tr.total_sample_size * 0.5

@@ -1,0 +1,90 @@
+"""Bootstrap backend tests: Poisson-ladder distribution, backend agreement,
+error-estimate scaling in n (the O(n^-1/2) law the error model rides on)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core import bootstrap as bs
+from repro.core import estimators, sampling
+
+
+def test_poisson_ladder_moments():
+    w = np.asarray(bs.poisson_weights(jax.random.PRNGKey(0), 400, 2048))
+    # Poisson(1): mean 1, var 1, P(0) = 1/e.
+    assert abs(w.mean() - 1.0) < 0.01
+    assert abs(w.var() - 1.0) < 0.02
+    assert abs((w == 0).mean() - np.exp(-1)) < 0.01
+    assert w.min() >= 0 and w.max() <= 10
+
+
+def test_poisson_deterministic():
+    a = bs.poisson_weights(jax.random.PRNGKey(7), 16, 64)
+    b = bs.poisson_weights(jax.random.PRNGKey(7), 16, 64)
+    assert_allclose(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("backend", ["poisson", "multinomial"])
+def test_replicates_center_on_estimate(backend):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal(4000).astype(np.float32))
+    mask = jnp.ones(4000, jnp.float32)
+    est = estimators.get("avg")
+    reps = np.asarray(bs.replicates(est, x, mask, jax.random.PRNGKey(1), 400,
+                                    backend=backend))
+    # Replicate mean ~ sample mean; replicate std ~ sigma/sqrt(n).
+    assert abs(reps.mean() - float(x.mean())) < 3.0 / np.sqrt(4000)
+    assert_allclose(reps.std(), 1.0 / np.sqrt(4000), rtol=0.25)
+
+
+def test_backends_agree_on_error_quantile():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.exponential(1.0, (1, 2000, 1)).astype(np.float32))
+    mask = jnp.ones((1, 2000), jnp.float32)
+    scale = jnp.ones((1,), jnp.float32)
+    est = estimators.get("avg")
+    e_p, _ = bs.estimate_error(est, x, mask, scale, jax.random.PRNGKey(0),
+                               0.05, B=600, backend="poisson")
+    e_m, _ = bs.estimate_error(est, x, mask, scale, jax.random.PRNGKey(0),
+                               0.05, B=600, backend="multinomial")
+    assert_allclose(float(e_p), float(e_m), rtol=0.15)
+
+
+def test_error_scales_inverse_sqrt_n():
+    rng = np.random.default_rng(5)
+    est = estimators.get("avg")
+    errs = []
+    for n in (1000, 4000, 16000):
+        x = jnp.asarray(rng.standard_normal((1, n, 1)).astype(np.float32))
+        mask = jnp.ones((1, n), jnp.float32)
+        e, _ = bs.estimate_error(est, x, mask, jnp.ones((1,), jnp.float32),
+                                 jax.random.PRNGKey(n), 0.05, B=400)
+        errs.append(float(e))
+    # e(n) ~ c n^{-1/2}: each 4x n should halve the error (within noise).
+    assert_allclose(errs[0] / errs[1], 2.0, rtol=0.3)
+    assert_allclose(errs[1] / errs[2], 2.0, rtol=0.3)
+
+
+def test_estimate_error_masks_padding():
+    est = estimators.get("avg")
+    rng = np.random.default_rng(6)
+    base = rng.standard_normal(1024).astype(np.float32)
+    x_pad = np.concatenate([base, np.full(1024, 1e6, np.float32)])
+    sample = jnp.asarray(x_pad[None, :, None])
+    mask = jnp.asarray(np.concatenate([np.ones(1024), np.zeros(1024)])[None, :],
+                       jnp.float32)
+    e, theta = bs.estimate_error(est, sample, mask, jnp.ones((1,), jnp.float32),
+                                 jax.random.PRNGKey(0), 0.05, B=200)
+    assert abs(float(theta[0, 0]) - base.mean()) < 1e-3
+    assert float(e) < 1.0  # would be ~1e6-scale if padding leaked
+
+
+def test_sum_count_population_scale():
+    rng = np.random.default_rng(8)
+    x = rng.standard_normal(30_000).astype(np.float32) + 2.0
+    data = sampling.GroupedData.from_group_arrays([x])
+    est = estimators.get("sum")
+    from repro.core.l2miss import exact_answer
+    truth = exact_answer(data, est)
+    assert_allclose(truth[0, 0], x.sum(), rtol=1e-4)

@@ -1,0 +1,97 @@
+"""Error-model unit + property tests: WLS fit, Algorithm-2 diagnostic,
+Eq.-13 closed-form prediction (KKT + feasibility identities)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core import error_model as em
+
+
+def _profile(beta, sizes, noise=0.0, seed=0):
+    rng = np.random.default_rng(seed)
+    N = np.asarray(sizes, np.float32)
+    loge = beta[0] - np.log(N) @ np.asarray(beta[1:], np.float32)
+    loge = loge + noise * rng.standard_normal(len(loge)).astype(np.float32)
+    return jnp.asarray(N), jnp.asarray(loge), jnp.ones(len(loge), jnp.float32)
+
+
+def test_fit_recovers_parameters():
+    beta = np.array([1.2, 0.3, 0.2], np.float32)
+    rng = np.random.default_rng(1)
+    sizes = rng.choice([200, 400, 800, 1600], size=(24, 2))
+    N, loge, valid = _profile(beta, sizes, noise=0.01)
+    got, r2 = em.fit_wls(N, loge, valid)
+    assert_allclose(np.asarray(got), beta, atol=0.08)
+    assert float(r2) > 0.97
+
+
+def test_fit_ignores_invalid_rows():
+    beta = np.array([0.5, 0.25, 0.25], np.float32)
+    sizes = np.array([[100, 200], [200, 100], [400, 400], [800, 200],
+                      [1, 1], [1, 1]])
+    N, loge, _ = _profile(beta, sizes)
+    loge = loge.at[4:].set(99.0)  # poisoned padding rows
+    valid = jnp.asarray([1, 1, 1, 1, 0, 0], jnp.float32)
+    got, r2 = em.fit_wls(N, loge, valid)
+    assert_allclose(np.asarray(got), beta, atol=1e-2)
+
+
+def test_prediction_is_feasible_and_kkt_optimal():
+    beta = jnp.asarray([0.8, 0.3, 0.15, 0.05], jnp.float32)
+    log_eps = jnp.log(jnp.float32(0.01))
+    n_hat = em.predict_optimal_n(beta, log_eps)
+    # Feasibility with equality: H(n-hat) == log eps.
+    assert_allclose(float(em.model_value(beta, n_hat)), float(log_eps), rtol=1e-5)
+    # KKT stationarity: n_i proportional to beta_i (from 1 = lambda b_i / n_i).
+    ratios = np.asarray(n_hat) / np.asarray(beta[1:])
+    assert_allclose(ratios, ratios[0] * np.ones_like(ratios), rtol=1e-4)
+
+
+@hypothesis.given(
+    b0=st.floats(-2, 2),
+    slopes=st.lists(st.floats(0.05, 1.0), min_size=1, max_size=5),
+    eps1=st.floats(1e-4, 0.5),
+    shrink=st.floats(0.1, 0.9),
+)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_prediction_monotone_in_epsilon(b0, slopes, eps1, shrink):
+    """Tighter bounds require (weakly) larger samples in every group."""
+    beta = jnp.asarray([b0] + slopes, jnp.float32)
+    n1 = np.asarray(em.predict_optimal_n(beta, jnp.log(jnp.float32(eps1))))
+    n2 = np.asarray(em.predict_optimal_n(beta, jnp.log(jnp.float32(eps1 * shrink))))
+    assert np.all(n2 >= n1 * 0.999)
+
+
+def test_diagnose_ok():
+    beta = jnp.asarray([1.0, 0.3, 0.2], jnp.float32)
+    out, status = em.diagnose(beta, tau=1e-3)
+    assert int(status) == em.DIAG_OK
+    assert_allclose(np.asarray(out), np.asarray(beta))
+
+
+def test_diagnose_recoverable_equalizes():
+    beta = jnp.asarray([1.0, 0.5, -0.1], jnp.float32)
+    out, status = em.diagnose(beta, tau=1e-3)
+    assert int(status) == em.DIAG_RECOVERED
+    assert_allclose(np.asarray(out)[1:], [0.2, 0.2], atol=1e-6)
+
+
+def test_diagnose_unrecoverable():
+    beta = jnp.asarray([1.0, 1e-5, -2e-5], jnp.float32)
+    out, status = em.diagnose(beta, tau=1e-3)
+    assert int(status) == em.DIAG_FAILURE
+
+
+def test_fit_and_predict_pipeline():
+    beta = np.array([0.9, 0.25, 0.25], np.float32)
+    rng = np.random.default_rng(3)
+    sizes = rng.choice([500, 1000, 2000], size=(16, 2))
+    N, loge, valid = _profile(beta, sizes, noise=0.02)
+    n_hat, fit = em.fit_and_predict(N, loge, valid, jnp.log(jnp.float32(0.005)), 1e-3)
+    assert int(fit.status) == em.DIAG_OK
+    # Plugging n_hat into the TRUE model should give ~log eps.
+    v = beta[0] - np.sum(beta[1:] * np.log(np.asarray(n_hat)))
+    assert abs(v - np.log(0.005)) < 0.25

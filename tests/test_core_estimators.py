@@ -1,0 +1,119 @@
+"""Weighted-estimator correctness: apply(aux, w) must agree with evaluating
+the plain statistic on the weight-expanded sample, for every registered f."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core import estimators
+from repro.core.estimators import evaluate
+
+SCALAR_ESTS = ["avg", "var", "std", "median", "proportion", "sum", "count"]
+
+
+def _expand(x, w):
+    """Repeat row i of x w[i] times (the semantics weights encode)."""
+    reps = np.asarray(w, np.int64)
+    return np.repeat(np.asarray(x), reps, axis=0)
+
+
+@pytest.mark.parametrize("name", SCALAR_ESTS + ["max", "min", "maxq", "minq"])
+def test_unit_weights_match_plain_statistic(name):
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(501).astype(np.float32)
+    est = estimators.get(name)
+    got = np.asarray(evaluate(est, jnp.asarray(x)))[0]
+    if name in ("avg", "proportion", "sum", "count"):
+        want = x.mean()
+    elif name == "var":
+        want = x.var()
+    elif name == "std":
+        want = x.std()
+    elif name == "median":
+        want = np.quantile(x, 0.5, method="inverted_cdf")
+    elif name == "max":
+        want = x.max()
+    elif name == "min":
+        want = x.min()
+    elif name == "maxq":
+        want = np.quantile(x, 0.99, method="inverted_cdf")
+    elif name == "minq":
+        want = np.quantile(x, 0.01, method="inverted_cdf")
+    assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@hypothesis.given(
+    x=hnp.arrays(np.float32, 40, elements=st.floats(-50, 50, width=32)),
+    w=hnp.arrays(np.int64, 40, elements=st.integers(0, 4)),
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_integer_weights_equal_repetition(x, w):
+    hypothesis.assume(w.sum() >= 2)
+    expanded = _expand(x, w)
+    for name in ("avg", "var", "median"):
+        est = estimators.get(name)
+        got = np.asarray(est.apply(est.prepare(jnp.asarray(x)),
+                                   jnp.asarray(w, jnp.float32)))[0]
+        if name == "avg":
+            want = expanded.mean()
+        elif name == "var":
+            want = expanded.var()
+        else:
+            want = np.quantile(expanded, 0.5, method="inverted_cdf")
+        assert_allclose(got, want, rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+def test_mask_excludes_padding():
+    x = np.concatenate([np.ones(10, np.float32) * 7.0, np.full(6, 1e9, np.float32)])
+    mask = np.concatenate([np.ones(10), np.zeros(6)]).astype(np.float32)
+    for name in ("avg", "var", "median", "max"):
+        est = estimators.get(name)
+        got = np.asarray(evaluate(est, jnp.asarray(x), jnp.asarray(mask)))[0]
+        want = {"avg": 7.0, "var": 0.0, "median": 7.0, "max": 7.0}[name]
+        assert_allclose(got, want, atol=1e-4, err_msg=name)
+
+
+def test_moments_finish_matches_apply():
+    rng = np.random.default_rng(5)
+    x = rng.exponential(2.0, 300).astype(np.float32)
+    w = rng.integers(0, 3, 300).astype(np.float32)
+    feats = np.stack([np.ones_like(x), x, x * x], axis=1)
+    M = jnp.asarray(w @ feats)[None, :]
+    for name in ("avg", "var", "std", "sum", "count", "proportion"):
+        est = estimators.get(name)
+        fast = np.asarray(est.moments_finish(M))[0, 0]
+        slow = np.asarray(est.apply(est.prepare(jnp.asarray(x)), jnp.asarray(w)))[0]
+        assert_allclose(fast, slow, rtol=1e-4, err_msg=name)
+
+
+def test_linreg_recovers_coefficients():
+    rng = np.random.default_rng(7)
+    X = rng.standard_normal((4000, 3)).astype(np.float32)
+    beta = np.array([0.5, -1.0, 2.0, 0.25], np.float32)  # intercept + 3
+    y = beta[0] + X @ beta[1:] + 0.01 * rng.standard_normal(4000).astype(np.float32)
+    data = np.concatenate([X, y[:, None]], axis=1)
+    est = estimators.get("linreg")
+    got = np.asarray(evaluate(est, jnp.asarray(data)))
+    assert_allclose(got, beta, atol=0.01)
+
+
+def test_logreg_recovers_coefficients():
+    rng = np.random.default_rng(9)
+    X = rng.standard_normal((20000, 2)).astype(np.float32)
+    beta = np.array([0.3, 1.5, -0.8], np.float32)
+    p = 1 / (1 + np.exp(-(beta[0] + X @ beta[1:])))
+    y = (rng.uniform(size=20000) < p).astype(np.float32)
+    data = np.concatenate([X, y[:, None]], axis=1)
+    est = estimators.get("logreg")
+    got = np.asarray(evaluate(est, jnp.asarray(data)))
+    assert_allclose(got, beta, atol=0.12)
+
+
+def test_registry_contents():
+    for name in SCALAR_ESTS + ["max", "min", "linreg", "logreg"]:
+        assert estimators.get(name).name == name
+    assert estimators.get("sum").needs_population_scale
+    assert not estimators.get("max").bootstrap_consistent

@@ -1,0 +1,117 @@
+"""SS5 extension tests: OrderBound vs brute force (property), the theorem
+implications behind every Gamma conversion (property), and end-to-end
+OrderMiss / MaxMiss / DiffMiss runs."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core import extensions as ext
+from repro.core.l2miss import MissConfig, exact_answer
+from repro.core import estimators
+from repro.data import make_grouped
+
+vec = hnp.arrays(np.float64, st.integers(2, 8),
+                 elements=st.floats(-100, 100, allow_nan=False))
+
+
+@hypothesis.given(theta=vec)
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_orderbound_matches_bruteforce(theta):
+    fast = float(ext.order_bound(jnp.asarray(theta)))
+    slow = ext.order_bound_bruteforce(theta)
+    assert_allclose(fast, slow, rtol=1e-5, atol=1e-7)
+
+
+@hypothesis.given(theta=vec, dhat=vec)
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_linf_implication(theta, dhat):
+    """Thm 10: d_L2 <= eps  =>  d_Linf <= eps."""
+    n = min(len(theta), len(dhat))
+    t, th = theta[:n], theta[:n] + dhat[:n]
+    l2 = ext.metric_value("l2", th, t)
+    linf = ext.metric_value("linf", th, t)
+    assert linf <= l2 + 1e-9
+
+
+@hypothesis.given(theta=vec, dhat=vec)
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_l1_implication(theta, dhat):
+    """d_L1 <= sqrt(m) d_L2 (the LpMiss p=1 conversion)."""
+    n = min(len(theta), len(dhat))
+    t, th = theta[:n], theta[:n] + dhat[:n]
+    assert ext.metric_value("l1", th, t) <= np.sqrt(n) * ext.metric_value(
+        "l2", th, t) + 1e-9
+
+
+@hypothesis.given(theta=vec, dhat=vec)
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_diff_implication(theta, dhat):
+    """Thm 13: d_L2 <= eps/sqrt(2)  =>  d_Delta <= eps."""
+    n = min(len(theta), len(dhat))
+    t, th = theta[:n], theta[:n] + dhat[:n]
+    d_delta = ext.metric_value("diff", th, t)
+    d_l2 = ext.metric_value("l2", th, t)
+    assert d_delta <= np.sqrt(2.0) * d_l2 + 1e-9
+
+
+@hypothesis.given(theta=vec, scale=st.floats(0.01, 0.99))
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_order_implication(theta, scale):
+    """Thm 11: d_L2(th-hat, th) <= OrderBound(th)  =>  same ordering.
+
+    We perturb theta by a random direction of length scale*bound and check
+    the ordering survives."""
+    t = np.asarray(theta)
+    bound = ext.order_bound_bruteforce(t)
+    hypothesis.assume(np.isfinite(bound) and bound > 1e-9)
+    rng = np.random.default_rng(0)
+    d = rng.standard_normal(len(t))
+    d = d / np.linalg.norm(d) * bound * scale
+    assert ext.metric_value("order", t + d, t) == 0.0
+
+
+def test_gamma_values():
+    assert ext.gamma_linf(0.3, 7) == 0.3
+    assert ext.gamma_lp(0.3, 4, p=1) == pytest.approx(0.15)
+    assert ext.gamma_lp(0.3, 4, p=3) == 0.3
+    assert ext.gamma_diff(0.4, 9) == pytest.approx(0.4 / np.sqrt(2))
+
+
+@pytest.fixture(scope="module")
+def biased_groups():
+    # Well-separated group means so OrderMiss has a usable gap.
+    return make_grouped(["normal", "normal", "normal"], 100_000, seed=2,
+                        biases=[1.0, 2.0, 3.0])
+
+
+def test_ordermiss_preserves_order(biased_groups):
+    cfg = MissConfig(epsilon=0.0, delta=0.05, B=150, n_min=400, n_max=800,
+                     l=8, seed=0, max_iters=40)
+    tr = ext.run_ordermiss(biased_groups, "avg", cfg)
+    assert tr.success
+    truth = exact_answer(biased_groups, estimators.get("avg")).ravel()
+    assert ext.metric_value("order", tr.theta.ravel(), truth) == 0.0
+    # Gap is ~1.0, so eps' ~ 1/sqrt(2); tiny samples should suffice.
+    assert tr.total_sample_size < 50_000
+
+
+def test_maxmiss_bound(biased_groups):
+    cfg = MissConfig(epsilon=0.05, delta=0.05, B=150, n_min=400, n_max=800,
+                     l=8, seed=0, max_iters=40)
+    tr = ext.run_maxmiss(biased_groups, "avg", cfg)
+    assert tr.success
+    truth = exact_answer(biased_groups, estimators.get("avg")).ravel()
+    assert ext.metric_value("linf", tr.theta.ravel(), truth) <= 2 * 0.05
+
+
+def test_diffmiss_bound(biased_groups):
+    cfg = MissConfig(epsilon=0.08, delta=0.05, B=150, n_min=400, n_max=800,
+                     l=8, seed=0, max_iters=40)
+    tr = ext.run_diffmiss(biased_groups, "avg", cfg)
+    assert tr.success
+    truth = exact_answer(biased_groups, estimators.get("avg")).ravel()
+    assert ext.metric_value("diff", tr.theta.ravel(), truth) <= 2 * 0.08

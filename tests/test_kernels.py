@@ -1,0 +1,212 @@
+"""Per-kernel validation (interpret=True on CPU) against pure-jnp oracles:
+shape/dtype sweeps + statistical identities, per the kernel test contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels import prng
+from repro.kernels.decode_attention import ops as da_ops
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.poisson_bootstrap import ops as pb_ops
+from repro.kernels.poisson_bootstrap import ref as pb_ref
+from repro.kernels.poisson_bootstrap.kernel import poisson_bootstrap_moments
+from repro.kernels.segment_agg import ops as sa_ops
+from repro.kernels.segment_agg.ref import segment_aggregate_ref
+
+# ---------------------------------------------------------------------------
+# prng
+# ---------------------------------------------------------------------------
+
+
+def test_prng_uniformity_and_determinism():
+    rows = jax.lax.broadcasted_iota(jnp.uint32, (256, 256), 0)
+    cols = jax.lax.broadcasted_iota(jnp.uint32, (256, 256), 1)
+    u = np.asarray(prng.uniform01(prng.hash3(jnp.uint32(1), rows, cols)))
+    assert 0.0 <= u.min() and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 0.01
+    assert abs(u.var() - 1 / 12) < 0.005
+    u2 = np.asarray(prng.uniform01(prng.hash3(jnp.uint32(1), rows, cols)))
+    assert_allclose(u, u2)
+    u3 = np.asarray(prng.uniform01(prng.hash3(jnp.uint32(2), rows, cols)))
+    assert not np.allclose(u, u3)
+
+
+def test_prng_poisson_ladder_matches_core():
+    from repro.core.bootstrap import _POISSON1_CDF
+
+    assert tuple(prng.POISSON1_CDF) == tuple(_POISSON1_CDF)
+
+
+# ---------------------------------------------------------------------------
+# poisson_bootstrap
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,B,tb,tn", [
+    (512, 256, 256, 512),
+    (1000, 500, 256, 512),
+    (4096, 512, 128, 1024),
+    (300, 128, 128, 512),
+])
+def test_poisson_bootstrap_kernel_vs_oracle(n, B, tb, tn):
+    rng = np.random.default_rng(n + B)
+    x = jnp.asarray(rng.exponential(1.0, n).astype(np.float32))
+    mask = jnp.asarray((rng.uniform(size=n) > 0.1).astype(np.float32))
+    n_pad = ((n + tn - 1) // tn) * tn
+    B_pad = ((B + tb - 1) // tb) * tb
+    feats = pb_ops.build_feats(x, mask, n_pad)
+    seed = jnp.asarray([123], jnp.uint32)
+    got = poisson_bootstrap_moments(feats, seed, B_pad, tb=tb, tn=tn,
+                                    interpret=True)
+    want = pb_ref.poisson_bootstrap_moments_ref(feats, seed, B_pad)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=1e-2)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_poisson_bootstrap_dtype_cast(dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(700).astype(dtype))
+    mask = jnp.ones(700, jnp.float32)
+    M = pb_ops.bootstrap_moments(x, mask, jnp.uint32(5), B=256, interpret=True)
+    assert M.shape == (256, 5)
+    assert M.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(M)))
+
+
+def test_poisson_bootstrap_replicate_statistics():
+    """Replicate means must center on the sample mean with sd sigma/sqrt(n)."""
+    rng = np.random.default_rng(1)
+    n = 2048
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    mask = jnp.ones(n, jnp.float32)
+    M = np.asarray(pb_ops.bootstrap_moments(x, mask, jnp.uint32(9), B=512,
+                                            interpret=True))
+    means = M[:, 1] / M[:, 0]
+    assert abs(means.mean() - float(x.mean())) < 4 / np.sqrt(n)
+    assert_allclose(means.std(), 1 / np.sqrt(n), rtol=0.3)
+    # Total resample counts ~ Poisson(n): sd sqrt(n).
+    assert_allclose(M[:, 0].mean(), n, rtol=0.05)
+
+
+def test_estimate_error_moments_matches_jnp_path():
+    from repro.core import bootstrap as bs
+    from repro.core import estimators
+
+    rng = np.random.default_rng(2)
+    sample = jnp.asarray(rng.exponential(1.0, (3, 1024, 1)).astype(np.float32))
+    mask = jnp.ones((3, 1024), jnp.float32)
+    scale = jnp.ones((3,), jnp.float32)
+    for est_name in ("avg", "var", "sum"):
+        e_k, th_k = pb_ops.estimate_error_moments(
+            est_name, sample, mask, scale, jax.random.PRNGKey(0), 0.05,
+            B=256, interpret=True)
+        e_j, th_j = bs.estimate_error(
+            estimators.get(est_name), sample, mask, scale,
+            jax.random.PRNGKey(0), 0.05, B=256)
+        assert_allclose(np.asarray(th_k), np.asarray(th_j), rtol=1e-4)
+        # Different RNG streams: errors agree within bootstrap quantile noise.
+        assert_allclose(float(e_k), float(e_j), rtol=0.3)
+
+
+# ---------------------------------------------------------------------------
+# segment_agg
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m,tn", [
+    (2048, 4, 1024),
+    (5000, 9, 1024),
+    (1024, 128, 512),
+    (999, 2, 512),
+])
+def test_segment_agg_vs_oracle(n, m, tn):
+    rng = np.random.default_rng(n + m)
+    gid = jnp.asarray(rng.integers(0, m, n).astype(np.int32))
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    mask = jnp.asarray((rng.uniform(size=n) > 0.05).astype(np.float32))
+    got = sa_ops.segment_aggregate(gid, x, mask, m, tn=tn, interpret=True)
+    want = segment_aggregate_ref(x=x, gid=gid, mask=mask, m=m)
+    for key in ("count", "sum", "sumsq", "sum3", "sum4"):
+        assert_allclose(np.asarray(got[key]), np.asarray(want[key]),
+                        rtol=2e-4, atol=2e-3, err_msg=key)
+    # min/max only defined for non-empty groups.
+    nonempty = np.asarray(want["count"]) > 0
+    assert_allclose(np.asarray(got["min"])[nonempty],
+                    np.asarray(want["min"])[nonempty], rtol=1e-6)
+    assert_allclose(np.asarray(got["max"])[nonempty],
+                    np.asarray(want["max"])[nonempty], rtol=1e-6)
+
+
+def test_segment_agg_group_means_match_numpy():
+    rng = np.random.default_rng(3)
+    n, m = 4096, 7
+    gid = rng.integers(0, m, n).astype(np.int32)
+    x = rng.exponential(2.0, n).astype(np.float32)
+    got = sa_ops.segment_aggregate(jnp.asarray(gid), jnp.asarray(x),
+                                   jnp.ones(n, jnp.float32), m, interpret=True)
+    means = np.asarray(got["sum"]) / np.asarray(got["count"])
+    for g in range(m):
+        assert_allclose(means[g], x[gid == g].mean(), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,d,S,tk", [
+    (1, 8, 2, 128, 1024, 512),
+    (2, 4, 4, 64, 600, 256),    # kv_len not a tile multiple
+    (1, 16, 8, 128, 512, 128),
+    (2, 8, 1, 128, 768, 256),   # MQA
+])
+def test_decode_attention_vs_oracle(B, Hq, Hkv, d, S, tk):
+    rng = np.random.default_rng(B * 1000 + S)
+    q = jnp.asarray(rng.standard_normal((B, Hq, d)).astype(np.float32)) * 0.3
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, d)).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, d)).astype(np.float32))
+    got = da_ops.decode_attention(q, k, v, kv_len=S, tk=tk, interpret=True)
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, d)
+    kk = k.transpose(0, 2, 1, 3)
+    vv = v.transpose(0, 2, 1, 3)
+    want = jax.vmap(lambda a, b, c: decode_attention_ref(a, b, c, kv_len=S))(
+        qg, kk, vv).reshape(B, Hq, d)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_respects_kv_len():
+    """Entries beyond kv_len must not contribute."""
+    rng = np.random.default_rng(5)
+    B, Hq, Hkv, d, S = 1, 4, 2, 64, 512
+    q = jnp.asarray(rng.standard_normal((B, Hq, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, d)).astype(np.float32))
+    # Poison the tail.
+    k = k.at[:, 300:].set(100.0)
+    v = v.at[:, 300:].set(1e9)
+    got = da_ops.decode_attention(q, k, v, kv_len=300, tk=256, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    assert float(jnp.max(jnp.abs(got))) < 100.0
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_dtypes(dtype):
+    rng = np.random.default_rng(6)
+    B, Hq, Hkv, d, S = 1, 8, 4, 128, 512
+    q = jnp.asarray(rng.standard_normal((B, Hq, d)), dtype) * 0.3
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, d)), dtype) * 0.3
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, d)), dtype)
+    got = da_ops.decode_attention(q, k, v, kv_len=S, tk=256, interpret=True)
+    assert got.dtype == dtype
+    qg = np.asarray(q, np.float32).reshape(B, Hkv, 2, d)
+    want = jax.vmap(lambda a, b, c: decode_attention_ref(a, b, c, kv_len=S))(
+        jnp.asarray(qg),
+        jnp.asarray(np.asarray(k, np.float32).transpose(0, 2, 1, 3)),
+        jnp.asarray(np.asarray(v, np.float32).transpose(0, 2, 1, 3)),
+    ).reshape(B, Hq, d)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-4
+    assert_allclose(np.asarray(got, np.float32), np.asarray(want), rtol=tol,
+                    atol=tol)

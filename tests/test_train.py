@@ -1,0 +1,184 @@
+"""Training-substrate tests: optimizer math, microbatch-grad equivalence,
+atomic/async checkpointing with CRC + resharding restore, int8 EF
+compression, elastic mesh planning."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.train import checkpoint as ckpt
+from repro.train import compression as comp
+from repro.train.elastic import StepWatchdog, degrade_ladder, plan_mesh
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   clip_by_global_norm, lr_schedule)
+from repro.train.train_step import TrainConfig, build_train_step
+from repro.models.config import ModelConfig
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(1e-3)
+    assert lrs[-1] == pytest.approx(1e-4, rel=0.05)
+    assert all(a >= b for a, b in zip(lrs[1:], lrs[2:]))  # monotone decay
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 3.0, "b": jnp.ones((3,)) * 4.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(9 * 4 + 16 * 3))
+    total = np.sqrt(sum(float(jnp.sum(x**2)) for x in
+                        jax.tree.leaves(clipped)))
+    assert total == pytest.approx(1.0, rel=1e-5)
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr_peak=0.1, warmup_steps=1, total_steps=200,
+                      weight_decay=0.0, grad_clip=100.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(cfg, params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(cfg, grads, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_adamw_bf16_moments():
+    cfg = AdamWConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    state = adamw_init(cfg, params)
+    assert state["mu"]["w"].dtype == jnp.bfloat16
+    params2, state2, _ = adamw_update(cfg, {"w": jnp.ones((8,), jnp.bfloat16)},
+                                      state, params)
+    assert params2["w"].dtype == jnp.bfloat16
+    assert int(state2["step"]) == 1
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                       n_heads=2, n_kv_heads=1, d_ff=64, vocab_size=64,
+                       dtype="float32").validate()
+
+
+def _batch(B=4, S=16, vocab=64, seed=0):
+    rng = np.random.default_rng(seed)
+    t = rng.integers(0, vocab, (B, S + 1))
+    return {"tokens": jnp.asarray(t[:, :-1], jnp.int32),
+            "labels": jnp.asarray(t[:, 1:], jnp.int32)}
+
+
+def test_microbatch_matches_full_batch(tiny_cfg):
+    """Accumulated microbatch gradients == single big-batch gradients."""
+    t_full = TrainConfig(microbatches=1, remat=None)
+    t_micro = TrainConfig(microbatches=4, remat=None)
+    init_f, step_f = build_train_step(tiny_cfg, t_full)
+    _, step_m = build_train_step(tiny_cfg, t_micro)
+    params, opt = init_f(jax.random.PRNGKey(0))
+    batch = _batch(B=8)
+    p1, _, m1 = step_f(params, opt, batch)
+    p2, _, m2 = step_m(params, opt, batch)
+    assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+
+def test_remat_matches_no_remat(tiny_cfg):
+    t_plain = TrainConfig(microbatches=1, remat=None)
+    t_remat = TrainConfig(microbatches=1, remat="full")
+    init_f, step_p = build_train_step(tiny_cfg, t_plain)
+    _, step_r = build_train_step(tiny_cfg, t_remat)
+    params, opt = init_f(jax.random.PRNGKey(0))
+    batch = _batch()
+    p1, _, m1 = step_p(params, opt, batch)
+    p2, _, m2 = step_r(params, opt, batch)
+    assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)}}
+    ckpt.save(str(tmp_path), 7, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    out = ckpt.restore(str(tmp_path), 7, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_crc_detects_corruption(tmp_path):
+    tree = {"a": jnp.ones((16,))}
+    path = ckpt.save(str(tmp_path), 1, tree)
+    fn = os.path.join(path, "arr_00000.npy")
+    raw = bytearray(open(fn, "rb").read())
+    raw[-1] ^= 0xFF
+    open(fn, "wb").write(bytes(raw))
+    with pytest.raises(IOError, match="CRC"):
+        ckpt.restore(str(tmp_path), 1, tree)
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    tree = {"a": jnp.ones((2,))}
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, tree, keep=2)
+    steps = sorted(os.listdir(str(tmp_path)))
+    assert steps == ["step_00000003", "step_00000004"]
+
+
+def test_async_checkpointer(tmp_path):
+    tree = {"a": jnp.arange(8.0)}
+    ac = ckpt.AsyncCheckpointer(str(tmp_path))
+    ac.save(3, tree)
+    ac.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+def test_quantize_roundtrip_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000).astype(np.float32))
+    q, s = comp.quantize_int8(x)
+    err = np.abs(np.asarray(comp.dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-7
+
+
+def test_error_feedback_corrects_bias():
+    """Sum over steps of EF-compressed values converges to sum of inputs."""
+    rng = np.random.default_rng(1)
+    resid = jnp.zeros((256,))
+    total_sent = np.zeros((256,))
+    total_true = np.zeros((256,))
+    for t in range(50):
+        x = jnp.asarray(rng.standard_normal(256).astype(np.float32) * 0.01)
+        q, s, resid = comp.ef_quantize(x, resid)
+        total_sent += np.asarray(comp.dequantize_int8(q, s))
+        total_true += np.asarray(x)
+    # Residual bounds the cumulative discrepancy (unbiased over time).
+    assert np.abs(total_sent - total_true).max() <= \
+        np.abs(np.asarray(resid)).max() + 1e-6
+
+
+def test_plan_mesh_and_ladder():
+    p = plan_mesh(512, model_parallel=16, pods=2)
+    assert p.shape == (2, 16, 16) and p.axes == ("pod", "data", "model")
+    p = plan_mesh(256, model_parallel=16)
+    assert p.shape == (16, 16)
+    p = plan_mesh(24, model_parallel=16)   # 24 % 16 != 0 -> fall back
+    assert p.n_devices == 24
+    ladder = degrade_ladder(512, model_parallel=16, pods=2)
+    assert ladder[0].n_devices == 512
+    assert ladder[-1].n_devices >= 16
+
+
+def test_watchdog_flags_straggler():
+    import time
+
+    dog = StepWatchdog(factor=5.0)
+    for _ in range(3):
+        dog.start(); time.sleep(0.01); assert not dog.stop()
+    dog.start(); time.sleep(0.2)
+    assert dog.stop()
