@@ -1,0 +1,99 @@
+"""SampleStore benchmark: fresh-resample vs incremental permuted-prefix.
+
+Two measurements per (m, N, iters) point:
+
+  * substrate microbench -- replay a MISS-like geometric growth schedule
+    n_k = n0 * g^k through (a) fresh stratified resampling every iteration
+    (the pre-SampleStore behaviour) and (b) one incremental SampleStore;
+    report rows touched and wall time for each.
+  * end-to-end -- run_l2miss (which now samples through a store) and compare
+    ``MissTrace.total_sampled`` (delta-based rows actually gathered) against
+    the fresh-resample cost ``sum_k sum_i n_k`` recomputed from the trace's
+    size profile.
+
+Incremental must touch strictly fewer rows than fresh for every >= 3
+iteration schedule (ISSUE 1 acceptance); the ratio is emitted as ``save``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.l2miss import MissConfig, run_l2miss
+from repro.core.sampling import (
+    GroupedData, SampleStore, bucket_cap, stratified_sample)
+from repro.data import make_grouped
+
+from .common import CsvEmitter
+
+
+def _schedule(n0: int, growth: float, iters: int, sizes: np.ndarray):
+    """Geometric per-group growth clipped to the group extents."""
+    return [np.minimum((n0 * growth**k) // 1, sizes).astype(np.int64)
+            for k in range(iters)]
+
+
+def _fresh_rows_and_time(data: GroupedData, schedule) -> tuple[int, float]:
+    key = jax.random.PRNGKey(0)
+    offs = jnp.asarray(data.offsets)
+    rows = 0
+    t0 = time.perf_counter()
+    for n_vec in schedule:
+        key, sub = jax.random.split(key)
+        cap = bucket_cap(int(n_vec.max()))
+        s, mk = stratified_sample(sub, data.values, offs,
+                                  jnp.asarray(n_vec), cap)
+        s.block_until_ready()
+        rows += int(n_vec.sum())
+    return rows, time.perf_counter() - t0
+
+
+def _incremental_rows_and_time(data: GroupedData, schedule) -> tuple[int, float]:
+    store = SampleStore(data, seed=0)
+    t0 = time.perf_counter()
+    for n_vec in schedule:
+        s, mk = store.sample(n_vec)
+        s.block_until_ready()
+    return store.rows_touched, time.perf_counter() - t0
+
+
+def run(emit: CsvEmitter, *, full: bool = False, trials: int = 0):
+    del trials
+    points = [
+        # (m groups, rows per group, n0, growth, iterations)
+        (2, 75_000, 400, 2.0, 6),
+        (8, 25_000, 200, 2.0, 8),
+        (32, 8_000, 100, 1.6, 10),
+    ]
+    if full:
+        points += [(8, 250_000, 1000, 2.0, 10), (64, 40_000, 200, 1.8, 12)]
+
+    for m, per_group, n0, growth, iters in points:
+        data = make_grouped(["normal"] * m, per_group * m, seed=1,
+                            biases=list(np.arange(m, dtype=np.float64)))
+        sched = _schedule(n0, growth, iters, data.sizes)
+        fresh_rows, fresh_t = _fresh_rows_and_time(data, sched)
+        inc_rows, inc_t = _incremental_rows_and_time(data, sched)
+        label = f"store/m{m}-N{per_group * m}-it{iters}"
+        emit.add(f"{label}/fresh", fresh_t, {"rows": fresh_rows})
+        emit.add(f"{label}/incremental", inc_t, {
+            "rows": inc_rows,
+            "save": round(1.0 - inc_rows / max(fresh_rows, 1), 3)})
+        assert inc_rows < fresh_rows, (
+            f"incremental touched {inc_rows} >= fresh {fresh_rows}")
+
+    # --- end-to-end: MISS run cost, delta-based vs fresh accounting ---
+    data = make_grouped(["normal", "exp"], 300_000, seed=2, biases=[5.0, 3.0])
+    cfg = MissConfig(epsilon=0.02, delta=0.05, B=200, n_min=400, n_max=800,
+                     l=6, seed=0, max_iters=40)
+    t0 = time.perf_counter()
+    tr = run_l2miss(data, "avg", cfg)
+    dt = time.perf_counter() - t0
+    fresh_equiv = int(tr.profile_n.sum())
+    emit.add("store/e2e-l2miss", dt, {
+        "status": tr.status, "iters": tr.iterations,
+        "rows_delta": tr.total_sampled, "rows_fresh_equiv": fresh_equiv,
+        "save": round(1.0 - tr.total_sampled / max(fresh_equiv, 1), 3)})

@@ -18,7 +18,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale data sizes (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="fig1|fig2|fig3|fig4|kern|roofline")
+                    help="fig1|fig2|fig3|fig4|kern|roofline|store")
     ap.add_argument("--trials", type=int, default=40,
                     help="simulated-confidence trials")
     args = ap.parse_args()
@@ -45,6 +45,9 @@ def main() -> None:
     if only in (None, "roofline"):
         from . import bench_roofline
         bench_roofline.run(emit)
+    if only in (None, "store"):
+        from . import bench_sample_store
+        bench_sample_store.run(emit, full=args.full)
 
 
 if __name__ == "__main__":

@@ -80,16 +80,30 @@ def sharded_group_stats(mesh, gid: Array, x: Array, m: int):
 def sharded_bootstrap_estimate(
     mesh, gid: Array, x: Array, m: int, rate: Array, seed: int,
     *, B: int = 200, delta: float = 0.05, est_name: str = "avg",
+    sample_seed: "int | None" = None,
 ) -> Tuple[Array, Array]:
     """Distributed (sample -> Poisson bootstrap -> L2 error, theta-hat).
 
     ``rate (m,)``: per-group Bernoulli sampling rate (n_g / |D|_g). Rows are
     sampled shard-locally; every replicate's moments are shard-local
     matmuls; one psum of (m, B+1, 3) crosses the network.
+
+    ``sample_seed`` is the distributed analogue of the SampleStore's permuted
+    prefix (DESIGN.md SS3.2): each row's keep-threshold u is a pure function
+    of (sample_seed, row, shard), i.e. a shard-local permutation of the rows
+    ordered by u, and Bernoulli(rate) keeps exactly the u < rate prefix of
+    it.  Calling again with a larger ``rate`` and the SAME ``sample_seed``
+    therefore yields a strict superset of rows -- MISS iterations refine,
+    not replace, the sample, and the psum contract ((m, B+1, 3) partials)
+    is unchanged.  Defaults to ``seed`` (bootstrap weights use a distinct
+    derived stream either way); pass a fixed value across iterations to get
+    nested samples while re-randomizing the bootstrap via ``seed``.
     """
     est = estimators.get(est_name)
     if est.moments_finish is None:
         raise ValueError(f"{est_name} is not a moment estimator")
+    if sample_seed is None:
+        sample_seed = seed
 
     def local(gid_l, x_l):
         n_l = gid_l.shape[0]
@@ -99,7 +113,7 @@ def sharded_bootstrap_estimate(
         # --- shard-local Bernoulli(rate_g) sampling via counter PRNG ---
         rows = jnp.arange(n_l, dtype=jnp.uint32)
         u = prng.uniform01(prng.hash3(
-            jnp.uint32(seed), rows, jnp.full_like(rows, shard)))
+            jnp.uint32(sample_seed), rows, jnp.full_like(rows, shard)))
         sampled = valid & (u < rate[g])
         w_mask = sampled.astype(jnp.float32)
         feats = jnp.stack([w_mask, w_mask * x_l, w_mask * x_l * x_l], axis=1)

@@ -4,6 +4,14 @@ Single-host path: GroupedData + core L2Miss/extensions (the paper's system).
 Distributed path (aqp/distributed.py): dataset sharded over the mesh's data
 axis; sampling, bootstrap moments and exact GROUP BY all run shard-local
 with only (m x moments) partials crossing the interconnect.
+
+The engine owns one resident :class:`~repro.core.sampling.SampleStore` per
+dataset (DESIGN.md SS3.2): pilot estimates, every MISS iteration, and every
+query served by this engine draw nested permuted prefixes from it, so the
+cumulative rows touched across a workload grows with the *largest* sample
+needed, not the sum of every redraw.  Predicate queries bind their derived
+indicator column to the same permutations (``store.bind``), reusing the row
+choices while reading different values.
 """
 from __future__ import annotations
 
@@ -16,7 +24,7 @@ import numpy as np
 from ..core import estimators, extensions
 from ..core.framework import MissTrace
 from ..core.l2miss import MissConfig, run_l2miss
-from ..core.sampling import GroupedData
+from ..core.sampling import GroupedData, SampleStore
 from .query import Query
 
 
@@ -28,15 +36,32 @@ class AQPEngine:
     n_max: int = 2000
     seed: int = 0
     use_kernel: bool = False
+    store: Optional[SampleStore] = None
+
+    def __post_init__(self):
+        if self.store is None:
+            self.store = SampleStore(self.data, seed=self.seed)
+
+    @property
+    def rows_touched(self) -> int:
+        """Cumulative rows gathered across every query served so far."""
+        return self.store.rows_touched
+
+    def refresh(self, data: Optional[GroupedData] = None) -> None:
+        """Invalidate the resident store after a data update."""
+        if data is not None:
+            self.data = data
+        self.store.refresh(self.data)
 
     def _pilot_scale(self, q: Query) -> float:
-        """|theta| scale for relative bounds, from a small pilot sample."""
-        est = estimators.get(q.func)
-        rng = np.random.default_rng(self.seed + 1)
-        from ..core.sampling import stratified_sample_host
+        """|theta| scale for relative bounds, from a small pilot sample.
 
+        The pilot reads the store's permuted prefix, so the MISS run that
+        follows extends these exact rows instead of redrawing.
+        """
+        est = estimators.get(q.func)
         n_vec = np.minimum(2000, self.data.sizes)
-        sample, mask = stratified_sample_host(rng, self.data, n_vec, 2048)
+        sample, mask = self.store.sample(n_vec)
         th = jax.vmap(lambda xg, mg: est.apply(est.prepare(xg), mg))(
             sample, mask)
         scale = (self.data.scale if est.needs_population_scale
@@ -50,24 +75,28 @@ class AQPEngine:
 
     def execute(self, q: Query) -> MissTrace:
         data = self.data
+        store = self.store
         if q.predicate is not None:
             vals = np.asarray(data.values)
             ind = q.predicate(vals).astype(np.float32)
             data = GroupedData(ind, data.offsets.copy(), data.scale.copy())
+            # Same permutations, different column: the predicate query reuses
+            # the store's row choices (and keeps its nested-prefix guarantee).
+            store = self.store.bind(data.values)
         eps = q.epsilon
         if eps is None and q.metric != "order":
             eps = q.epsilon_rel * self._pilot_scale(q)
         cfg = self._config(q, eps if eps is not None else 0.0)
         if q.metric == "l2":
-            return run_l2miss(data, q.func, cfg)
+            return run_l2miss(data, q.func, cfg, store=store)
         if q.metric == "linf":
-            return extensions.run_maxmiss(data, q.func, cfg)
+            return extensions.run_maxmiss(data, q.func, cfg, store=store)
         if q.metric == "l1":
-            return extensions.run_lpmiss(data, q.func, cfg, p=1)
+            return extensions.run_lpmiss(data, q.func, cfg, p=1, store=store)
         if q.metric == "diff":
-            return extensions.run_diffmiss(data, q.func, cfg)
+            return extensions.run_diffmiss(data, q.func, cfg, store=store)
         if q.metric == "order":
-            return extensions.run_ordermiss(data, q.func, cfg)
+            return extensions.run_ordermiss(data, q.func, cfg, store=store)
         raise ValueError(q.metric)
 
     def exact(self, q: Query) -> np.ndarray:

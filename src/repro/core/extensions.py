@@ -78,27 +78,31 @@ def gamma_diff(eps: float, m: int) -> float:
 # Extension drivers (Algorithm 4)
 # ---------------------------------------------------------------------------
 
-def run_maxmiss(data: GroupedData, estimator, cfg: MissConfig) -> MissTrace:
+def run_maxmiss(data: GroupedData, estimator, cfg: MissConfig,
+                store=None) -> MissTrace:
     cfg2 = dataclasses.replace(cfg, epsilon=gamma_linf(cfg.epsilon, data.num_groups))
-    return run_l2miss(data, estimator, cfg2)
+    return run_l2miss(data, estimator, cfg2, store=store)
 
 
-def run_lpmiss(data: GroupedData, estimator, cfg: MissConfig, p: float) -> MissTrace:
+def run_lpmiss(data: GroupedData, estimator, cfg: MissConfig, p: float,
+               store=None) -> MissTrace:
     cfg2 = dataclasses.replace(cfg, epsilon=gamma_lp(cfg.epsilon, data.num_groups, p))
-    return run_l2miss(data, estimator, cfg2)
+    return run_l2miss(data, estimator, cfg2, store=store)
 
 
-def run_diffmiss(data: GroupedData, estimator, cfg: MissConfig) -> MissTrace:
+def run_diffmiss(data: GroupedData, estimator, cfg: MissConfig,
+                 store=None) -> MissTrace:
     cfg2 = dataclasses.replace(cfg, epsilon=gamma_diff(cfg.epsilon, data.num_groups))
-    return run_l2miss(data, estimator, cfg2)
+    return run_l2miss(data, estimator, cfg2, store=store)
 
 
-def run_normalmiss(data: GroupedData, estimator, cfg: MissConfig) -> MissTrace:
+def run_normalmiss(data: GroupedData, estimator, cfg: MissConfig,
+                   store=None) -> MissTrace:
     """NormalMiss (paper SS6.2): L2Miss with the CLT Gaussian-replicate
     ESTIMATE instead of the bootstrap -- B cheap draws, valid exactly where
     BLK's normality assumptions hold."""
     cfg2 = dataclasses.replace(cfg, backend="normal")
-    return run_l2miss(data, estimator, cfg2)
+    return run_l2miss(data, estimator, cfg2, store=store)
 
 
 def run_ordermiss(
@@ -109,6 +113,7 @@ def run_ordermiss(
     pilot_n: int = 2000,
     pilot_repeats: int = 4,
     seed: Optional[int] = None,
+    store=None,
 ) -> MissTrace:
     """OrderMiss (SS5.3): the bound depends on theta-hat, so we first compute a
     pilot estimate (averaged over a few samples, as the paper suggests), run
@@ -123,18 +128,31 @@ def run_ordermiss(
     m = data.num_groups
     n_vec = jnp.minimum(jnp.full((m,), pilot_n), jnp.asarray(data.sizes))
     thetas = []
-    for _ in range(pilot_repeats):
-        key, sub = jax.random.split(key)
-        sample, mask = S.stratified_sample(
-            sub, data.values, jnp.asarray(data.offsets), n_vec,
-            S.bucket_cap(pilot_n))
-        th = jax.vmap(lambda xg, mg: est.apply(est.prepare(xg), mg))(sample, mask)
-        thetas.append(np.asarray(th))
+    if store is not None:
+        # Pilot rows come from the resident store's permutation.  The paper's
+        # averaging over independent pilots is kept via STACKED windows
+        # (repeat r reads slots [r*n, (r+1)*n) -- disjoint draws); their
+        # union is a prefix the subsequent L2Miss run re-reads, not re-draws.
+        n_pilot = np.minimum(pilot_n, data.sizes)
+        for r in range(pilot_repeats):
+            sample, mask = store.sample(n_pilot, base=r * n_pilot)
+            th = jax.vmap(lambda xg, mg: est.apply(est.prepare(xg), mg))(
+                sample, mask)
+            thetas.append(np.asarray(th))
+    else:
+        for _ in range(pilot_repeats):
+            key, sub = jax.random.split(key)
+            sample, mask = S.stratified_sample(
+                sub, data.values, jnp.asarray(data.offsets), n_vec,
+                S.bucket_cap(pilot_n))
+            th = jax.vmap(lambda xg, mg: est.apply(est.prepare(xg), mg))(
+                sample, mask)
+            thetas.append(np.asarray(th))
     theta_bar = np.mean(np.stack(thetas), axis=0)
     scale = data.scale if est.needs_population_scale else np.ones((m,))
     eps_prime = float(order_bound(jnp.asarray(theta_bar[:, 0] * scale)))
     cfg2 = dataclasses.replace(cfg, epsilon=max(eps_prime, 1e-12))
-    trace = run_l2miss(data, est, cfg2)
+    trace = run_l2miss(data, est, cfg2, store=store)
     trace.info["order_bound_eps"] = eps_prime
     trace.info["pilot_theta"] = theta_bar
     return trace

@@ -23,6 +23,12 @@ class Subroutines(Protocol):
     def sample(self, n_vec: Vec, it: int):          # -> opaque sample handle
         ...
 
+    # Optional: predicted rows a sample(n_vec) call will actually touch.
+    # Incremental samplers (core/sampling.SampleStore) return the delta vs
+    # already-resident rows; when absent the framework falls back to
+    # sum(n_vec), i.e. fresh-resample accounting.
+    # def sample_cost(self, n_vec: Vec) -> int: ...
+
     def estimate(self, sample, it: int) -> Tuple[float, np.ndarray]:
         ...                                          # -> (error e, theta_hat)
 
@@ -46,7 +52,9 @@ class MissTrace:
     iterations: int
     profile_n: np.ndarray            # (k, m)
     profile_e: np.ndarray            # (k,)
-    total_sampled: int               # sum over iterations of C(n) (cost proxy)
+    total_sampled: int               # rows actually touched across the run:
+                                     # delta-based when SAMPLE reuses nested
+                                     # samples (sample_cost), else sum C(n)
     wall_time_s: float
     info: dict                       # last PREDICT info (beta, r2, status...)
 
@@ -75,6 +83,7 @@ def run_miss(
     theta = None
     err = float("inf")
     status = "max_iters"
+    cost_fn = getattr(subs, "sample_cost", None)
 
     for it in range(max_iters):
         if it < l:
@@ -87,7 +96,9 @@ def run_miss(
             except MissFailure:
                 status = "unrecoverable"
                 break
-        total_sampled += int(np.sum(n_vec))
+        total_sampled += (
+            int(cost_fn(n_vec)) if cost_fn is not None else int(np.sum(n_vec))
+        )
         if budget_rows is not None and total_sampled > budget_rows:
             status = "budget"
             break

@@ -6,9 +6,22 @@ real TPU pod each round-trip costs dispatch latency and loses the collective
 schedule; here the *entire* sample->estimate->fit->predict->test loop runs
 inside ``lax.while_loop`` with fixed-capacity buffers:
 
-  * sample buffer   (m, n_cap)  -- masked to the current n
+  * sample buffer   (m, n_cap, c) -- CARRIED across iterations.  Slot j of
+    group i is bound to a fixed uniform row index by a counter PRNG
+    (kernels/prng.hash3), so the sample sequence is *nested*: iteration k+1's
+    sample extends iteration k's prefix instead of replacing it.  Each
+    iteration reads an (m, ext_cap) extension window past the filled
+    watermark -- per-iteration gather drops from O(n_cap) to O(ext_cap) --
+    and the distinct rows gathered over a run equal the final watermark
+    sum(filled) = stacked init windows + the prediction-phase prefix
+    (reported as rows_sampled; >= final sum(n), see DESIGN.md SS3.2).
   * error profile   (max_iters, m) + (max_iters,) -- row-masked WLS
-  * two-point init rows are drawn inside the loop from the carried PRNG key
+  * two-point init rows are drawn inside the loop from the iteration counter
+
+``sample_key`` (optional, defaults to ``key``) seeds the slot->row binding
+separately from the bootstrap stream, so a server can share one permuted
+prefix across many queries (serve/aqp_service.py) while keeping bootstrap
+replicates independent.
 
 A second entry point ``fused_l2miss_batch`` vmaps the loop over a batch of
 independent queries (same shapes, different data/eps) -- the multi-tenant
@@ -17,13 +30,14 @@ AQP-server configuration; per-query early exit becomes predicated compute.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from . import bootstrap, error_model, sampling
 from .estimators import get as get_estimator
+from ..kernels import prng
 
 Array = jax.Array
 LOG_FLOOR = -60.0
@@ -40,13 +54,14 @@ class FusedResult(NamedTuple):
     r2: Array
     profile_n: Array    # (max_iters, m)
     profile_e: Array    # (max_iters,)
+    rows_sampled: Array # total rows gathered (== sum of the filled watermark)
 
 
 @partial(
     jax.jit,
     static_argnames=(
         "est_name", "B", "n_min", "n_max", "l", "tau", "max_iters", "n_cap",
-        "backend", "metric", "growth_cap",
+        "backend", "metric", "growth_cap", "ext_cap",
     ),
 )
 def fused_l2miss(
@@ -56,6 +71,7 @@ def fused_l2miss(
     key: Array,
     epsilon: Array,
     delta: float,
+    sample_key: Optional[Array] = None,
     *,
     est_name: str = "avg",
     B: int = 500,
@@ -68,6 +84,7 @@ def fused_l2miss(
     backend: str = "poisson",
     metric: str = "l2",
     growth_cap: float = 8.0,
+    ext_cap: Optional[int] = None,
 ) -> FusedResult:
     est = get_estimator(est_name)
     m = offsets.shape[0] - 1
@@ -76,22 +93,37 @@ def fused_l2miss(
     # Deterministic balanced two-point design (Eq. 15/16): cyclic shifts give
     # every group both levels, keeping all slopes identifiable.
     l_min = min(max(int(round(l * n_max / (n_min + n_max))), 1), l - 1)
+    # Extension window: the most new rows one iteration may gather.  Must
+    # cover the init levels (or the two-point design would collapse); beyond
+    # that it trades per-iteration gather width against extra refinement
+    # iterations when PREDICT wants a bigger jump than the window allows.
+    if ext_cap is None:
+        ext_cap = min(n_cap, max(sampling.bucket_cap(n_max), n_cap // 8))
+    ext_cap = min(max(ext_cap, n_max), n_cap)
 
-    def sample_estimate(k, n_vec):
-        ks, kb = jax.random.split(k)
-        sample, mask = sampling.stratified_sample(
-            ks, values, offsets, n_vec, n_cap)
-        e, theta = bootstrap.estimate_error(
-            est, sample, mask, scale, kb, delta, B=B,
-            backend=backend, metric=metric)
-        return e, theta
+    # Slot -> row binding: slot j of group i reads row start_i + floor(u * sz)
+    # with u from a counter hash of (sample_seed, i, j).  Computing the index
+    # table is elementwise integer work -- no data rows are touched until the
+    # extension window gathers them.
+    skey = key if sample_key is None else sample_key
+    sample_seed = jax.random.bits(jax.random.fold_in(skey, 0x5A17), (),
+                                  jnp.uint32)
+    rows_i = jnp.arange(m, dtype=jnp.uint32)[:, None]
+    cols_j = jnp.arange(n_cap, dtype=jnp.uint32)[None, :]
+    u = prng.uniform01(prng.hash3(sample_seed, rows_i, cols_j))   # (m, n_cap)
+    starts = offsets[:-1].astype(jnp.int32)
+    slot_idx = starts[:, None] + jnp.minimum(
+        (u * sizes[:, None]).astype(jnp.int32), sizes[:, None] - 1)
 
     p_dim = est.out_dim(values.shape[1])
+    c_dim = values.shape[1]
 
     class Carry(NamedTuple):
         key: Array
         k: Array
         n_cur: Array
+        filled: Array       # (m,) gathered-slot watermark (monotone)
+        buf: Array          # (m, n_cap, c) carried nested sample
         prof_n: Array
         prof_loge: Array
         e: Array
@@ -132,14 +164,43 @@ def fused_l2miss(
         n_pred, beta, r2, failed = predicted()
         n_vec = jnp.where(init_phase, n_init, n_pred)
         n_vec = jnp.clip(n_vec, 1, jnp.minimum(sizes, n_cap))
+        # Complete-sample clamp: one iteration can extend the resident prefix
+        # by at most the window; a larger predicted jump is taken over
+        # several iterations (growth guard keeps it monotone).
+        n_vec = jnp.minimum(n_vec, c.filled + ext_cap)
         failed = (~init_phase) & failed
-        # ---- sample + bootstrap estimate ----
-        e, theta = sample_estimate(k_est, n_vec)
+        # Init probes read STACKED slot windows [filled, filled + n): two
+        # probes at the same design level must be different rows or the WLS
+        # fit loses its independent variation.  Their union is the prefix
+        # the prediction phase (win_lo = 0) then reuses wholesale.  A window
+        # that would overrun n_cap is shifted back into the resident prefix
+        # (reusing rows) rather than truncated -- n_eff must never collapse
+        # to an empty mask.
+        win_lo = jnp.where(init_phase,
+                           jnp.minimum(c.filled, n_cap - n_vec), 0)
+        win_hi = win_lo + n_vec
+        n_eff = n_vec
+        # ---- extend the carried nested sample by the window only ----
+        slots = c.filled[:, None] + jnp.arange(ext_cap, dtype=jnp.int32)[None, :]
+        valid = slots < win_hi[:, None]
+        gidx = jnp.take_along_axis(
+            slot_idx, jnp.minimum(slots, n_cap - 1), axis=1)  # (m, ext_cap)
+        new_rows = values[gidx]                               # (m, ext_cap, c)
+        tgt = jnp.where(valid, slots, n_cap)                  # OOB -> dropped
+        buf = c.buf.at[jnp.arange(m)[:, None], tgt].set(new_rows, mode="drop")
+        filled = jnp.maximum(c.filled, win_hi)
+        # ---- bootstrap estimate on the masked window ----
+        pos = jnp.arange(n_cap, dtype=jnp.int32)[None, :]
+        mask = ((pos >= win_lo[:, None]) & (pos < win_hi[:, None])).astype(
+            jnp.float32)
+        e, theta = bootstrap.estimate_error(
+            est, buf, mask, scale, k_est, delta, B=B,
+            backend=backend, metric=metric)
         loge = jnp.maximum(jnp.log(jnp.maximum(e, 1e-30)), LOG_FLOOR)
-        prof_n = c.prof_n.at[c.k].set(n_vec.astype(jnp.float32))
+        prof_n = c.prof_n.at[c.k].set(n_eff.astype(jnp.float32))
         prof_loge = c.prof_loge.at[c.k].set(loge)
         done = e <= epsilon
-        return Carry(key, c.k + 1, n_vec, prof_n, prof_loge,
+        return Carry(key, c.k + 1, n_eff, filled, buf, prof_n, prof_loge,
                      e, theta, done, failed,
                      jnp.where(init_phase, c.beta, beta),
                      jnp.where(init_phase, c.r2, r2))
@@ -148,6 +209,8 @@ def fused_l2miss(
         key=key,
         k=jnp.zeros((), jnp.int32),
         n_cur=jnp.full((m,), n_min, jnp.int32),
+        filled=jnp.zeros((m,), jnp.int32),
+        buf=jnp.zeros((m, n_cap, c_dim), values.dtype),
         prof_n=jnp.ones((max_iters, m), jnp.float32),
         prof_loge=jnp.zeros((max_iters,), jnp.float32),
         e=jnp.asarray(jnp.inf, jnp.float32),
@@ -163,18 +226,27 @@ def fused_l2miss(
         success=c.done, failed=c.failed, beta=c.beta, r2=c.r2,
         profile_n=c.prof_n,
         profile_e=jnp.exp(c.prof_loge) * (jnp.arange(max_iters) < c.k),
+        rows_sampled=jnp.sum(c.filled),
     )
 
 
 def fused_l2miss_batch(values_batch, offsets, scale_batch, keys, epsilons,
-                       delta, **static_kwargs):
+                       delta, sample_keys=None, **static_kwargs):
     """vmap the fused loop over a batch of same-shape queries.
 
     ``values_batch (q, N, c)``, ``scale_batch (q, m)``, ``keys (q, 2)``,
     ``epsilons (q,)``.  Offsets are shared (same grouping layout).  This is
     the multi-query AQP-server configuration: one XLA program answers q
     queries; per-query convergence is handled by the while_loop predicate.
+    ``sample_keys`` (optional, shape (q, 2) like ``keys`` -- one key per
+    lane, vmap does not broadcast) pins the nested sample prefixes; to
+    share ONE prefix across the batch, tile the key yourself:
+    ``jnp.broadcast_to(key, (q,) + key.shape)``.
     """
     fn = partial(fused_l2miss, delta=delta, **static_kwargs)
-    return jax.vmap(lambda v, s, k, e: fn(v, offsets, s, k, e))(
-        values_batch, scale_batch, keys, epsilons)
+    if sample_keys is None:
+        return jax.vmap(lambda v, s, k, e: fn(v, offsets, s, k, e))(
+            values_batch, scale_batch, keys, epsilons)
+    return jax.vmap(
+        lambda v, s, k, e, sk: fn(v, offsets, s, k, e, sample_key=sk))(
+        values_batch, scale_batch, keys, epsilons, sample_keys)

@@ -64,27 +64,27 @@ class MissConfig:
 
 
 @lru_cache(maxsize=256)
-def _sample_estimate_fn(est_name: str, m: int, n_cap: int, c: int, B: int,
-                        backend: str, metric: str, use_kernel: bool):
-    """Jit-compiled SAMPLE+ESTIMATE for one shape bucket."""
-    est = get_estimator(est_name)
+def _estimate_fn(est_name: str, m: int, n_cap: int, c: int, B: int,
+                 backend: str, metric: str, use_kernel: bool):
+    """Jit-compiled ESTIMATE for one shape bucket.
 
+    SAMPLE moved out of the jitted program into the incremental SampleStore
+    (permuted-prefix reuse); the bucket key ``n_cap`` is the store's current
+    capacity, so a full MISS run still compiles only O(log final_size)
+    distinct programs.
+    """
     if use_kernel and est_name in ("avg", "proportion", "sum", "count", "var"):
         from ..kernels.poisson_bootstrap import ops as pb_ops
 
-        def fn(key, values, offsets, n_vec, scale, delta):
-            ks, kb = jax.random.split(key)
-            sample, mask = sampling.stratified_sample(
-                ks, values, offsets, n_vec, n_cap)
+        def fn(key, sample, mask, scale, delta):
             return pb_ops.estimate_error_moments(
-                est_name, sample, mask, scale, kb, delta, B=B, metric=metric)
+                est_name, sample, mask, scale, key, delta, B=B, metric=metric)
     else:
-        def fn(key, values, offsets, n_vec, scale, delta):
-            ks, kb = jax.random.split(key)
-            sample, mask = sampling.stratified_sample(
-                ks, values, offsets, n_vec, n_cap)
+        est = get_estimator(est_name)
+
+        def fn(key, sample, mask, scale, delta):
             return bootstrap.estimate_error(
-                est, sample, mask, scale, kb, delta, B=B,
+                est, sample, mask, scale, key, delta, B=B,
                 backend=backend, metric=metric)
 
     return jax.jit(fn)
@@ -94,23 +94,36 @@ class _L2MissSubroutines:
     """Algorithm 3's concrete INITIALIZE/SAMPLE/ESTIMATE/PREDICT."""
 
     def __init__(self, data: sampling.GroupedData, est: Estimator,
-                 cfg: MissConfig):
+                 cfg: MissConfig,
+                 store: "sampling.SampleStore | sampling.SampleStoreBinding | None" = None):
         self.data = data
         self.est = est
         self.cfg = cfg
         self.m = data.num_groups
         self.sizes = data.sizes.astype(np.int64)
         self.key = jax.random.PRNGKey(cfg.seed)
+        # Incremental permuted-prefix sampler: nested across iterations, so
+        # growing n touches only the extension (DESIGN.md SS3.2).  A caller
+        # may pass a resident store (AQPEngine/AQPService) to reuse prefixes
+        # across queries too.
+        self.store = store if store is not None else sampling.SampleStore(
+            data, seed=cfg.seed)
+        # Per-run accounting baseline: a resident store's counter is
+        # cumulative across queries; this run's rows are the delta from here.
+        self._rows_at_start = int(self.store.rows_touched)
         self.scale = (
             np.asarray(data.scale, np.float32)
             if est.needs_population_scale
             else np.ones((self.m,), np.float32)
         )
         self.last_fit: Optional[error_model.ErrorModelFit] = None
-        self._offsets_dev = jnp.asarray(data.offsets)
         self._scale_dev = jnp.asarray(self.scale)
         self._prev_n: Optional[np.ndarray] = None
         self._all_clamped = False
+        self._init_rows: Optional[np.ndarray] = None
+        self._init_bases: Optional[np.ndarray] = None
+        self._l = 0
+        self._next_it = 0
 
     # -- INITIALIZE (SS4.4) -------------------------------------------------
     def initialize(self) -> np.ndarray:
@@ -122,21 +135,52 @@ class _L2MissSubroutines:
             self.m + 2, min(5 * (self.m + 1), 16))
         self.key, sub = jax.random.split(self.key)
         rows = sampling.two_point_init_sizes(sub, self.m, l, cfg.n_min, cfg.n_max)
-        return np.minimum(rows, self.sizes[None, :])
+        rows = np.minimum(rows, self.sizes[None, :])
+        # Init probes read STACKED permutation windows: iteration k samples
+        # slots [base_k, base_k + n_k), disjoint across k, so the WLS fit
+        # sees independent draws (two probes at the same level must not be
+        # the same rows).  Their union [0, sum n_k) is exactly the prefix
+        # the prediction phase then reuses -- init costs the same rows as
+        # fresh sampling, reuse kicks in from the first prediction.
+        self._init_rows = rows
+        self._init_bases = np.concatenate([
+            np.zeros((1, self.m), np.int64),
+            np.cumsum(rows[:-1], axis=0, dtype=np.int64),
+        ])
+        self._l = l
+        return rows
 
-    # -- SAMPLE + ESTIMATE (jitted together per bucket) ----------------------
+    # -- SAMPLE (incremental, host-driven) + ESTIMATE (jitted per bucket) ----
+    def _base_for(self, it: int):
+        if getattr(self, "_init_bases", None) is not None and it < self._l:
+            return self._init_bases[it]
+        return None
+
+    def sample_cost(self, n_vec: np.ndarray) -> int:
+        """Rows the next SAMPLE call will actually gather (delta vs resident).
+
+        The framework calls this right before ``sample`` with the same
+        ``n_vec``; ``_next_it`` tracks which iteration that will be (init
+        iterations read stacked windows, prediction reads the prefix).
+        """
+        return self.store.sample_cost(
+            np.asarray(n_vec, np.int64), self._base_for(self._next_it))
+
     def sample(self, n_vec: np.ndarray, it: int):
-        return np.minimum(np.asarray(n_vec, np.int64), self.sizes)
+        n_vec = np.minimum(np.asarray(n_vec, np.int64), self.sizes)
+        sample, mask = self.store.sample(n_vec, self._base_for(it))
+        self._next_it = it + 1
+        return n_vec, sample, mask
 
-    def estimate(self, n_vec: np.ndarray, it: int) -> Tuple[float, np.ndarray]:
+    def estimate(self, handle, it: int) -> Tuple[float, np.ndarray]:
         cfg = self.cfg
-        n_cap = sampling.bucket_cap(int(n_vec.max()))
-        fn = _sample_estimate_fn(
+        _, sample, mask = handle
+        n_cap = sample.shape[1]   # = store capacity bucket
+        fn = _estimate_fn(
             self.est.name, self.m, n_cap, self.data.num_columns, cfg.B,
             cfg.backend, cfg.metric, cfg.use_kernel)
         self.key, sub = jax.random.split(self.key)
-        e, theta = fn(sub, self.data.values, self._offsets_dev,
-                      jnp.asarray(n_vec), self._scale_dev, cfg.delta)
+        e, theta = fn(sub, sample, mask, self._scale_dev, cfg.delta)
         return float(e), np.asarray(theta)
 
     # -- PREDICT (SS4.3): WLS fit -> diagnose -> Eq. 13 ----------------------
@@ -212,14 +256,23 @@ def run_l2miss(
     data: sampling.GroupedData,
     estimator: "Estimator | str",
     cfg: MissConfig,
+    store: "sampling.SampleStore | sampling.SampleStoreBinding | None" = None,
 ) -> MissTrace:
-    """Run Algorithm 3 end to end on a grouped dataset."""
+    """Run Algorithm 3 end to end on a grouped dataset.
+
+    ``store``: optional resident :class:`~repro.core.sampling.SampleStore`
+    (or a binding of one) whose nested prefixes this run extends and reuses;
+    by default a run-local store is created, which still makes
+    ``MissTrace.total_sampled`` delta-based across the run's iterations.
+    """
     est = get_estimator(estimator) if isinstance(estimator, str) else estimator
-    subs = _L2MissSubroutines(data, est, cfg)
+    subs = _L2MissSubroutines(data, est, cfg, store=store)
     trace = run_miss(
         subs, cfg.epsilon, max_iters=cfg.max_iters, budget_rows=cfg.budget_rows
     )
     if subs.last_fit is not None:
         trace.info.setdefault("beta", np.asarray(subs.last_fit.beta))
         trace.info.setdefault("r2", float(subs.last_fit.r2))
+    trace.info.setdefault(
+        "rows_touched", int(subs.store.rows_touched) - subs._rows_at_start)
     return trace

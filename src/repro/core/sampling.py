@@ -1,4 +1,5 @@
-"""Sampling substrate: grouped datasets, stratified sampling, two-point init.
+"""Sampling substrate: grouped datasets, stratified sampling, two-point init,
+and the incremental ``SampleStore`` (permuted-prefix sampling).
 
 The paper avoids full scans with (i) gap sampling and (ii) an inverted index
 on the group-by attributes (SS4.1).  The TPU-idiomatic analogue (DESIGN.md SS3):
@@ -9,11 +10,18 @@ contiguous extent.  Only the sampled rows are ever touched.
 All device-side sampling is fixed-shape: groups are padded to a common cap and
 masked, so the same jitted program serves every MISS iteration in a size
 bucket (see l2miss.py bucketing).
+
+``SampleStore`` (DESIGN.md SS3.2) makes sampling *incremental*: each group
+holds a lazily-materialized uniform random permutation of its extent, and "a
+sample of size n" is defined as the first n entries of that permutation.
+Growing n -> n + delta therefore gathers only delta new rows, samples are
+nested across MISS iterations, and the same prefixes can be shared across
+queries (one resident store per dataset in serve/aqp_service.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -187,3 +195,337 @@ def bucket_cap(n: int, *, base: int = 256) -> int:
     while cap < n:
         cap *= 2
     return cap
+
+
+# ---------------------------------------------------------------------------
+# SampleStore: incremental permuted-prefix sampling (DESIGN.md SS3.2)
+# ---------------------------------------------------------------------------
+
+class _PrefixPermutation:
+    """Lazily-materialized uniform random permutation of ``[0, size)``.
+
+    Incremental Fisher-Yates with a sparse swap map: materializing positions
+    ``[t, upto)`` costs O(upto - t) time and O(upto) memory regardless of
+    ``size`` -- a group's extent is never scanned.  Entries are materialized
+    in ``page``-sized chunks so repeated tiny extensions amortize the host
+    loop; materializing permutation *indices* ahead of need touches no data
+    rows (rows are only touched when gathered by a binding).
+    """
+
+    __slots__ = ("size", "page", "_rng", "_perm", "_len", "_swaps")
+
+    def __init__(self, size: int, rng: np.random.Generator, *, page: int = 512):
+        self.size = int(size)
+        self.page = int(page)
+        self._rng = rng
+        self._perm = np.empty((0,), np.int64)
+        self._len = 0
+        self._swaps: Dict[int, int] = {}
+
+    def prefix(self, n: int) -> np.ndarray:
+        """First ``n`` entries of the permutation (local offsets)."""
+        n = min(int(n), self.size)
+        if n > self._len:
+            upto = min(-(-n // self.page) * self.page, self.size)
+            if upto > len(self._perm):
+                cap = max(2 * len(self._perm), upto)
+                new = np.empty((min(cap, self.size),), np.int64)
+                new[: self._len] = self._perm[: self._len]
+                self._perm = new
+            sw = self._swaps
+            # Pre-draw uniforms so the Python loop does dict ops only:
+            # r = j + floor(u * (size - j)) is uniform on [j, size).
+            u = self._rng.random(upto - self._len)
+            for j in range(self._len, upto):
+                r = j + int(u[j - self._len] * (self.size - j))
+                vj = sw.get(j, j)
+                vr = sw.get(r, r)
+                self._perm[j] = vr
+                sw[r] = vj
+            self._len = upto
+        return self._perm[:n]
+
+
+class SampleStoreBinding:
+    """One value-column binding of a :class:`SampleStore`.
+
+    The store owns the per-group permutations (the *which rows* state); a
+    binding owns a device-resident gathered-row buffer over one values array
+    (the *row contents* state).  The primary binding gathers from
+    ``store.data.values``; predicate queries bind a derived indicator column
+    to the same permutations, so every binding of a store sees the *same*
+    nested row prefixes (AQPEngine reuses pilot + predicate rows this way).
+    """
+
+    def __init__(self, store: "SampleStore", values: Array):
+        self.store = store
+        self.values = jnp.asarray(values)
+        if self.values.ndim == 1:
+            self.values = self.values[:, None]
+        self._buf: Optional[Array] = None       # (m, capacity, c)
+        self._gathered = np.zeros((store.num_groups,), np.int64)
+        self._epoch = store.epoch
+        self.rows_touched = 0                   # cumulative gathered rows
+
+    # -- internal -----------------------------------------------------------
+    def _sync_epoch(self) -> None:
+        if self._epoch != self.store.epoch:
+            # Invalidation: permutations were refreshed/reshuffled under us.
+            self._buf = None
+            self._gathered[:] = 0
+            self._epoch = self.store.epoch
+
+    def _ensure_capacity(self, cap: int) -> None:
+        c = self.values.shape[1]
+        m = self.store.num_groups
+        if self._buf is None:
+            self._buf = jnp.zeros((m, cap, c), self.values.dtype)
+        elif self._buf.shape[1] < cap:
+            pad = cap - self._buf.shape[1]
+            self._buf = jnp.pad(self._buf, ((0, 0), (0, pad), (0, 0)))
+
+    # -- internal: window resolution ----------------------------------------
+    def _window(self, n_vec, base) -> Tuple[np.ndarray, np.ndarray]:
+        """Clamp a (base, n) permutation window against the group extents.
+
+        ``base=None`` is the plain prefix ``[0, n)``.  A nonzero base reads
+        slots ``[base, base + n)`` -- used for the stacked *init windows* of
+        MISS: disjoint windows give the WLS fit independent probes, while
+        their union is exactly the prefix the prediction phase then reuses.
+        A window overrunning a group's extent is shifted back (overlapping
+        earlier rows) so the sample never silently shrinks.
+        """
+        sizes = self.store.sizes
+        n = np.minimum(np.asarray(n_vec, np.int64), sizes)
+        if base is None:
+            b = np.zeros_like(n)
+        else:
+            b = np.minimum(np.asarray(base, np.int64), np.maximum(sizes - n, 0))
+        return b, n
+
+    # -- public -------------------------------------------------------------
+    def sample_cost(self, n_vec: np.ndarray, base=None) -> int:
+        """Rows a ``sample(n_vec, base)`` call would actually gather."""
+        self._sync_epoch()
+        b, n = self._window(n_vec, base)
+        return int(np.maximum(b + n - self._gathered, 0).sum())
+
+    def sample(self, n_vec: np.ndarray, base=None) -> Tuple[Array, Array]:
+        """Permuted-prefix sample of ``n_vec[i]`` rows per group.
+
+        Returns ``(sample (m, n_cap, c), mask (m, n_cap))`` where ``n_cap``
+        is the power-of-two bucket of the REQUESTED max size (not the
+        store's resident capacity, which only grows) -- downstream jitted
+        estimators stay sized to the query, and a long-lived store serving
+        one large query doesn't widen every later small one.  Only rows not
+        already resident are gathered; repeated calls with non-increasing
+        sizes touch nothing.  With ``base``, row i of the result holds
+        permutation slots ``[base[i], base[i] + n[i])`` left-aligned at
+        column 0.
+        """
+        self._sync_epoch()
+        store = self.store
+        b, n = self._window(n_vec, base)
+        need = b + n
+        store.reserve(int(need.max(initial=1)))
+        out_cap = bucket_cap(int(n.max(initial=1)))
+        # Buffer sized to THIS binding's resident need, not the store-wide
+        # high-water mark: a short-lived predicate binding must not inherit
+        # the widest query's buffer.
+        self._ensure_capacity(bucket_cap(int(need.max(initial=1))))
+        grow = np.flatnonzero(need > self._gathered)
+        if grow.size:
+            g_pos: List[np.ndarray] = []
+            s_pos: List[np.ndarray] = []
+            idx: List[np.ndarray] = []
+            for i in grow:
+                lo, hi = int(self._gathered[i]), int(need[i])
+                loc = store.perm(i).prefix(hi)[lo:hi]
+                idx.append(store.offsets[i] + loc)
+                s_pos.append(np.arange(lo, hi, dtype=np.int64))
+                g_pos.append(np.full((hi - lo,), i, np.int64))
+            flat_idx = np.concatenate(idx)
+            rows = self.values[jnp.asarray(flat_idx)]          # (K, c) gather
+            self._buf = self._buf.at[
+                jnp.asarray(np.concatenate(g_pos)),
+                jnp.asarray(np.concatenate(s_pos)),
+            ].set(rows)
+            self._gathered[grow] = need[grow]
+            self.rows_touched += int(flat_idx.shape[0])
+            store._note_rows(int(flat_idx.shape[0]))
+        mask = (jnp.arange(out_cap)[None, :] < jnp.asarray(n)[:, None]).astype(
+            jnp.float32)
+        if base is None or not b.any():
+            return self._buf[:, :out_cap], mask
+        # Left-align the windows: column j of row i reads slot b[i] + j.
+        slots = jnp.asarray(b)[:, None] + jnp.arange(out_cap)[None, :]
+        slots = jnp.minimum(slots, self._buf.shape[1] - 1)
+        window = jnp.take_along_axis(self._buf, slots[:, :, None], axis=1)
+        return window, mask
+
+    def sample_host(self, n_vec: np.ndarray,
+                    base=None) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-path reference: same prefixes gathered with numpy.
+
+        Used by parity tests -- must agree elementwise with the masked region
+        of :meth:`sample`.
+        """
+        store = self.store
+        b, n = self._window(n_vec, base)
+        store.reserve(int((b + n).max(initial=1)))
+        out_cap = bucket_cap(int(n.max(initial=1)))
+        vals = np.asarray(self.values)
+        m = store.num_groups
+        out = np.zeros((m, out_cap, vals.shape[1]), vals.dtype)
+        mask = np.zeros((m, out_cap), np.float32)
+        for i in range(m):
+            lo, k = int(b[i]), int(n[i])
+            loc = store.perm(i).prefix(lo + k)[lo:lo + k]
+            out[i, :k] = vals[store.offsets[i] + loc]
+            mask[i, :k] = 1.0
+        return out, mask
+
+    def prefix_indices(self, n_vec: np.ndarray,
+                       base=None) -> Tuple[np.ndarray, np.ndarray]:
+        """Global row indices of the current windows (idx (m, cap), mask)."""
+        store = self.store
+        b, n = self._window(n_vec, base)
+        store.reserve(int((b + n).max(initial=1)))
+        out_cap = bucket_cap(int(n.max(initial=1)))
+        idx = np.zeros((store.num_groups, out_cap), np.int64)
+        mask = np.zeros((store.num_groups, out_cap), np.float32)
+        for i in range(store.num_groups):
+            lo, k = int(b[i]), int(n[i])
+            idx[i, :k] = store.offsets[i] + store.perm(i).prefix(lo + k)[lo:lo + k]
+            mask[i, :k] = 1.0
+        return idx, mask
+
+
+class SampleStore:
+    """Device-resident incremental sample store over one :class:`GroupedData`.
+
+    Semantics (DESIGN.md SS3.2):
+
+      * ``sample(n)`` == first ``n`` entries of a per-group uniform random
+        permutation -- samples are *nested*: ``sample(n)`` is always a prefix
+        of ``sample(n + delta)`` within one epoch (without replacement, so
+        ``sample(|group|)`` is the exact extent).
+      * growing ``n -> n + delta`` gathers exactly ``delta`` new rows; the
+        cumulative gather count is exposed as ``rows_touched`` and predicted
+        by ``sample_cost`` (MISS's delta-based cost proxy).
+      * ``refresh()`` invalidates after a data update (new permutations, new
+        epoch); ``reshuffle()`` redraws permutations over the same data so
+        long-lived servers don't correlate answers forever.
+      * ``bind(values)`` attaches a derived value column (e.g. a predicate
+        indicator) to the same permutations.
+
+    The device buffer is padded to a power-of-two ``capacity`` bucket
+    (``bucket_cap``) so downstream jitted estimators compile once per bucket.
+    """
+
+    def __init__(self, data: GroupedData, *, seed: int = 0, page: int = 512):
+        self.data = data
+        self.seed = int(seed)
+        self.page = int(page)
+        self.epoch = 0
+        self.rows_touched = 0       # aggregate over all bindings
+        self._capacity = 0
+        self._perms: List[Optional[_PrefixPermutation]] = []
+        self._reset_perms()
+        self._primary = self.bind(data.values)
+
+    # -- permutation state --------------------------------------------------
+    def _reset_perms(self) -> None:
+        root = np.random.default_rng((self.seed, self.epoch))
+        self._seeds = root.integers(0, 2**63 - 1, size=self.num_groups)
+        self._perms = [None] * self.num_groups
+
+    def perm(self, i: int) -> _PrefixPermutation:
+        p = self._perms[i]
+        if p is None:
+            p = _PrefixPermutation(
+                int(self.sizes[i]),
+                np.random.default_rng(int(self._seeds[i])),
+                page=self.page)
+            self._perms[i] = p
+        return p
+
+    def _note_rows(self, k: int) -> None:
+        self.rows_touched += k
+
+    # -- properties ---------------------------------------------------------
+    @property
+    def num_groups(self) -> int:
+        return self.data.num_groups
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return self.data.sizes
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return self.data.offsets
+
+    @property
+    def capacity(self) -> int:
+        """Current padded sample capacity (power-of-two jit bucket)."""
+        return self._capacity
+
+    def reserve(self, n: int) -> int:
+        """Grow the capacity bucket to cover ``n``; returns the new capacity."""
+        cap = bucket_cap(max(int(n), 1))
+        if cap > self._capacity:
+            self._capacity = cap
+        return self._capacity
+
+    # -- sampling (delegates to the primary binding) ------------------------
+    def sample(self, n_vec: np.ndarray, base=None) -> Tuple[Array, Array]:
+        return self._primary.sample(n_vec, base)
+
+    def sample_host(self, n_vec: np.ndarray,
+                    base=None) -> Tuple[np.ndarray, np.ndarray]:
+        return self._primary.sample_host(n_vec, base)
+
+    def sample_cost(self, n_vec: np.ndarray, base=None) -> int:
+        return self._primary.sample_cost(n_vec, base)
+
+    def prefix_indices(self, n_vec: np.ndarray, base=None):
+        return self._primary.prefix_indices(n_vec, base)
+
+    def bind(self, values: Array) -> SampleStoreBinding:
+        """Attach a derived values column to this store's permutations.
+
+        Bindings are not tracked by the store (no strong refs -- a predicate
+        query's binding is garbage once the query returns); invalidation is
+        lazy via the epoch counter each binding checks on use.
+        """
+        return SampleStoreBinding(self, values)
+
+    # -- invalidation -------------------------------------------------------
+    def refresh(self, data: Optional[GroupedData] = None) -> None:
+        """Invalidate after a data update (or rebind to ``data``).
+
+        All permutations are redrawn (sizes may have changed) and every
+        binding's resident buffer is dropped; the primary binding follows the
+        new ``data.values``.  ``rows_touched`` keeps accumulating -- it counts
+        real work done, which survives invalidation.
+        """
+        if data is not None:
+            self.data = data
+            self._primary.values = jnp.asarray(
+                data.values if data.values.ndim == 2 else data.values[:, None])
+            self._primary._gathered = np.zeros((self.num_groups,), np.int64)
+        self.epoch += 1
+        self._reset_perms()
+
+    def reshuffle(self, seed: Optional[int] = None) -> None:
+        """Redraw permutations over the same data (decorrelation policy).
+
+        A resident store shared by every query of a tenant would otherwise
+        answer repeated queries from perfectly correlated prefixes; servers
+        call this periodically (serve/aqp_service.py ``reshuffle_every``).
+        """
+        if seed is not None:
+            self.seed = int(seed)
+        self.epoch += 1
+        self._reset_perms()

@@ -1,9 +1,17 @@
 """AQP-as-a-service: a multi-tenant query server over a resident dataset.
 
 Queries arrive with per-request (func, epsilon, delta, metric); same-shaped
-moment queries are answered in fused batches via ``fused_l2miss_batch`` (one
-XLA program, vmapped over requests — the multi-query configuration of
-DESIGN.md SS7 phase B); everything else falls back to the host engine.
+moment queries are answered in fused batches via ``fused_l2miss`` (one XLA
+program, the multi-query configuration of DESIGN.md SS7 phase B); everything
+else falls back to the host engine.
+
+Sample reuse (DESIGN.md SS3.2): the service owns ONE resident SampleStore per
+dataset, shared by the host engine's pilot estimates and every tenant's
+queries, and pins a shared ``sample_key`` for the fused path -- so concurrent
+tenants extend the same permuted prefixes instead of each re-scanning rows.
+Because answers served from one prefix are correlated, an eviction/reshuffle
+policy redraws the permutations (and rotates the fused sample key) every
+``reshuffle_every`` queries; ``refresh()`` does the same on data updates.
 """
 from __future__ import annotations
 
@@ -18,7 +26,7 @@ import numpy as np
 from ..aqp.engine import AQPEngine
 from ..aqp.query import Query
 from ..core.fused import fused_l2miss
-from ..core.sampling import GroupedData
+from ..core.sampling import GroupedData, SampleStore
 
 
 @dataclasses.dataclass
@@ -38,15 +46,54 @@ class AQPService:
 
     def __init__(self, data: GroupedData, *, B: int = 300, n_min: int = 1000,
                  n_max: int = 2000, max_iters: int = 24,
-                 n_cap: int = 1 << 16, seed: int = 0):
+                 n_cap: int = 1 << 16, seed: int = 0,
+                 reshuffle_every: int = 256):
         self.data = data
+        self.store = SampleStore(data, seed=seed)
         self.engine = AQPEngine(data, B=B, n_min=n_min, n_max=n_max,
-                                seed=seed)
+                                seed=seed, store=self.store)
         self.B, self.n_min, self.n_max = B, n_min, n_max
         self.max_iters, self.n_cap = max_iters, n_cap
         self.key = jax.random.PRNGKey(seed)
         self._offsets = jnp.asarray(data.offsets)
         self._m = data.num_groups
+        # Reuse/decorrelation policy: one sample epoch serves up to
+        # ``reshuffle_every`` queries, then prefixes are redrawn.
+        self.reshuffle_every = int(reshuffle_every)
+        self._queries_in_epoch = 0
+        self._epoch_counter = 0
+        self._fused_rows = 0
+        self._sample_key = jax.random.fold_in(
+            jax.random.PRNGKey(seed ^ 0x5A17), 0)
+
+    @property
+    def rows_touched(self) -> int:
+        """Cumulative rows sampled across ALL paths: host-engine store
+        gathers plus the fused programs' in-loop gathers (each fused query
+        reports its filled watermark as ``FusedResult.rows_sampled``)."""
+        return self.store.rows_touched + self._fused_rows
+
+    def refresh(self, data: Optional[GroupedData] = None) -> None:
+        """Invalidate resident samples after a data update."""
+        if data is not None:
+            self.data = data
+            self.engine.data = data
+            self._offsets = jnp.asarray(data.offsets)
+            self._m = data.num_groups
+        self.store.refresh(self.data)
+        self._rotate_epoch()
+
+    def _rotate_epoch(self) -> None:
+        self._epoch_counter += 1
+        self._queries_in_epoch = 0
+        self._sample_key = jax.random.fold_in(
+            jax.random.PRNGKey(self.store.seed ^ 0x5A17), self._epoch_counter)
+
+    def _account_queries(self, k: int) -> None:
+        self._queries_in_epoch += k
+        if self._queries_in_epoch >= self.reshuffle_every:
+            self.store.reshuffle()
+            self._rotate_epoch()
 
     def answer(self, queries: List[Query]) -> List[AQPResponse]:
         """Answer a batch of queries; fuse the L2 moment queries on device."""
@@ -57,6 +104,14 @@ class AQPService:
         rest = [i for i in range(len(queries)) if i not in fused_idx]
 
         # --- fused on-device pass: one while_loop per func group ---
+        # All fused queries of an epoch share ``self._sample_key``: their
+        # slot->row bindings are identical, so every tenant's program reads
+        # the SAME underlying rows (one hot working set for the storage /
+        # cache tiers beneath, rather than each query scattering across the
+        # whole table).  Each program still performs its own gathers, and
+        # identical rows mean correlated answers -- that is the deliberate
+        # trade the reshuffle_every policy bounds.  Bootstrap keys stay
+        # per-query.
         by_func: dict[str, List[int]] = {}
         for i in fused_idx:
             by_func.setdefault(queries[i].func, []).append(i)
@@ -68,10 +123,12 @@ class AQPService:
                 res = fused_l2miss(
                     self.data.values, self._offsets,
                     jnp.ones((self._m,), jnp.float32), k,
-                    jnp.float32(q.epsilon), q.delta, est_name=func,
+                    jnp.float32(q.epsilon), q.delta, self._sample_key,
+                    est_name=func,
                     B=self.B, n_min=self.n_min, n_max=self.n_max,
                     l=min(self._m + 2, 12), max_iters=self.max_iters,
                     n_cap=self.n_cap)
+                self._fused_rows += int(res.rows_sampled)
                 out[i] = AQPResponse(
                     qid=i, theta=np.asarray(res.theta),
                     error=float(res.error), success=bool(res.success),
@@ -85,4 +142,5 @@ class AQPService:
             out[i] = AQPResponse(
                 qid=i, theta=tr.theta, error=tr.error, success=tr.success,
                 n=tr.n, wall_time_s=time.perf_counter() - t0)
+        self._account_queries(len(queries))
         return [out[i] for i in range(len(queries))]

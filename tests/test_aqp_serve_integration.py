@@ -136,6 +136,7 @@ def test_continuous_batcher_completes(tiny_lm):
     assert all(len(r.out_tokens) == 8 for r in done)
 
 
+@pytest.mark.slow
 def test_batcher_matches_sequential_decode(tiny_lm):
     """Slot-0 greedy continuation == unbatched prefill+decode oracle."""
     cfg, params = tiny_lm
@@ -160,6 +161,7 @@ def test_batcher_matches_sequential_decode(tiny_lm):
 # MISS <-> LM integration
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_miss_eval_saves_forwards(tiny_lm):
     from repro.integration.miss_eval import MissEvalConfig, MissEvaluator
 

@@ -16,6 +16,10 @@ from repro.models import model as M
 from repro.models.config import reduced_for_smoke
 from repro.models.flops import count_active_analytic, count_params_analytic
 
+# Whole-module end-to-end smoke tests: minutes on CPU, excluded from the
+# fast default selection (pyproject addopts).
+pytestmark = pytest.mark.slow
+
 # Published size classes (total params, billions): [lo, hi] bounds.
 SIZE_CLASS = {
     "qwen2-1.5b": (1.2, 1.9),

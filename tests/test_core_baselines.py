@@ -57,6 +57,7 @@ def test_ifocus_orders_groups():
     assert np.all(np.diff(mu) > 0)
 
 
+@pytest.mark.slow
 def test_minibatch_terminates_but_is_costly(data):
     res = bl.run_minibatch(data, "avg", epsilon=0.05, delta=0.05, step=400,
                            B=100)

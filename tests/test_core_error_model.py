@@ -1,6 +1,9 @@
 """Error-model unit + property tests: WLS fit, Algorithm-2 diagnostic,
 Eq.-13 closed-form prediction (KKT + feasibility identities)."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis extra")
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np

@@ -1,6 +1,9 @@
 """Weighted-estimator correctness: apply(aux, w) must agree with evaluating
 the plain statistic on the weight-expanded sample, for every registered f."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis extra")
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax.numpy as jnp

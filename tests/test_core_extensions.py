@@ -1,7 +1,10 @@
 """SS5 extension tests: OrderBound vs brute force (property), the theorem
 implications behind every Gamma conversion (property), and end-to-end
 OrderMiss / MaxMiss / DiffMiss runs."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis extra")
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax.numpy as jnp

@@ -24,26 +24,39 @@ def test_l2miss_converges(normal_exp_data):
     tr = run_l2miss(normal_exp_data, "avg", MissConfig(epsilon=EPS, **CFG))
     assert tr.success, tr.status
     assert tr.error <= EPS
-    # Loose floor: with a wide eps the run converges after few prediction
-    # points, so r2 is noisy; the tight-eps tests assert r2 ~ 1.
-    assert tr.info["r2"] > 0.4
+    # With a wide eps the run accepts after 1-2 prediction points, so r2 is
+    # pure noise here (historically flaky at ~0.2); the fit-quality floor
+    # lives in test_l2miss_near_oracle_size where the profile is long enough
+    # for r2 to be meaningful.  Here just require the fit to exist.
+    assert "r2" in tr.info
     truth = exact_answer(normal_exp_data, estimators.get("avg")).ravel()
     actual = float(np.sqrt(np.sum((tr.theta.ravel() - truth) ** 2)))
     assert actual <= 2 * EPS  # estimate honours the bound up to noise
+    # Incremental SampleStore accounting: rows actually gathered (delta) is
+    # what total_sampled reports, and it never exceeds fresh-resample cost.
+    assert tr.total_sampled == tr.info["rows_touched"]
+    assert tr.total_sampled <= int(tr.profile_n.sum())
 
 
 def test_l2miss_near_oracle_size(normal_exp_data):
     """Total size within a small factor of the CLT closed form (BLK oracle)."""
     tr = run_l2miss(normal_exp_data, "avg", MissConfig(epsilon=0.02, **CFG))
     assert tr.success
+    # Tight eps -> long profile -> the WLS fit must actually explain it.
+    assert tr.info["r2"] > 0.9
     # Oracle: per-group n = (z_{.975} sigma sqrt(2)/eps)^2, sigma = 1 for both
     # normal(5,1) and exp(1)+3 groups.
     z = 1.96
     oracle = 2 * (z * 1.0 * np.sqrt(2) / 0.02) ** 2
     assert tr.total_sample_size < 4 * oracle
     assert tr.total_sample_size > oracle / 4
+    # >= 3 iterations of growth: nested sampling must touch strictly fewer
+    # rows than redrawing every iteration from scratch.
+    assert tr.iterations >= 3
+    assert tr.total_sampled < int(tr.profile_n.sum())
 
 
+@pytest.mark.slow
 def test_l2miss_simulated_confidence(normal_exp_data):
     """Paper SS6.1: resample at the returned size; the fraction of trials
     meeting the bound must be >= 1 - delta (up to MC noise)."""
@@ -82,6 +95,7 @@ def test_l2miss_sum_query(normal_exp_data):
     assert err <= 2 * eps_sum
 
 
+@pytest.mark.slow
 def test_l2miss_median(normal_exp_data):
     tr = run_l2miss(normal_exp_data, "median", MissConfig(epsilon=EPS, **CFG))
     assert tr.success
@@ -105,6 +119,7 @@ def test_budget_failure(normal_exp_data):
     assert tr.status == "budget"
 
 
+@pytest.mark.slow
 def test_unrecoverable_constant_error():
     """A degenerate profile (error independent of n) must trip Algorithm 2."""
     rng = np.random.default_rng(0)
@@ -121,6 +136,9 @@ def test_unrecoverable_constant_error():
 
 
 def test_fused_matches_host(normal_exp_data):
+    """Golden-trace contract for the nested-sample fused path: exact draw
+    equality with the host loop is impossible (permuted-prefix vs host store
+    RNG), so pin convergence status and final size agreement instead."""
     data = normal_exp_data
     res = fused_l2miss(
         data.values, jnp.asarray(data.offsets), jnp.ones(2, jnp.float32),
@@ -130,9 +148,34 @@ def test_fused_matches_host(normal_exp_data):
     assert bool(res.success)
     assert float(res.error) <= EPS
     tr = run_l2miss(data, "avg", MissConfig(epsilon=EPS, **CFG))
+    assert tr.success
     # Same problem, same config family: sizes agree within a small factor.
     ratio = float(np.sum(np.asarray(res.n))) / max(tr.total_sample_size, 1)
     assert 0.1 < ratio < 10.0
+    # Carried-buffer accounting: the fused loop gathers each slot once, so
+    # total rows sampled is the final filled watermark (>= final n because
+    # the stacked init windows are part of the prefix).
+    assert int(res.rows_sampled) >= int(np.asarray(res.n).sum())
+    assert int(res.rows_sampled) <= int(np.asarray(res.profile_n).sum())
+
+
+def test_fused_deterministic_given_keys(normal_exp_data):
+    """Same keys -> identical trace (the nested sample path is a pure
+    function of (sample_key, bootstrap key); nothing is order-dependent)."""
+    data = normal_exp_data
+    kw = dict(est_name="avg", B=100, n_min=400, n_max=800, l=6,
+              max_iters=16, n_cap=1 << 13)
+    args = (data.values, jnp.asarray(data.offsets), jnp.ones(2, jnp.float32),
+            jax.random.PRNGKey(3), jnp.float32(EPS), 0.05)
+    r1 = fused_l2miss(*args, **kw)
+    r2 = fused_l2miss(*args, **kw)
+    assert np.array_equal(np.asarray(r1.n), np.asarray(r2.n))
+    assert float(r1.error) == float(r2.error)
+    # Passing sample_key == key explicitly is the same program as the
+    # default (sample_key=None folds in the main key).
+    r3 = fused_l2miss(*args, jax.random.PRNGKey(3), **kw)
+    assert np.array_equal(np.asarray(r1.n), np.asarray(r3.n))
+    assert float(r1.error) == float(r3.error)
 
 
 def test_fused_batch_vmap(normal_exp_data):
@@ -152,3 +195,11 @@ def test_fused_batch_vmap(normal_exp_data):
     # Tighter eps -> more samples.
     totals = np.asarray(res.n).sum(axis=1)
     assert totals[1] >= totals[0] >= totals[2]
+    # Shared-prefix variant: one sample key tiled across the batch.
+    skey = jax.random.PRNGKey(7)
+    res2 = fused_l2miss_batch(
+        vals, jnp.asarray(data.offsets), scales, keys, eps, 0.05,
+        jnp.broadcast_to(skey, (q,) + skey.shape),
+        est_name="avg", B=100, n_min=400, n_max=800, l=6,
+        max_iters=16, n_cap=1 << 13)
+    assert bool(np.all(np.asarray(res2.success)))

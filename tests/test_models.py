@@ -41,6 +41,7 @@ FAMILY_CASES = {
 
 
 @pytest.mark.parametrize("family", sorted(FAMILY_CASES))
+@pytest.mark.slow
 def test_family_train_and_decode(family):
     cfg, extra = FAMILY_CASES[family]
     B, S = 2, 32
@@ -76,6 +77,7 @@ def test_rwkv_chunked_matches_sequential():
                     atol=2e-4)
 
 
+@pytest.mark.slow
 def test_rwkv_forward_matches_stepwise_decode():
     cfg = _cfg("ssm", ssm=SSMConfig(kind="rwkv6", head_dim=16, chunk=8))
     p = ssm.init_rwkv(jax.random.PRNGKey(1), cfg, jnp.float32)
@@ -92,6 +94,7 @@ def test_rwkv_forward_matches_stepwise_decode():
                     atol=3e-4)
 
 
+@pytest.mark.slow
 def test_mamba_forward_matches_stepwise_decode():
     cfg = _cfg("hybrid", attn_stride=4,
                moe=MoEConfig(num_experts=4, top_k=2, d_expert=32,
@@ -111,6 +114,7 @@ def test_mamba_forward_matches_stepwise_decode():
                     atol=3e-4)
 
 
+@pytest.mark.slow
 def test_prefill_decode_consistency_dense():
     """Greedy continuation via (prefill -> decode) must match running the
     full forward over the extended sequence."""
@@ -131,6 +135,7 @@ def test_prefill_decode_consistency_dense():
                     rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_moe_aux_loss_and_balance():
     cfg = _cfg("moe", moe=MoEConfig(num_experts=8, top_k=2, d_expert=32))
     from repro.models import mlp as mlp_mod
@@ -144,6 +149,7 @@ def test_moe_aux_loss_and_balance():
     assert float(aux) < 4 * cfg.moe.aux_loss_coef
 
 
+@pytest.mark.slow
 def test_moe_matches_dense_expert_eval():
     """With capacity ~T*k (no drops), MoE output must equal explicitly
     evaluating the chosen experts per token."""

@@ -72,6 +72,7 @@ def _batch(B=4, S=16, vocab=64, seed=0):
             "labels": jnp.asarray(t[:, 1:], jnp.int32)}
 
 
+@pytest.mark.slow
 def test_microbatch_matches_full_batch(tiny_cfg):
     """Accumulated microbatch gradients == single big-batch gradients."""
     t_full = TrainConfig(microbatches=1, remat=None)
@@ -87,6 +88,7 @@ def test_microbatch_matches_full_batch(tiny_cfg):
         assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_remat_matches_no_remat(tiny_cfg):
     t_plain = TrainConfig(microbatches=1, remat=None)
     t_remat = TrainConfig(microbatches=1, remat="full")
