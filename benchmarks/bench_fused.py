@@ -1,0 +1,137 @@
+"""Fused-path benchmark (DESIGN.md SS7 phase C): width-bucketed vs
+full-width ESTIMATE, and looped vs single-dispatch batched serving.
+
+Two measurements:
+
+  * ``fused/estimate-*`` -- one converged query at SERVICE DEFAULTS
+    (B=300, n_cap=2^16) whose final watermark lands well under ``n_cap/8``,
+    run through the phase-B full-width loop (ESTIMATE always pays n_cap)
+    and the phase-C bucketed loop (ESTIMATE pays the watermark bucket).
+    Both follow the bit-identical trajectory (counter-PRNG draws are
+    width-invariant), so the wall-clock ratio isolates the ESTIMATE width.
+    ISSUE 2 acceptance: bucketed must be >= 5x faster.
+  * ``fused/service-*`` -- a 16-query same-func group answered by the
+    per-query dispatch loop (16 fused programs) vs the batched
+    shared-operand lanes path (exactly 1 program), with identical per-query
+    answers; emits the dispatch counts and the max answer deviation.  The
+    dispatch amortization pays on accelerators (per-program launch latency,
+    collective scheduling); on CPU the two paths do the same arithmetic and
+    the lockstep lanes can even run slightly longer than the loop, so read
+    the CPU row for the program-count reduction, not for wall clock.
+
+Every row carries ``rows_touched`` so run.py ``--json`` can serialize the
+perf trajectory (BENCH_fused.json) across PRs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.aqp.query import Query
+from repro.core.fused import fused_l2miss
+from repro.data import make_grouped
+from repro.serve.aqp_service import AQPService
+
+from .common import CsvEmitter
+
+# AQPService defaults (serve/aqp_service.py) -- the acceptance configuration.
+SERVICE = dict(B=300, n_min=1000, n_max=2000, max_iters=24, n_cap=1 << 16)
+
+
+def _timed_fused(data, *, adaptive: bool, eps: float, repeats: int = 2):
+    args = (data.values, jnp.asarray(data.offsets),
+            jnp.ones((data.num_groups,), jnp.float32),
+            jax.random.PRNGKey(0), jnp.float32(eps), 0.05)
+    kw = dict(est_name="avg", B=SERVICE["B"], n_min=SERVICE["n_min"],
+              n_max=SERVICE["n_max"], l=min(data.num_groups + 2, 12),
+              max_iters=SERVICE["max_iters"], n_cap=SERVICE["n_cap"],
+              # Tight trust region: a noisy 4-point init fit may overshoot
+              # Eq. 13 by 2-3x and accept there; the bench wants the
+              # near-oracle size so the converged watermark (and hence the
+              # bucket) stays under n_cap/8.
+              growth_cap=2.0, adaptive=adaptive)
+    res = fused_l2miss(*args, **kw)          # compile + warm cache
+    jax.block_until_ready(res)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        res = fused_l2miss(*args, **kw)
+        jax.block_until_ready(res)
+    return res, (time.perf_counter() - t0) / repeats
+
+
+def run(emit: CsvEmitter, *, full: bool = False, trials: int = 0):
+    del trials
+    # --- bucketed vs full-width ESTIMATE at service defaults ---------------
+    m = 2
+    data = make_grouped(["normal"] * m, (250_000 if full else 100_000) * m,
+                        seed=3, biases=list(np.arange(m, dtype=np.float64)))
+    # eps chosen so the run needs several prediction iterations but the
+    # converged total still lands under n_cap/8 = 8192: per-group
+    # n ~ (z sigma sqrt(m) / eps)^2 ~ 3100.
+    eps = 0.05
+    res_b, t_b = _timed_fused(data, adaptive=True, eps=eps)
+    res_f, t_f = _timed_fused(data, adaptive=False, eps=eps)
+    sum_n = int(np.asarray(res_b.n).sum())
+    # Soft checks: a platform where the knife-edge e<=eps test flips (f32
+    # reassociation) or convergence overshoots must still emit rows (and
+    # --json output) with the miss flagged, not abort the whole pass.
+    converged_small = bool(res_b.success) and sum_n <= SERVICE["n_cap"] // 8
+    same_traj = np.array_equal(np.asarray(res_b.n), np.asarray(res_f.n))
+    if not converged_small:
+        print(f"warning: bench query missed the n_cap/8 regime "
+              f"(success={bool(res_b.success)}, sum_n={sum_n})", flush=True)
+    if not same_traj:
+        print("warning: bucketed trajectory diverged from full-width",
+              flush=True)
+    emit.add("fused/estimate-fullwidth", t_f, {
+        "rows_touched": int(res_f.rows_sampled), "sum_n": sum_n,
+        "iters": int(res_f.iterations), "n_cap": SERVICE["n_cap"]})
+    emit.add("fused/estimate-bucketed", t_b, {
+        "rows_touched": int(res_b.rows_sampled), "sum_n": sum_n,
+        "iters": int(res_b.iterations),
+        "speedup": round(t_f / max(t_b, 1e-9), 2),
+        "converged_under_ncap8": converged_small,
+        "trajectory_equal": same_traj})
+
+    # --- looped vs batched service dispatch --------------------------------
+    q = 16
+    sdata = make_grouped(["normal", "exp"], 120_000, seed=5,
+                         biases=[4.0, 2.0])
+    skw = dict(B=100, n_min=300, n_max=600, max_iters=12,
+               n_cap=1 << 13 if not full else 1 << 14, seed=0,
+               reshuffle_every=10_000)
+    queries = [Query(func="avg", epsilon=float(e))
+               for e in np.linspace(0.08, 0.2, q)]
+
+    svc_loop = AQPService(sdata, batch_fused=False, **skw)
+    svc_loop.answer(queries)                 # compile per-lane program
+    rows0 = svc_loop.rows_touched
+    t0 = time.perf_counter()
+    rl = svc_loop.answer(queries)
+    t_loop = time.perf_counter() - t0
+    emit.add("fused/service-looped", t_loop / q, {
+        "rows_touched": svc_loop.rows_touched - rows0,
+        "dispatches": svc_loop.fused_dispatches // 2, "queries": q})
+
+    svc_batch = AQPService(sdata, batch_fused=True, **skw)
+    svc_batch.answer(queries)                # compile the 16-lane program
+    rows0 = svc_batch.rows_touched
+    t0 = time.perf_counter()
+    rb = svc_batch.answer(queries)
+    t_batch = time.perf_counter() - t0
+    dtheta = max(float(np.max(np.abs(b.theta - l.theta)))
+                 for b, l in zip(rb, rl))
+    same_n = all(np.array_equal(b.n, l.n) for b, l in zip(rb, rl))
+    emit.add("fused/service-batched", t_batch / q, {
+        "rows_touched": svc_batch.rows_touched - rows0,
+        "dispatches": svc_batch.fused_dispatches // 2, "queries": q,
+        "speedup": round(t_loop / max(t_batch, 1e-9), 2),
+        "answers_equal_n": same_n, "max_abs_dtheta": f"{dtheta:.2e}"})
+    if svc_batch.fused_dispatches // 2 != 1:
+        print("warning: batched path took more than 1 dispatch", flush=True)
+    if not same_n:
+        print("warning: batched answers diverged from looped answers",
+              flush=True)

@@ -3,12 +3,17 @@
     PYTHONPATH=src python -m benchmarks.run            # standard pass
     PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
     PYTHONPATH=src python -m benchmarks.run --only fig3
+    PYTHONPATH=src python -m benchmarks.run --only fused --json
 
-Prints ``name,us_per_call,derived`` CSV rows (skeleton contract).
+Prints ``name,us_per_call,derived`` CSV rows (skeleton contract); ``--json``
+additionally writes ``BENCH_fused.json`` with machine-readable
+``{bench, us_per_call, rows_touched}`` rows for the fused section, so the
+perf trajectory stays comparable across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 from .common import CsvEmitter
 
@@ -18,7 +23,11 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale data sizes (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="fig1|fig2|fig3|fig4|kern|roofline|store")
+                    choices=("fig1", "fig2", "fig3", "fig4", "kern",
+                             "roofline", "store", "fused"),
+                    help="run a single section (default: all)")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_<section>.json (fused section)")
     ap.add_argument("--trials", type=int, default=40,
                     help="simulated-confidence trials")
     args = ap.parse_args()
@@ -48,6 +57,16 @@ def main() -> None:
     if only in (None, "store"):
         from . import bench_sample_store
         bench_sample_store.run(emit, full=args.full)
+    if only in (None, "fused"):
+        from . import bench_fused
+        bench_fused.run(emit, full=args.full)
+        if args.json:
+            with open("BENCH_fused.json", "w") as fh:
+                json.dump(emit.json_rows("fused/"), fh, indent=2)
+            print("wrote BENCH_fused.json", flush=True)
+    elif args.json:
+        print("warning: --json only applies to the fused section "
+              "(use --only fused or run all sections)", flush=True)
 
 
 if __name__ == "__main__":

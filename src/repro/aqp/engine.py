@@ -35,7 +35,10 @@ class AQPEngine:
     n_min: int = 1000
     n_max: int = 2000
     seed: int = 0
-    use_kernel: bool = False
+    # Backend-aware kernel routing (kernels.resolve_use_kernel): "auto"
+    # compiles the Pallas bootstrap on TPU and uses the jnp path elsewhere,
+    # so the production engine never runs interpret-mode kernels on CPU.
+    use_kernel: "bool | str" = "auto"
     store: Optional[SampleStore] = None
 
     def __post_init__(self):

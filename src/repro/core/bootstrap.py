@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from .estimators import Estimator
+from ..kernels import prng
 
 Array = jax.Array
 
@@ -169,16 +170,104 @@ def estimate_error(
     dev = reps - theta_hat[:, None, :]                # (m, B, p)
     per_group_err = jnp.sqrt(jnp.sum(dev**2, axis=-1))  # (m, B)
     per_group_err = per_group_err * scale[:, None]
-    if metric == "l2":
-        joint = jnp.sqrt(jnp.sum(per_group_err**2, axis=0))  # (B,)
-    elif metric == "linf":
-        joint = jnp.max(per_group_err, axis=0)
-    elif metric == "l1":
-        joint = jnp.sum(per_group_err, axis=0)
-    else:  # pragma: no cover - defensive
-        raise ValueError(f"unknown metric {metric!r}")
+    joint = _joint_metric(per_group_err, metric, axis=0)  # (B,)
     e = jnp.quantile(joint, 1.0 - delta)
     return e, theta_hat * scale[:, None]
+
+
+def _joint_metric(per_group_err: Array, metric: str, axis: int = 0) -> Array:
+    """Combine per-group scalar errors into the joint metric along ``axis``."""
+    if metric == "l2":
+        return jnp.sqrt(jnp.sum(per_group_err**2, axis=axis))
+    if metric == "linf":
+        return jnp.max(per_group_err, axis=axis)
+    if metric == "l1":
+        return jnp.sum(per_group_err, axis=axis)
+    raise ValueError(f"unknown metric {metric!r}")  # pragma: no cover
+
+
+def estimate_error_lanes(
+    est: Estimator,
+    sample: Array,   # (q, m, w, c) width-bucketed slice of the carried buffer
+    mask: Array,     # (q, m, w)
+    seeds: Array,    # (q, m) uint32 counter-PRNG seeds (one stream per group)
+    scale: Array,    # (q, m)
+    deltas: Array,   # (q,)
+    B: int = 500,
+    metric: str = "l2",
+    use_kernel: bool = False,
+    interpret: "bool | None" = None,
+) -> Tuple[Array, Array]:
+    """Lane-batched ESTIMATE on counter-PRNG Poisson weights (SS7 phase C).
+
+    The fused loop's bucketed bootstrap: ``q`` independent query lanes over
+    the same grouping layout, each estimated on a width-``w`` slice of its
+    carried sample.  Weight entry (j, b) of group (lane, i) is
+    ``poisson1(hash3(seeds[lane, i], j, b))`` with j the ABSOLUTE buffer
+    slot, so the draws -- and hence (e, theta) -- are invariant to the
+    bucket width ``w``: widening the slice only appends zero-mask rows whose
+    weights multiply zeroed features.  This is what makes ``lax.switch``
+    over width buckets safe: crossing a bucket boundary changes compute
+    width, never the statistics.
+
+    Moment estimators contract all B replicates as one masked-features
+    matmul -- the formulation ``kernels/poisson_bootstrap`` implements on
+    TPU; with ``use_kernel`` the (w, B) weight matrix is generated in VMEM
+    by the kernel and never materialized in HBM.  Both paths consume the
+    SAME counter stream, so kernel vs jnp agree bit-comparably (interpret
+    mode) rather than only statistically.
+    """
+    q, m, w = mask.shape
+    v = (sample[..., 0] if sample.ndim == 4 else sample).astype(jnp.float32)
+    mf = mask.astype(jnp.float32)
+    if est.moments_finish is not None:
+        feats = jnp.stack([mf, mf * v, mf * v * v], axis=-1)   # (q, m, w, 3)
+        M_plain = jnp.sum(feats, axis=2)                       # (q, m, 3)
+        if use_kernel:
+            from ..kernels.poisson_bootstrap import ops as pb_ops
+            M = pb_ops.bootstrap_moments_masked(
+                v, mf, seeds, B, interpret=interpret)[..., :3]
+        else:
+            rows = jnp.arange(w, dtype=jnp.uint32)
+            cols = jnp.arange(B, dtype=jnp.uint32)
+
+            # One lane at a time (lax.map): the transient (m, w, B) weight
+            # tensor is the peak the phase-B per-query loop already paid;
+            # materializing all q lanes at once would scale it by the lane
+            # count (~2.4 GB at service defaults with 16 lanes in the top
+            # bucket).  The kernel path never materializes weights at all.
+            def lane_M(args):
+                feats_l, seeds_l = args                        # (m,w,3), (m,)
+                W = prng.poisson1_weights_at(
+                    seeds_l[:, None, None].astype(jnp.uint32),
+                    rows[:, None], cols[None, :])              # (m, w, B)
+                return jnp.einsum("mnb,mnp->mbp", W, feats_l)
+
+            M = jax.lax.map(lane_M, (feats, seeds))            # (q, m, B, 3)
+        # Guard dead replicates (sum w == 0): substitute the plain sample.
+        dead = M[..., 0:1] <= 0
+        M = jnp.where(dead, M_plain[:, :, None, :], M)
+        reps = est.moments_finish(M)                           # (q, m, B, 1)
+        theta = est.moments_finish(M_plain[:, :, None, :])[:, :, 0, :]
+    else:
+        rows = jnp.arange(w, dtype=jnp.uint32)
+        cols = jnp.arange(B, dtype=jnp.uint32)
+
+        def one_group(xg, mg, sg):
+            aux = est.prepare(xg)
+            Wg = prng.poisson1_weights_at(
+                sg, rows[:, None], cols[None, :]) * mg[:, None]  # (w, B)
+            dead = jnp.sum(Wg, axis=0, keepdims=True) <= 0
+            Wg = jnp.where(dead, mg[:, None], Wg)
+            reps = jax.vmap(lambda wb: est.apply(aux, wb))(Wg.T)  # (B, p)
+            return est.apply(aux, mg), reps
+
+        theta, reps = jax.vmap(jax.vmap(one_group))(sample, mf, seeds)
+    dev = reps - theta[:, :, None, :]                          # (q, m, B, p)
+    per_group_err = jnp.sqrt(jnp.sum(dev**2, axis=-1)) * scale[..., None]
+    joint = _joint_metric(per_group_err, metric, axis=1)       # (q, B)
+    e = jax.vmap(lambda j, d: jnp.quantile(j, 1.0 - d))(joint, deltas)
+    return e, theta * scale[..., None]
 
 
 def per_group_errors(

@@ -1,12 +1,13 @@
 """Fused on-device L2Miss: the whole MISS loop as one XLA program.
 
-Beyond-paper optimization (DESIGN.md SS7 phase B): the host-loop Algorithm 3
-round-trips device<->host every iteration (sample sizes out, errors in).  On a
-real TPU pod each round-trip costs dispatch latency and loses the collective
-schedule; here the *entire* sample->estimate->fit->predict->test loop runs
-inside ``lax.while_loop`` with fixed-capacity buffers:
+Beyond-paper optimization (DESIGN.md SS7 phases B + C): the host-loop
+Algorithm 3 round-trips device<->host every iteration (sample sizes out,
+errors in).  On a real TPU pod each round-trip costs dispatch latency and
+loses the collective schedule; here the *entire* sample->estimate->fit->
+predict->test loop runs inside ``lax.while_loop`` with fixed-capacity
+buffers:
 
-  * sample buffer   (m, n_cap, c) -- CARRIED across iterations.  Slot j of
+  * sample buffer   (q, m, n_cap, c) -- CARRIED across iterations.  Slot j of
     group i is bound to a fixed uniform row index by a counter PRNG
     (kernels/prng.hash3), so the sample sequence is *nested*: iteration k+1's
     sample extends iteration k's prefix instead of replacing it.  Each
@@ -15,6 +16,17 @@ inside ``lax.while_loop`` with fixed-capacity buffers:
     and the distinct rows gathered over a run equal the final watermark
     sum(filled) = stacked init windows + the prediction-phase prefix
     (reported as rows_sampled; >= final sum(n), see DESIGN.md SS3.2).
+  * width-adaptive ESTIMATE (phase C): the bootstrap runs on a power-of-two
+    width bucket of the carried buffer covering the current watermark, not
+    on the full ``n_cap`` capacity -- ``lax.switch`` over a static bucket
+    ladder, one branch per width, at most ``log2(n_cap / base) + 1``
+    branches compiled into the one program.  Replicate weights come from the
+    counter PRNG (entry (j, b) = poisson1(hash3(seed, j, b)), j the absolute
+    slot), so the draws are invariant to the bucket width: crossing a bucket
+    boundary changes compute width, never the statistics or which rows are
+    gathered.  With ``use_kernel`` the moment estimators route through
+    ``kernels/poisson_bootstrap`` and the weights are generated in VMEM,
+    never materialized in HBM.
   * error profile   (max_iters, m) + (max_iters,) -- row-masked WLS
   * two-point init rows are drawn inside the loop from the iteration counter
 
@@ -23,14 +35,21 @@ separately from the bootstrap stream, so a server can share one permuted
 prefix across many queries (serve/aqp_service.py) while keeping bootstrap
 replicates independent.
 
-A second entry point ``fused_l2miss_batch`` vmaps the loop over a batch of
-independent queries (same shapes, different data/eps) -- the multi-tenant
-AQP-server configuration; per-query early exit becomes predicated compute.
+Multi-lane serving (phase C): ``fused_l2miss_lanes`` runs ``q`` independent
+query lanes over ONE resident table inside a single while_loop -- values and
+offsets are shared operands (never copied per lane), only
+(scale, key, epsilon, delta, sample_key) carry a lane axis, and the width
+bucket is the max watermark across *active* lanes, so the switch index stays
+scalar and exactly one branch executes per iteration.  This is the
+single-dispatch batched configuration ``serve/aqp_service.py`` uses to
+answer a whole func group of tenant queries as one XLA program.
+``fused_l2miss_batch`` keeps the legacy vmap-over-tables entry for batches
+of *different* same-shape datasets.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +60,11 @@ from ..kernels import prng
 
 Array = jax.Array
 LOG_FLOOR = -60.0
+
+# Domain-separation constants for the counter-PRNG streams.
+_SALT_SAMPLE = 0x5A17      # slot -> row binding (must match serve docstring)
+_SALT_BOOT = 0xB007        # per-lane bootstrap seed base
+_SALT_GROUP = 0x7F4A7C15   # per-(iteration, group) bootstrap stream split
 
 
 class FusedResult(NamedTuple):
@@ -57,21 +81,34 @@ class FusedResult(NamedTuple):
     rows_sampled: Array # total rows gathered (== sum of the filled watermark)
 
 
+def _bucket_widths(n_cap: int, base: int) -> Tuple[int, ...]:
+    """Static power-of-two width ladder base, 2*base, ... topped by n_cap."""
+    base = min(max(int(base), 1), n_cap)
+    widths = []
+    w = base
+    while w < n_cap:
+        widths.append(w)
+        w *= 2
+    widths.append(n_cap)
+    return tuple(widths)
+
+
 @partial(
     jax.jit,
     static_argnames=(
         "est_name", "B", "n_min", "n_max", "l", "tau", "max_iters", "n_cap",
-        "backend", "metric", "growth_cap", "ext_cap",
+        "backend", "metric", "growth_cap", "ext_cap", "adaptive",
+        "use_kernel",
     ),
 )
-def fused_l2miss(
-    values: Array,        # (N, c) group-sorted rows
-    offsets: Array,       # (m + 1,)
-    scale: Array,         # (m,)
-    key: Array,
-    epsilon: Array,
-    delta: float,
-    sample_key: Optional[Array] = None,
+def fused_l2miss_lanes(
+    values: Array,        # (N, c) group-sorted rows -- SHARED across lanes
+    offsets: Array,       # (m + 1,) -- shared
+    scale: Array,         # (q, m)
+    keys: Array,          # (q, 2) per-lane bootstrap keys
+    epsilons: Array,      # (q,)
+    deltas: Array,        # (q,)
+    sample_keys: Optional[Array] = None,  # None | (2,) shared | (q, 2)
     *,
     est_name: str = "avg",
     B: int = 500,
@@ -85,11 +122,36 @@ def fused_l2miss(
     metric: str = "l2",
     growth_cap: float = 8.0,
     ext_cap: Optional[int] = None,
+    adaptive: bool = True,
+    use_kernel: bool = False,
 ) -> FusedResult:
+    """q query lanes, one resident table, one while_loop (SS7 phase C).
+
+    Every per-lane computation (fit, predict, window, bootstrap) is
+    lane-separable, so a lane's trajectory is bit-identical to running it
+    alone with the same keys; lanes that converge early are frozen
+    (predicated updates) while the loop serves the stragglers.  The ESTIMATE
+    width bucket is shared -- the max watermark over still-active lanes --
+    which is statistically invisible because the counter-PRNG weight draws
+    do not depend on the bucket width.
+
+    ``sample_keys``: ``None`` derives one slot->row binding per lane from
+    ``keys``; shape ``(2,)`` shares ONE binding (and slot table) across all
+    lanes -- the server's shared-prefix epoch policy; shape ``(q, 2)`` pins
+    one per lane.
+
+    ``backend="poisson"`` (default) uses the width-invariant counter-PRNG
+    Poisson weights (kernel-backed for moment estimators when
+    ``use_kernel``); other backends fall back to
+    :func:`~.bootstrap.estimate_error` per lane, whose jax.random draws are
+    width-dependent -- pair them with ``adaptive=False`` when exact
+    bucket-boundary invariance matters.
+    """
     est = get_estimator(est_name)
     m = offsets.shape[0] - 1
+    q = epsilons.shape[0]
     sizes = (offsets[1:] - offsets[:-1]).astype(jnp.int32)
-    log_eps = jnp.log(epsilon.astype(jnp.float32))
+    log_eps = jnp.log(epsilons.astype(jnp.float32))
     # Deterministic balanced two-point design (Eq. 15/16): cyclic shifts give
     # every group both levels, keeping all slopes identifiable.
     l_min = min(max(int(round(l * n_max / (n_min + n_max))), 1), l - 1)
@@ -100,75 +162,103 @@ def fused_l2miss(
     if ext_cap is None:
         ext_cap = min(n_cap, max(sampling.bucket_cap(n_max), n_cap // 8))
     ext_cap = min(max(ext_cap, n_max), n_cap)
+    widths = (_bucket_widths(n_cap, sampling.bucket_cap(min(n_max, n_cap)))
+              if adaptive else (n_cap,))
 
     # Slot -> row binding: slot j of group i reads row start_i + floor(u * sz)
     # with u from a counter hash of (sample_seed, i, j).  Computing the index
     # table is elementwise integer work -- no data rows are touched until the
-    # extension window gathers them.
-    skey = key if sample_key is None else sample_key
-    sample_seed = jax.random.bits(jax.random.fold_in(skey, 0x5A17), (),
-                                  jnp.uint32)
+    # extension window gathers them.  A shared (2,) sample key keeps ONE
+    # (m, n_cap) table; per-lane keys build (q, m, n_cap).
+    if sample_keys is None:
+        skeys = keys
+    else:
+        skeys = sample_keys
+    shared_slots = skeys.ndim == 1
+    starts = offsets[:-1].astype(jnp.int32)
     rows_i = jnp.arange(m, dtype=jnp.uint32)[:, None]
     cols_j = jnp.arange(n_cap, dtype=jnp.uint32)[None, :]
-    u = prng.uniform01(prng.hash3(sample_seed, rows_i, cols_j))   # (m, n_cap)
-    starts = offsets[:-1].astype(jnp.int32)
-    slot_idx = starts[:, None] + jnp.minimum(
-        (u * sizes[:, None]).astype(jnp.int32), sizes[:, None] - 1)
+
+    def slot_table(sk):
+        seed = jax.random.bits(jax.random.fold_in(sk, _SALT_SAMPLE), (),
+                               jnp.uint32)
+        u = prng.uniform01(prng.hash3(seed, rows_i, cols_j))   # (m, n_cap)
+        return starts[:, None] + jnp.minimum(
+            (u * sizes[:, None]).astype(jnp.int32), sizes[:, None] - 1)
+
+    slot_idx = slot_table(skeys) if shared_slots else jax.vmap(slot_table)(
+        skeys)
+
+    # Per-lane bootstrap seed base: the per-iteration, per-group streams are
+    # counter-derived (hash3) so the loop carries no RNG key state for the
+    # default backend.  The non-poisson fallbacks still consume c.keys.
+    boot_base = jax.vmap(
+        lambda kk: jax.random.bits(jax.random.fold_in(kk, _SALT_BOOT), (),
+                                   jnp.uint32))(keys)          # (q,)
 
     p_dim = est.out_dim(values.shape[1])
     c_dim = values.shape[1]
 
     class Carry(NamedTuple):
-        key: Array
-        k: Array
-        n_cur: Array
-        filled: Array       # (m,) gathered-slot watermark (monotone)
-        buf: Array          # (m, n_cap, c) carried nested sample
-        prof_n: Array
-        prof_loge: Array
-        e: Array
-        theta: Array
-        done: Array
-        failed: Array
-        beta: Array
-        r2: Array
+        keys: Array         # (q, 2) fallback-backend bootstrap keys
+        k: Array            # scalar global step (lanes step in lockstep)
+        iters: Array        # (q,) per-lane active-iteration count
+        n_cur: Array        # (q, m)
+        filled: Array       # (q, m) gathered-slot watermark (monotone)
+        buf: Array          # (q, m, n_cap, c) carried nested samples
+        prof_n: Array       # (q, max_iters, m)
+        prof_loge: Array    # (q, max_iters)
+        e: Array            # (q,)
+        theta: Array        # (q, m, p)
+        done: Array         # (q,) sticky
+        failed: Array       # (q,) sticky
+        beta: Array         # (q, m + 1)
+        r2: Array           # (q,)
 
     def cond(c: Carry):
-        return (~c.done) & (~c.failed) & (c.k < max_iters)
+        return jnp.any(~c.done & ~c.failed) & (c.k < max_iters)
 
     def body(c: Carry) -> Carry:
-        key, k_est = jax.random.split(c.key)
-        # ---- generate this iteration's n ----
+        keys2 = jax.vmap(jax.random.split)(c.keys)             # (q, 2, 2)
+        new_keys, kest = keys2[:, 0], keys2[:, 1]
+        active = ~c.done & ~c.failed                           # (q,)
+        # ---- generate this iteration's n (per lane) ----
         phase = (c.k + jnp.arange(m)) % l
         n_init = jnp.where(phase < l_min, n_min, n_max).astype(jnp.int32)
+        row_valid = (jnp.arange(max_iters) < c.k).astype(jnp.float32)
 
-        def predicted():
-            row_valid = (jnp.arange(max_iters) < c.k).astype(jnp.float32)
+        def lane_predict(prof_n, prof_loge, e_lane, n_cur, le, eps_lane):
             n_hat, fit = error_model.fit_and_predict(
-                c.prof_n, c.prof_loge, row_valid, log_eps, tau)
+                prof_n, prof_loge, row_valid, le, tau)
             n_next = jnp.ceil(n_hat).astype(jnp.int32)
             # Local-model correction from the last iterate (see l2miss).
             s = jnp.maximum(jnp.sum(fit.beta[1:]), 1e-3)
-            ratio = jnp.maximum(c.e / epsilon, 1.0)
+            ratio = jnp.maximum(e_lane / eps_lane, 1.0)
             local = jnp.ceil(
-                c.n_cur.astype(jnp.float32) * ratio ** (1.0 / s)).astype(jnp.int32)
+                n_cur.astype(jnp.float32) * ratio ** (1.0 / s)
+            ).astype(jnp.int32)
             n_next = jnp.maximum(n_next, local)
             # Trust region + growth guard (see l2miss.MissConfig.growth_cap).
-            cap = (c.n_cur.astype(jnp.float32) * growth_cap).astype(jnp.int32) + 1
+            cap = (n_cur.astype(jnp.float32) * growth_cap).astype(
+                jnp.int32) + 1
             n_next = jnp.minimum(n_next, cap)
-            n_next = jnp.maximum(n_next, c.n_cur + 1)
+            n_next = jnp.maximum(n_next, n_cur + 1)
             failed = fit.status == error_model.DIAG_FAILURE
             return n_next, fit.beta, fit.r2, failed
 
+        n_pred, beta, r2, failed_fit = jax.vmap(lane_predict)(
+            c.prof_n, c.prof_loge, c.e, c.n_cur, log_eps, epsilons)
         init_phase = c.k < l
-        n_pred, beta, r2, failed = predicted()
-        n_vec = jnp.where(init_phase, n_init, n_pred)
-        n_vec = jnp.clip(n_vec, 1, jnp.minimum(sizes, n_cap))
+        n_vec = jnp.where(init_phase, n_init[None, :], n_pred)
+        n_vec = jnp.clip(n_vec, 1, jnp.minimum(sizes, n_cap)[None, :])
         # Complete-sample clamp: one iteration can extend the resident prefix
         # by at most the window; a larger predicted jump is taken over
         # several iterations (growth guard keeps it monotone).
         n_vec = jnp.minimum(n_vec, c.filled + ext_cap)
-        failed = (~init_phase) & failed
+        # Frozen lanes neither grow nor gather: their window degenerates to
+        # the resident prefix and every update below is predicated on
+        # ``active``.
+        n_vec = jnp.where(active[:, None], n_vec, c.n_cur)
         # Init probes read STACKED slot windows [filled, filled + n): two
         # probes at the same design level must be different rows or the WLS
         # fit loses its independent variation.  Their union is the prefix
@@ -178,75 +268,171 @@ def fused_l2miss(
         # to an empty mask.
         win_lo = jnp.where(init_phase,
                            jnp.minimum(c.filled, n_cap - n_vec), 0)
-        win_hi = win_lo + n_vec
+        win_lo = jnp.where(active[:, None], win_lo, 0)
+        win_hi = jnp.where(active[:, None], win_lo + n_vec,
+                           jnp.minimum(c.n_cur, c.filled))
         n_eff = n_vec
-        # ---- extend the carried nested sample by the window only ----
-        slots = c.filled[:, None] + jnp.arange(ext_cap, dtype=jnp.int32)[None, :]
-        valid = slots < win_hi[:, None]
-        gidx = jnp.take_along_axis(
-            slot_idx, jnp.minimum(slots, n_cap - 1), axis=1)  # (m, ext_cap)
-        new_rows = values[gidx]                               # (m, ext_cap, c)
-        tgt = jnp.where(valid, slots, n_cap)                  # OOB -> dropped
-        buf = c.buf.at[jnp.arange(m)[:, None], tgt].set(new_rows, mode="drop")
+        # ---- extend the carried nested samples by the window only ----
+        slots = c.filled[:, :, None] + jnp.arange(
+            ext_cap, dtype=jnp.int32)[None, None, :]           # (q, m, ext)
+        valid = slots < win_hi[:, :, None]
+        clipped = jnp.minimum(slots, n_cap - 1)
+        if shared_slots:
+            gidx = jax.vmap(
+                lambda s: jnp.take_along_axis(slot_idx, s, axis=1))(clipped)
+        else:
+            gidx = jnp.take_along_axis(slot_idx, clipped, axis=2)
+        new_rows = values[gidx]                                # (q, m, ext, c)
+        tgt = jnp.where(valid, slots, n_cap)                   # OOB -> dropped
+        buf = c.buf.at[
+            jnp.arange(q)[:, None, None],
+            jnp.arange(m)[None, :, None],
+            tgt,
+        ].set(new_rows, mode="drop")
         filled = jnp.maximum(c.filled, win_hi)
-        # ---- bootstrap estimate on the masked window ----
-        pos = jnp.arange(n_cap, dtype=jnp.int32)[None, :]
-        mask = ((pos >= win_lo[:, None]) & (pos < win_hi[:, None])).astype(
-            jnp.float32)
-        e, theta = bootstrap.estimate_error(
-            est, buf, mask, scale, k_est, delta, B=B,
-            backend=backend, metric=metric)
-        loge = jnp.maximum(jnp.log(jnp.maximum(e, 1e-30)), LOG_FLOOR)
-        prof_n = c.prof_n.at[c.k].set(n_eff.astype(jnp.float32))
-        prof_loge = c.prof_loge.at[c.k].set(loge)
-        done = e <= epsilon
-        return Carry(key, c.k + 1, n_eff, filled, buf, prof_n, prof_loge,
-                     e, theta, done, failed,
-                     jnp.where(init_phase, c.beta, beta),
-                     jnp.where(init_phase, c.r2, r2))
+        # ---- bootstrap estimate on the active width bucket ----
+        # Bucket = max watermark over ACTIVE lanes: frozen lanes' (possibly
+        # larger) windows are excluded -- their estimate output is discarded
+        # below, so computing it on a truncated mask is harmless.
+        needed = jnp.maximum(
+            jnp.max(jnp.where(active[:, None], win_hi, 0)), 1)
+        w_arr = jnp.asarray(widths[:-1], jnp.int32)
+        b_idx = jnp.sum(needed > w_arr).astype(jnp.int32)
+        seeds = prng.hash3(
+            prng.hash3(boot_base, c.k.astype(jnp.uint32),
+                       jnp.uint32(_SALT_GROUP))[:, None],
+            jnp.arange(m, dtype=jnp.uint32)[None, :],
+            jnp.uint32(_SALT_GROUP))                           # (q, m)
+
+        def make_branch(width):
+            def branch(buf_b, lo_b, hi_b, seeds_b, kest_b):
+                bw = jax.lax.slice_in_dim(buf_b, 0, width, axis=2)
+                pos = jnp.arange(width, dtype=jnp.int32)[None, None, :]
+                msk = ((pos >= lo_b[:, :, None]) &
+                       (pos < hi_b[:, :, None])).astype(jnp.float32)
+                if backend == "poisson":
+                    return bootstrap.estimate_error_lanes(
+                        est, bw, msk, seeds_b, scale, deltas, B=B,
+                        metric=metric, use_kernel=use_kernel)
+                return jax.vmap(
+                    lambda s, mk, kk, sc, d: bootstrap.estimate_error(
+                        est, s, mk, sc, kk, d, B=B, backend=backend,
+                        metric=metric))(bw, msk, kest_b, scale, deltas)
+            return branch
+
+        e_b, theta_b = jax.lax.switch(
+            b_idx, [make_branch(w) for w in widths],
+            buf, win_lo, win_hi, seeds, kest)
+        loge = jnp.maximum(jnp.log(jnp.maximum(e_b, 1e-30)), LOG_FLOOR)
+        prof_n = c.prof_n.at[:, c.k].set(
+            jnp.where(active[:, None], n_eff.astype(jnp.float32),
+                      c.prof_n[:, c.k]))
+        prof_loge = c.prof_loge.at[:, c.k].set(
+            jnp.where(active, loge, c.prof_loge[:, c.k]))
+        done = c.done | (active & (e_b <= epsilons))
+        failed = c.failed | (active & ~init_phase & failed_fit)
+        return Carry(
+            keys=new_keys, k=c.k + 1, iters=c.iters + active.astype(jnp.int32),
+            n_cur=jnp.where(active[:, None], n_eff, c.n_cur),
+            filled=filled, buf=buf, prof_n=prof_n, prof_loge=prof_loge,
+            e=jnp.where(active, e_b, c.e),
+            theta=jnp.where(active[:, None, None], theta_b, c.theta),
+            done=done, failed=failed,
+            beta=jnp.where((active & ~init_phase)[:, None], beta, c.beta),
+            r2=jnp.where(active & ~init_phase, r2, c.r2),
+        )
 
     c0 = Carry(
-        key=key,
+        keys=keys,
         k=jnp.zeros((), jnp.int32),
-        n_cur=jnp.full((m,), n_min, jnp.int32),
-        filled=jnp.zeros((m,), jnp.int32),
-        buf=jnp.zeros((m, n_cap, c_dim), values.dtype),
-        prof_n=jnp.ones((max_iters, m), jnp.float32),
-        prof_loge=jnp.zeros((max_iters,), jnp.float32),
-        e=jnp.asarray(jnp.inf, jnp.float32),
-        theta=jnp.zeros((m, p_dim), jnp.float32),
-        done=jnp.asarray(False),
-        failed=jnp.asarray(False),
-        beta=jnp.zeros((m + 1,), jnp.float32),
-        r2=jnp.asarray(0.0, jnp.float32),
+        iters=jnp.zeros((q,), jnp.int32),
+        n_cur=jnp.full((q, m), n_min, jnp.int32),
+        filled=jnp.zeros((q, m), jnp.int32),
+        buf=jnp.zeros((q, m, n_cap, c_dim), values.dtype),
+        prof_n=jnp.ones((q, max_iters, m), jnp.float32),
+        prof_loge=jnp.zeros((q, max_iters), jnp.float32),
+        e=jnp.full((q,), jnp.inf, jnp.float32),
+        theta=jnp.zeros((q, m, p_dim), jnp.float32),
+        done=jnp.zeros((q,), bool),
+        failed=jnp.zeros((q,), bool),
+        beta=jnp.zeros((q, m + 1), jnp.float32),
+        r2=jnp.zeros((q,), jnp.float32),
     )
     c = jax.lax.while_loop(cond, body, c0)
+    row_live = (jnp.arange(max_iters)[None, :] < c.iters[:, None])
     return FusedResult(
-        n=c.n_cur, error=c.e, theta=c.theta, iterations=c.k,
+        n=c.n_cur, error=c.e, theta=c.theta, iterations=c.iters,
         success=c.done, failed=c.failed, beta=c.beta, r2=c.r2,
         profile_n=c.prof_n,
-        profile_e=jnp.exp(c.prof_loge) * (jnp.arange(max_iters) < c.k),
-        rows_sampled=jnp.sum(c.filled),
+        profile_e=jnp.exp(c.prof_loge) * row_live,
+        rows_sampled=jnp.sum(c.filled, axis=1),
     )
+
+
+def fused_l2miss(
+    values: Array,        # (N, c) group-sorted rows
+    offsets: Array,       # (m + 1,)
+    scale: Array,         # (m,)
+    key: Array,
+    epsilon: Array,
+    delta,
+    sample_key: Optional[Array] = None,
+    **static_kwargs,
+) -> FusedResult:
+    """Single-query entry point: the q=1 lane configuration.
+
+    Same contract as the pre-phase-C fused loop; accepts the same static
+    kwargs as :func:`fused_l2miss_lanes` (notably ``adaptive`` -- width
+    bucketing on by default -- and ``use_kernel``).
+    """
+    res = fused_l2miss_lanes(
+        values, offsets,
+        jnp.asarray(scale)[None],
+        jnp.asarray(key)[None],
+        jnp.asarray(epsilon, jnp.float32)[None],
+        jnp.asarray(delta, jnp.float32)[None],
+        None if sample_key is None else jnp.asarray(sample_key),
+        **static_kwargs)
+    return FusedResult(*(x[0] for x in res))
 
 
 def fused_l2miss_batch(values_batch, offsets, scale_batch, keys, epsilons,
                        delta, sample_keys=None, **static_kwargs):
-    """vmap the fused loop over a batch of same-shape queries.
+    """Batch entry point: shared-operand lanes or legacy per-lane tables.
 
-    ``values_batch (q, N, c)``, ``scale_batch (q, m)``, ``keys (q, 2)``,
-    ``epsilons (q,)``.  Offsets are shared (same grouping layout).  This is
-    the multi-query AQP-server configuration: one XLA program answers q
-    queries; per-query convergence is handled by the while_loop predicate.
-    ``sample_keys`` (optional, shape (q, 2) like ``keys`` -- one key per
-    lane, vmap does not broadcast) pins the nested sample prefixes; to
-    share ONE prefix across the batch, tile the key yourself:
-    ``jnp.broadcast_to(key, (q,) + key.shape)``.
+    * ``values_batch (N, c)`` -- SHARED-OPERAND lanes (SS7 phase C): the one
+      resident table is never copied per lane; only
+      ``scale_batch (q, m)``, ``keys (q, 2)``, ``epsilons (q,)``, ``delta``
+      (scalar or ``(q,)``) and ``sample_keys`` carry the lane axis.  Runs
+      :func:`fused_l2miss_lanes` -- one while_loop, scalar width-bucket
+      switch, exactly one XLA dispatch.  ``sample_keys=None`` derives
+      per-lane bindings from ``keys``; a single ``(2,)`` key shares ONE
+      permuted prefix across the batch (the server epoch policy); ``(q, 2)``
+      pins one per lane.
+    * ``values_batch (q, N, c)`` -- legacy vmap over per-lane tables (same
+      shapes, different data).  vmap turns the data-dependent width-bucket
+      switch into execute-all-branches, so this path forces
+      ``adaptive=False`` (full-width ESTIMATE, the phase-B behavior).
+
+    Offsets are shared (same grouping layout) in both configurations;
+    per-query convergence is handled inside the loop either way.
     """
-    fn = partial(fused_l2miss, delta=delta, **static_kwargs)
+    epsilons = jnp.asarray(epsilons, jnp.float32)
+    q = epsilons.shape[0]
+    deltas = jnp.broadcast_to(jnp.asarray(delta, jnp.float32), (q,))
+    if jnp.ndim(values_batch) == 2:
+        return fused_l2miss_lanes(
+            values_batch, offsets, scale_batch, keys, epsilons, deltas,
+            sample_keys, **static_kwargs)
+    static_kwargs["adaptive"] = False
+    fn = partial(fused_l2miss, **static_kwargs)
+    if sample_keys is not None and jnp.ndim(sample_keys) == 1:
+        # A single shared (2,) key: tile it across the vmapped lanes (the 2D
+        # shared-operand path above handles it natively).
+        sample_keys = jnp.broadcast_to(sample_keys, (q,) + sample_keys.shape)
     if sample_keys is None:
-        return jax.vmap(lambda v, s, k, e: fn(v, offsets, s, k, e))(
-            values_batch, scale_batch, keys, epsilons)
+        return jax.vmap(lambda v, s, k, e, d: fn(v, offsets, s, k, e, d))(
+            values_batch, scale_batch, keys, epsilons, deltas)
     return jax.vmap(
-        lambda v, s, k, e, sk: fn(v, offsets, s, k, e, sample_key=sk))(
-        values_batch, scale_batch, keys, epsilons, sample_keys)
+        lambda v, s, k, e, d, sk: fn(v, offsets, s, k, e, d, sample_key=sk))(
+        values_batch, scale_batch, keys, epsilons, deltas, sample_keys)

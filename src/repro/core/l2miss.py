@@ -30,6 +30,7 @@ import numpy as np
 from . import bootstrap, error_model, sampling
 from .estimators import Estimator, get as get_estimator
 from .framework import MissFailure, MissTrace, run_miss
+from ..kernels import resolve_use_kernel
 
 LOG_FLOOR = -60.0
 
@@ -58,7 +59,10 @@ class MissConfig:
     # optimum -- Lemma 5 monotonicity and termination are unaffected.
     growth_cap: float = 8.0
     seed: int = 0
-    use_kernel: bool = False            # route bootstrap through Pallas kernel
+    # Bootstrap backend selection: True / False / "auto" ("auto" routes the
+    # moment estimators through the Pallas kernel on TPU and stays on the
+    # jnp path elsewhere -- kernels.resolve_use_kernel).
+    use_kernel: "bool | str" = "auto"
     # Non-uniform linear sampling cost (paper SS8): minimize sum_i c_i n_i.
     cost_weights: Optional[Tuple[float, ...]] = None
 
@@ -73,7 +77,8 @@ def _estimate_fn(est_name: str, m: int, n_cap: int, c: int, B: int,
     capacity, so a full MISS run still compiles only O(log final_size)
     distinct programs.
     """
-    if use_kernel and est_name in ("avg", "proportion", "sum", "count", "var"):
+    if use_kernel and est_name in ("avg", "proportion", "sum", "count", "var",
+                                   "std"):
         from ..kernels.poisson_bootstrap import ops as pb_ops
 
         def fn(key, sample, mask, scale, delta):
@@ -178,7 +183,7 @@ class _L2MissSubroutines:
         n_cap = sample.shape[1]   # = store capacity bucket
         fn = _estimate_fn(
             self.est.name, self.m, n_cap, self.data.num_columns, cfg.B,
-            cfg.backend, cfg.metric, cfg.use_kernel)
+            cfg.backend, cfg.metric, resolve_use_kernel(cfg.use_kernel))
         self.key, sub = jax.random.split(self.key)
         e, theta = fn(sub, sample, mask, self._scale_dev, cfg.delta)
         return float(e), np.asarray(theta)

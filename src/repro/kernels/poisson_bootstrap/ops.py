@@ -1,11 +1,19 @@
 """jit'd wrappers around the poisson_bootstrap kernel.
 
-``bootstrap_moments``       one group  -> (B, 5) replicate moment sums
-``estimate_error_moments``  drop-in replacement for
-                            core.bootstrap.estimate_error for the moment
-                            estimators (avg/var/std/sum/count/proportion):
-                            same (e, theta_hat) contract, bootstrap replicates
-                            computed by the Pallas kernel.
+``bootstrap_moments``         one group  -> (B, 5) replicate moment sums
+``bootstrap_moments_masked``  masked variable-width entry point: arbitrary
+                              leading dims of (lane, group) samples, explicit
+                              uint32 counter seeds -- the fused-loop ESTIMATE
+                              path (DESIGN.md SS7 phase C).  Weight draws are
+                              a pure function of (seed, row, replicate), so
+                              the result is invariant to the padded width:
+                              slicing the sample to a wider bucket with zero
+                              mask beyond the watermark changes nothing.
+``estimate_error_moments``    drop-in replacement for
+                              core.bootstrap.estimate_error for the moment
+                              estimators (avg/var/std/sum/count/proportion):
+                              same (e, theta_hat) contract, bootstrap
+                              replicates computed by the Pallas kernel.
 
 On CPU containers the kernel runs in interpret mode (selected automatically);
 on TPU it compiles to Mosaic.
@@ -17,6 +25,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...core.bootstrap import _joint_metric
 from ...core.estimators import get as get_estimator
 from . import kernel as K
 
@@ -64,6 +73,50 @@ def bootstrap_moments(
     return M[:5, :B].T
 
 
+@functools.partial(jax.jit, static_argnames=("B", "tb", "tn", "interpret"))
+def bootstrap_moments_masked(
+    x: jax.Array,          # (..., n) sample values, any leading dims
+    mask: jax.Array,       # (..., n) validity
+    seeds: jax.Array,      # (...,) uint32 counter seeds, one per group
+    B: int = 500,
+    *,
+    tb: int = 256,
+    tn: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(..., B, 5) replicate moment sums for a batch of masked groups.
+
+    The fused-loop entry point: the caller (core/fused.py) slices its carried
+    sample buffer to the active width bucket and hands the slice here with
+    the per-(lane, group) counter seeds.  Weight entry (j, b) is
+    ``poisson1(hash3(seed, j, b))`` with j the ABSOLUTE slot index, so the
+    replicate sums do not depend on the bucket width -- only masked rows
+    contribute, and their draws are width-invariant.  ``ref.py``'s
+    :func:`~..ref.bootstrap_moments_masked_ref` materializes the same weight
+    matrix in jnp; interpret-mode parity is bit-comparable up to f32
+    accumulation order.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    n_pad = _round_up(n, tn)
+    B_pad = _round_up(B, tb)
+    xf = x.reshape((-1, n))
+    mf = mask.reshape((-1, n))
+    sf = seeds.reshape((-1,))
+
+    def one(xg, mg, sg):
+        feats = build_feats(xg, mg, n_pad)
+        M = K.poisson_bootstrap_moments(
+            feats, sg.astype(jnp.uint32).reshape(1), B_pad,
+            tb=tb, tn=tn, interpret=interpret)
+        return M[:5, :B].T
+
+    M = jax.vmap(one)(xf, mf, sf)
+    return M.reshape(lead + (B, 5))
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("est_name", "B", "metric", "tb", "tn", "interpret"))
@@ -103,13 +156,6 @@ def estimate_error_moments(
 
     theta_hat, errs = jax.vmap(per_group)(sample, mask, seeds)  # (m,1),(m,B)
     errs = errs * scale[:, None]
-    if metric == "l2":
-        joint = jnp.sqrt(jnp.sum(errs**2, axis=0))
-    elif metric == "linf":
-        joint = jnp.max(errs, axis=0)
-    elif metric == "l1":
-        joint = jnp.sum(errs, axis=0)
-    else:  # pragma: no cover - defensive
-        raise ValueError(f"unknown metric {metric!r}")
+    joint = _joint_metric(errs, metric, axis=0)
     e = jnp.quantile(joint, 1.0 - delta)
     return e, theta_hat * scale[:, None]

@@ -28,6 +28,31 @@ def poisson_bootstrap_moments_ref(feats: jax.Array, seed: jax.Array,
     return feats @ W
 
 
+def bootstrap_moments_masked_ref(x: jax.Array, mask: jax.Array,
+                                 seeds: jax.Array, B: int) -> jax.Array:
+    """(..., B, 5) oracle for ops.bootstrap_moments_masked.
+
+    Materializes the per-group (n, B) weight matrix from the SAME counter
+    stream (entry (j, b) = poisson1(hash3(seed, j, b)), j the absolute slot
+    index) and contracts it with the masked moment features.  Because the
+    draws are a pure function of (seed, j, b), padding ``x``/``mask`` with
+    zero-mask rows leaves the result exactly unchanged -- the width-bucket
+    invariance contract of DESIGN.md SS7 phase C.
+    """
+    n = x.shape[-1]
+    rows = jnp.arange(n, dtype=jnp.uint32)
+    cols = jnp.arange(B, dtype=jnp.uint32)
+    W = prng.poisson1_weights_at(
+        seeds[..., None, None].astype(jnp.uint32),
+        rows[:, None], cols[None, :])                      # (..., n, B)
+    xf = x.astype(jnp.float32)
+    mf = mask.astype(jnp.float32)
+    x2 = xf * xf
+    feats = jnp.stack(
+        [mf, mf * xf, mf * x2, mf * x2 * xf, mf * x2 * x2], axis=-1)
+    return jnp.einsum("...nb,...np->...bp", W, feats)
+
+
 def moments_to_stats(M: jax.Array) -> dict:
     """Finisher reference: M rows are [sum w, sum wx, sum wx^2, wx^3, wx^4]."""
     cnt = jnp.maximum(M[0], 1e-12)

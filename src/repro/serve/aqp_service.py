@@ -1,9 +1,12 @@
 """AQP-as-a-service: a multi-tenant query server over a resident dataset.
 
-Queries arrive with per-request (func, epsilon, delta, metric); same-shaped
-moment queries are answered in fused batches via ``fused_l2miss`` (one XLA
-program, the multi-query configuration of DESIGN.md SS7 phase B); everything
-else falls back to the host engine.
+Queries arrive with per-request (func, epsilon, delta, metric); same-func L2
+moment queries are answered in ONE batched fused dispatch per func group
+(``fused_l2miss_batch`` shared-operand lanes, DESIGN.md SS7 phase C): the
+resident table enters the program once, each query is a lane of the
+multi-lane while_loop, and the ESTIMATE step runs on the width bucket of the
+active watermark instead of the full capacity.  Everything else falls back
+to the host engine.
 
 Sample reuse (DESIGN.md SS3.2): the service owns ONE resident SampleStore per
 dataset, shared by the host engine's pilot estimates and every tenant's
@@ -12,6 +15,11 @@ tenants extend the same permuted prefixes instead of each re-scanning rows.
 Because answers served from one prefix are correlated, an eviction/reshuffle
 policy redraws the permutations (and rotates the fused sample key) every
 ``reshuffle_every`` queries; ``refresh()`` does the same on data updates.
+
+Accounting: ``fused_dispatches`` counts XLA program launches on the fused
+path (one per func group when ``batch_fused``; one per query otherwise) and
+``wall_time_s`` on a batched response is dispatch time / lane count -- the
+amortized per-query latency, not the cumulative group time.
 """
 from __future__ import annotations
 
@@ -25,8 +33,9 @@ import numpy as np
 
 from ..aqp.engine import AQPEngine
 from ..aqp.query import Query
-from ..core.fused import fused_l2miss
+from ..core.fused import fused_l2miss_batch
 from ..core.sampling import GroupedData, SampleStore
+from ..kernels import resolve_use_kernel
 
 
 @dataclasses.dataclass
@@ -47,13 +56,20 @@ class AQPService:
     def __init__(self, data: GroupedData, *, B: int = 300, n_min: int = 1000,
                  n_max: int = 2000, max_iters: int = 24,
                  n_cap: int = 1 << 16, seed: int = 0,
-                 reshuffle_every: int = 256):
+                 reshuffle_every: int = 256,
+                 use_kernel: "bool | str" = "auto",
+                 batch_fused: bool = True):
         self.data = data
         self.store = SampleStore(data, seed=seed)
         self.engine = AQPEngine(data, B=B, n_min=n_min, n_max=n_max,
-                                seed=seed, store=self.store)
+                                seed=seed, store=self.store,
+                                use_kernel=use_kernel)
         self.B, self.n_min, self.n_max = B, n_min, n_max
         self.max_iters, self.n_cap = max_iters, n_cap
+        self.use_kernel = resolve_use_kernel(use_kernel)
+        # ``batch_fused=False`` restores the per-query dispatch loop -- kept
+        # for the looped-vs-batched benchmark and equivalence tests.
+        self.batch_fused = bool(batch_fused)
         self.key = jax.random.PRNGKey(seed)
         self._offsets = jnp.asarray(data.offsets)
         self._m = data.num_groups
@@ -63,13 +79,14 @@ class AQPService:
         self._queries_in_epoch = 0
         self._epoch_counter = 0
         self._fused_rows = 0
+        self.fused_dispatches = 0
         self._sample_key = jax.random.fold_in(
             jax.random.PRNGKey(seed ^ 0x5A17), 0)
 
     @property
     def rows_touched(self) -> int:
         """Cumulative rows sampled across ALL paths: host-engine store
-        gathers plus the fused programs' in-loop gathers (each fused query
+        gathers plus the fused programs' in-loop gathers (each fused lane
         reports its filled watermark as ``FusedResult.rows_sampled``)."""
         return self.store.rows_touched + self._fused_rows
 
@@ -95,45 +112,76 @@ class AQPService:
             self.store.reshuffle()
             self._rotate_epoch()
 
+    def _dispatch_fused(self, func: str, queries: List[Query],
+                        keys) -> "list":
+        """One batched fused program for ``len(queries)`` same-func lanes."""
+        k = len(queries)
+        eps = jnp.asarray([q.epsilon for q in queries], jnp.float32)
+        deltas = jnp.asarray([q.delta for q in queries], jnp.float32)
+        res = fused_l2miss_batch(
+            self.data.values, self._offsets,
+            jnp.ones((k, self._m), jnp.float32), jnp.stack(keys), eps,
+            deltas, sample_keys=self._sample_key,
+            est_name=func, B=self.B, n_min=self.n_min, n_max=self.n_max,
+            l=min(self._m + 2, 12), max_iters=self.max_iters,
+            n_cap=self.n_cap, use_kernel=self.use_kernel)
+        self.fused_dispatches += 1
+        return res
+
     def answer(self, queries: List[Query]) -> List[AQPResponse]:
         """Answer a batch of queries; fuse the L2 moment queries on device."""
         out: dict[int, AQPResponse] = {}
         fused_idx = [i for i, q in enumerate(queries)
                      if (q.metric == "l2" and q.func in self.FUSABLE
-                         and q.epsilon is not None)]
+                         and q.epsilon is not None
+                         and q.predicate is None)]
         rest = [i for i in range(len(queries)) if i not in fused_idx]
 
-        # --- fused on-device pass: one while_loop per func group ---
+        # --- fused on-device pass: ONE batched dispatch per func group ---
         # All fused queries of an epoch share ``self._sample_key``: their
-        # slot->row bindings are identical, so every tenant's program reads
-        # the SAME underlying rows (one hot working set for the storage /
-        # cache tiers beneath, rather than each query scattering across the
-        # whole table).  Each program still performs its own gathers, and
-        # identical rows mean correlated answers -- that is the deliberate
-        # trade the reshuffle_every policy bounds.  Bootstrap keys stay
-        # per-query.
+        # slot->row bindings are identical, so every lane of the batched
+        # program reads the SAME underlying rows (one hot working set for
+        # the storage / cache tiers beneath, and -- with the shared (2,)
+        # sample key -- one slot table inside the program rather than one
+        # per lane).  Identical rows mean correlated answers; that is the
+        # deliberate trade the reshuffle_every policy bounds.  Bootstrap
+        # keys stay per-query, so replicate noise is independent.
         by_func: dict[str, List[int]] = {}
         for i in fused_idx:
             by_func.setdefault(queries[i].func, []).append(i)
         for func, idxs in by_func.items():
-            t0 = time.perf_counter()
             self.key, *keys = jax.random.split(self.key, len(idxs) + 1)
-            for i, k in zip(idxs, keys):
-                q = queries[i]
-                res = fused_l2miss(
-                    self.data.values, self._offsets,
-                    jnp.ones((self._m,), jnp.float32), k,
-                    jnp.float32(q.epsilon), q.delta, self._sample_key,
-                    est_name=func,
-                    B=self.B, n_min=self.n_min, n_max=self.n_max,
-                    l=min(self._m + 2, 12), max_iters=self.max_iters,
-                    n_cap=self.n_cap)
-                self._fused_rows += int(res.rows_sampled)
-                out[i] = AQPResponse(
-                    qid=i, theta=np.asarray(res.theta),
-                    error=float(res.error), success=bool(res.success),
-                    n=np.asarray(res.n),
-                    wall_time_s=time.perf_counter() - t0)
+            if self.batch_fused:
+                t0 = time.perf_counter()
+                res = self._dispatch_fused(
+                    func, [queries[i] for i in idxs], keys)
+                theta = np.asarray(res.theta)      # forces the dispatch
+                errs, succ = np.asarray(res.error), np.asarray(res.success)
+                ns, rows = np.asarray(res.n), np.asarray(res.rows_sampled)
+                # Honest per-query latency: the group cost is one dispatch;
+                # each lane's share is dispatch time / lane count (lanes run
+                # concurrently inside the one program, so per-lane wall
+                # clock is not observable -- amortized cost is).
+                per_q = (time.perf_counter() - t0) / len(idxs)
+                for lane, i in enumerate(idxs):
+                    self._fused_rows += int(rows[lane])
+                    out[i] = AQPResponse(
+                        qid=i, theta=theta[lane], error=float(errs[lane]),
+                        success=bool(succ[lane]), n=ns[lane],
+                        wall_time_s=per_q)
+            else:
+                # Per-query loop (legacy): k dispatches, timed individually.
+                for i, key in zip(idxs, keys):
+                    t0 = time.perf_counter()
+                    res = self._dispatch_fused(func, [queries[i]], [key])
+                    theta = np.asarray(res.theta)
+                    self._fused_rows += int(np.asarray(res.rows_sampled)[0])
+                    out[i] = AQPResponse(
+                        qid=i, theta=theta[0],
+                        error=float(np.asarray(res.error)[0]),
+                        success=bool(np.asarray(res.success)[0]),
+                        n=np.asarray(res.n)[0],
+                        wall_time_s=time.perf_counter() - t0)
 
         # --- host-engine fallback (order/diff/linf/predicates/quantiles) ---
         for i in rest:
