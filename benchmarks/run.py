@@ -24,16 +24,20 @@ def main() -> None:
                     help="paper-scale data sizes (slow on CPU)")
     ap.add_argument("--only", default=None,
                     choices=("fig1", "fig2", "fig3", "fig4", "kern",
-                             "roofline", "store", "fused"),
+                             "roofline", "store", "fused", "serve"),
                     help="run a single section (default: all)")
     ap.add_argument("--json", action="store_true",
-                    help="also write BENCH_<section>.json (fused section)")
+                    help="also write BENCH_<section>.json "
+                         "(fused / serve sections)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI smoke runs (serve section)")
     ap.add_argument("--trials", type=int, default=40,
                     help="simulated-confidence trials")
     args = ap.parse_args()
     emit = CsvEmitter()
     emit.header()
     only = args.only
+    wrote_json = False
 
     if only in (None, "fig1"):
         from . import bench_applicability
@@ -64,9 +68,22 @@ def main() -> None:
             with open("BENCH_fused.json", "w") as fh:
                 json.dump(emit.json_rows("fused/"), fh, indent=2)
             print("wrote BENCH_fused.json", flush=True)
-    elif args.json:
-        print("warning: --json only applies to the fused section "
-              "(use --only fused or run all sections)", flush=True)
+            wrote_json = True
+    if only in (None, "serve"):
+        from . import bench_serve_pool
+        bench_serve_pool.run(emit, full=args.full, smoke=args.smoke)
+        if args.json:
+            with open("BENCH_serve.json", "w") as fh:
+                json.dump(emit.json_rows(
+                    "serve/",
+                    keys=("bench", "us_per_call", "rows_touched",
+                          "dispatches", "speedup_vs_loop")), fh, indent=2)
+            print("wrote BENCH_serve.json", flush=True)
+            wrote_json = True
+    if args.json and not wrote_json:
+        print("warning: --json only applies to the fused/serve sections "
+              "(use --only fused / --only serve or run all sections)",
+              flush=True)
 
 
 if __name__ == "__main__":

@@ -96,6 +96,9 @@ class AQPEngine:
             return extensions.run_maxmiss(data, q.func, cfg, store=store)
         if q.metric == "l1":
             return extensions.run_lpmiss(data, q.func, cfg, p=1, store=store)
+        if q.metric == "lp":
+            return extensions.run_lpmiss(data, q.func, cfg, p=q.lp,
+                                         store=store)
         if q.metric == "diff":
             return extensions.run_diffmiss(data, q.func, cfg, store=store)
         if q.metric == "order":

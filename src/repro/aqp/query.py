@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional
 
-METRICS = ("l2", "linf", "l1", "order", "diff")
+METRICS = ("l2", "linf", "l1", "lp", "order", "diff")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,11 +25,19 @@ class Query:
     delta: float = 0.05
     metric: str = "l2"
     predicate: Optional[Callable] = None   # row predicate for COUNT queries
-    lp: Optional[float] = None             # for metric="lp"
+    lp: Optional[float] = None             # the p of metric="lp" (p >= 1)
 
     def __post_init__(self):
         if self.metric not in METRICS:
             raise ValueError(f"metric {self.metric!r} not in {METRICS}")
+        if self.metric == "lp":
+            if self.lp is None or self.lp < 1:
+                raise ValueError(
+                    f"metric='lp' requires lp >= 1; got {self.lp!r}")
+        elif self.lp is not None:
+            raise ValueError(
+                f"lp={self.lp!r} only applies to metric='lp' "
+                f"(got metric {self.metric!r})")
         if self.metric != "order" and (self.epsilon is None) == (
                 self.epsilon_rel is None):
             raise ValueError("exactly one of epsilon / epsilon_rel required")

@@ -4,7 +4,8 @@ Public API:
   MissConfig, run_l2miss         -- Algorithm 3 (host loop, jitted subroutines)
   run_maxmiss / run_lpmiss / run_ordermiss / run_diffmiss -- SS5 extensions
   fused_l2miss                   -- whole-loop on-device variant (beyond paper)
-  estimators.get / REGISTRY      -- analytical functions f
+  fused_step / LaneState / LaneParams -- resumable step API (phase D serving)
+  estimators.get / REGISTRY / get_by_id -- analytical functions f (id-indexed)
   GroupedData                    -- grouped dataset + inverted-index layout
   baselines                      -- BLK / SPS / IFocus / MiniBatch
 """
@@ -20,15 +21,29 @@ from .extensions import (
     run_ordermiss,
 )
 from .framework import MissFailure, MissTrace, run_miss
-from .fused import FusedResult, fused_l2miss, fused_l2miss_batch
+from .fused import (
+    FusedResult,
+    LaneParams,
+    LaneState,
+    fused_l2miss,
+    fused_l2miss_batch,
+    fused_l2miss_lanes,
+    fused_step,
+    init_lane_state,
+    lanes_result,
+    make_lane_params,
+)
 from .l2miss import MissConfig, exact_answer, run_l2miss
 from .sampling import GroupedData
 
 __all__ = [
-    "Estimator", "FusedResult", "GroupedData", "MissConfig", "MissFailure",
+    "Estimator", "FusedResult", "GroupedData", "LaneParams", "LaneState",
+    "MissConfig", "MissFailure",
     "MissTrace", "baselines", "bootstrap", "error_model", "estimators",
     "evaluate", "exact_answer", "extensions", "fused_l2miss",
-    "fused_l2miss_batch", "metric_value", "order_bound", "run_diffmiss",
+    "fused_l2miss_batch", "fused_l2miss_lanes", "fused_step",
+    "init_lane_state", "lanes_result", "make_lane_params",
+    "metric_value", "order_bound", "run_diffmiss",
     "run_l2miss", "run_lpmiss", "run_maxmiss", "run_miss",
     "run_normalmiss", "run_ordermiss",
     "sampling",

@@ -21,7 +21,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .estimators import Estimator
+from .estimators import Estimator, moment_family
 from ..kernels import prng
 
 Array = jax.Array
@@ -186,6 +186,64 @@ def _joint_metric(per_group_err: Array, metric: str, axis: int = 0) -> Array:
     raise ValueError(f"unknown metric {metric!r}")  # pragma: no cover
 
 
+def _lane_moment_sums(v, mf, seeds, B, use_kernel, interpret,
+                      lane_active=None):
+    """Replicate moment sums shared by every moments-fast-path estimator.
+
+    ``(M (q, m, B, 3), M_plain (q, m, 3))`` where row b of M is
+    ``[sum w, sum w x, sum w x^2]`` under the counter-PRNG Poisson weights
+    and M_plain is the unweighted (mask-only) sums.  Heterogeneous lanes
+    (``estimate_error_lanes_het``) and homogeneous lanes
+    (``estimate_error_lanes``) both come through here, so a lane's replicate
+    sums are identical whichever entry point served it.
+
+    ``lane_active`` (optional, (q,) bool): lanes marked inactive SKIP the
+    weight generation + contraction entirely and report zero sums.  Callers
+    may only pass it when they discard inactive lanes' outputs (the fused
+    loop's frozen-lane predication) -- it changes what those lanes COST,
+    never what active lanes compute: the jnp path walks lanes with
+    ``lax.map``, where a ``lax.cond`` is a real branch, not the
+    execute-both of vmapped control flow.  This is what keeps a lane pool's
+    straggler tail (one live lane, q-1 parked) from paying q lanes of
+    bootstrap compute per tick.  The kernel path ignores the hint (the MXU
+    tile schedule is shape-static).
+    """
+    q, m, w = mf.shape
+    feats = jnp.stack([mf, mf * v, mf * v * v], axis=-1)       # (q, m, w, 3)
+    M_plain = jnp.sum(feats, axis=2)                           # (q, m, 3)
+    if use_kernel:
+        from ..kernels.poisson_bootstrap import ops as pb_ops
+        M = pb_ops.bootstrap_moments_masked(
+            v, mf, seeds, B, interpret=interpret)[..., :3]
+    else:
+        rows = jnp.arange(w, dtype=jnp.uint32)
+        cols = jnp.arange(B, dtype=jnp.uint32)
+
+        # One lane at a time (lax.map): the transient (m, w, B) weight
+        # tensor is the peak the phase-B per-query loop already paid;
+        # materializing all q lanes at once would scale it by the lane
+        # count (~2.4 GB at service defaults with 16 lanes in the top
+        # bucket).  The kernel path never materializes weights at all.
+        def lane_M(feats_l, seeds_l):                          # (m,w,3), (m,)
+            W = prng.poisson1_weights_at(
+                seeds_l[:, None, None].astype(jnp.uint32),
+                rows[:, None], cols[None, :])                  # (m, w, B)
+            return jnp.einsum("mnb,mnp->mbp", W, feats_l)
+
+        if lane_active is None:
+            M = jax.lax.map(lambda a: lane_M(*a), (feats, seeds))
+        else:
+            M = jax.lax.map(
+                lambda a: jax.lax.cond(
+                    a[2], lambda t: lane_M(t[0], t[1]),
+                    lambda t: jnp.zeros((m, B, 3), jnp.float32), a[:2]),
+                (feats, seeds, lane_active))                   # (q, m, B, 3)
+    # Guard dead replicates (sum w == 0): substitute the plain sample.
+    dead = M[..., 0:1] <= 0
+    M = jnp.where(dead, M_plain[:, :, None, :], M)
+    return M, M_plain
+
+
 def estimate_error_lanes(
     est: Estimator,
     sample: Array,   # (q, m, w, c) width-bucketed slice of the carried buffer
@@ -197,6 +255,7 @@ def estimate_error_lanes(
     metric: str = "l2",
     use_kernel: bool = False,
     interpret: "bool | None" = None,
+    lane_active: Optional[Array] = None,
 ) -> Tuple[Array, Array]:
     """Lane-batched ESTIMATE on counter-PRNG Poisson weights (SS7 phase C).
 
@@ -221,32 +280,8 @@ def estimate_error_lanes(
     v = (sample[..., 0] if sample.ndim == 4 else sample).astype(jnp.float32)
     mf = mask.astype(jnp.float32)
     if est.moments_finish is not None:
-        feats = jnp.stack([mf, mf * v, mf * v * v], axis=-1)   # (q, m, w, 3)
-        M_plain = jnp.sum(feats, axis=2)                       # (q, m, 3)
-        if use_kernel:
-            from ..kernels.poisson_bootstrap import ops as pb_ops
-            M = pb_ops.bootstrap_moments_masked(
-                v, mf, seeds, B, interpret=interpret)[..., :3]
-        else:
-            rows = jnp.arange(w, dtype=jnp.uint32)
-            cols = jnp.arange(B, dtype=jnp.uint32)
-
-            # One lane at a time (lax.map): the transient (m, w, B) weight
-            # tensor is the peak the phase-B per-query loop already paid;
-            # materializing all q lanes at once would scale it by the lane
-            # count (~2.4 GB at service defaults with 16 lanes in the top
-            # bucket).  The kernel path never materializes weights at all.
-            def lane_M(args):
-                feats_l, seeds_l = args                        # (m,w,3), (m,)
-                W = prng.poisson1_weights_at(
-                    seeds_l[:, None, None].astype(jnp.uint32),
-                    rows[:, None], cols[None, :])              # (m, w, B)
-                return jnp.einsum("mnb,mnp->mbp", W, feats_l)
-
-            M = jax.lax.map(lane_M, (feats, seeds))            # (q, m, B, 3)
-        # Guard dead replicates (sum w == 0): substitute the plain sample.
-        dead = M[..., 0:1] <= 0
-        M = jnp.where(dead, M_plain[:, :, None, :], M)
+        M, M_plain = _lane_moment_sums(v, mf, seeds, B, use_kernel, interpret,
+                                       lane_active)
         reps = est.moments_finish(M)                           # (q, m, B, 1)
         theta = est.moments_finish(M_plain[:, :, None, :])[:, :, 0, :]
     else:
@@ -264,6 +299,62 @@ def estimate_error_lanes(
 
         theta, reps = jax.vmap(jax.vmap(one_group))(sample, mf, seeds)
     dev = reps - theta[:, :, None, :]                          # (q, m, B, p)
+    per_group_err = jnp.sqrt(jnp.sum(dev**2, axis=-1)) * scale[..., None]
+    joint = _joint_metric(per_group_err, metric, axis=1)       # (q, B)
+    e = jax.vmap(lambda j, d: jnp.quantile(j, 1.0 - d))(joint, deltas)
+    return e, theta * scale[..., None]
+
+
+def estimate_error_lanes_het(
+    sample: Array,   # (q, m, w, c) width-bucketed slice of the carried buffer
+    mask: Array,     # (q, m, w)
+    seeds: Array,    # (q, m) uint32 counter-PRNG seeds
+    est_fids: Array, # (q,) int32 moment-FAMILY indices (estimators.moment_family)
+    scale: Array,    # (q, m)
+    deltas: Array,   # (q,)
+    B: int = 500,
+    metric: str = "l2",
+    use_kernel: bool = False,
+    interpret: "bool | None" = None,
+    lane_active: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Heterogeneous-lane ESTIMATE: one pool, a different estimator per lane.
+
+    Every moments-fast-path estimator (avg/proportion/var/std/sum/count)
+    shares the SAME replicate moment sums -- the masked counter-PRNG weight
+    matmul of :func:`_lane_moment_sums` -- and differs only in the cheap
+    ``moments_finish`` epilogue.  So mixed-func lanes cost one moment pass
+    (kernel-backed under ``use_kernel``) plus a per-lane ``lax.switch`` over
+    the family's finish branches.  Because the selected branch applies the
+    identical function to identical sums, a lane's (e, theta) here equals
+    the homogeneous :func:`estimate_error_lanes` for its estimator -- which
+    is what lets a heterogeneous lane pool answer each lane bit-comparably
+    to a solo single-func run (serve/lane_pool.py).
+
+    ``est_fids`` are FAMILY indices (branch positions from
+    ``estimators.moment_family_index``), not global registry ids.  SUM/COUNT
+    lanes carry their population scale in their ``scale`` row (the paper
+    SS2.2.1 transformation), exactly as the homogeneous path does.
+    """
+    fam = moment_family()
+    v = (sample[..., 0] if sample.ndim == 4 else sample).astype(jnp.float32)
+    mf = mask.astype(jnp.float32)
+    M, M_plain = _lane_moment_sums(v, mf, seeds, B, use_kernel, interpret,
+                                   lane_active)
+    branches = tuple(e.moments_finish for e in fam)
+
+    def finish_lane(fid, M_l, Mp_l):
+        # Under vmap the switch lowers to compute-all-and-select; the finish
+        # epilogues are elementwise on (m, B, 3) sums, so that is noise next
+        # to the moment matmul -- and select keeps the chosen branch's values
+        # bitwise intact.
+        reps_l = jax.lax.switch(fid, branches, M_l)            # (m, B, 1)
+        th_l = jax.lax.switch(fid, branches, Mp_l[:, None, :])[:, 0, :]
+        return reps_l, th_l
+
+    reps, theta = jax.vmap(finish_lane)(
+        est_fids.astype(jnp.int32), M, M_plain)
+    dev = reps - theta[:, :, None, :]                          # (q, m, B, 1)
     per_group_err = jnp.sqrt(jnp.sum(dev**2, axis=-1)) * scale[..., None]
     joint = _joint_metric(per_group_err, metric, axis=1)       # (q, B)
     e = jax.vmap(lambda j, d: jnp.quantile(j, 1.0 - d))(joint, deltas)

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +44,11 @@ class Estimator:
       needs_population_scale: SUM/COUNT-style estimators whose result is
         ``|D|_i * consistent_estimator``; the engine applies the per-group
         scale outside (paper SS2.2.1 transformation of inconsistent estimators).
+      eid: stable integer id assigned at registration, in registration order.
+        Device code routes per-lane estimator selection through this id
+        (``lax.switch`` branch tables built from the id-indexed registry);
+        registration order is therefore part of the serialized-trajectory
+        contract and new estimators must only ever be APPENDED.
     """
 
     name: str
@@ -57,12 +62,28 @@ class Estimator:
     # compute ALL replicates as one (B, n) @ (n, 3) matmul -- the MXU
     # formulation implemented by kernels/poisson_bootstrap (DESIGN.md SS3).
     moments_finish: Optional[Callable[[Array], Array]] = None
+    eid: int = -1
 
 
 REGISTRY: Dict[str, Estimator] = {}
+REGISTRY_BY_ID: List[Estimator] = []
 
 
 def register(est: Estimator) -> Estimator:
+    """Register (or re-register) an estimator, preserving the id index.
+
+    A fresh name is APPENDED (eid = position); re-registering an existing
+    name replaces it IN PLACE under its original eid -- either way the
+    invariant ``REGISTRY_BY_ID[i].eid == i`` holds, which device branch
+    tables (lax.switch over ids) rely on.
+    """
+    prev = REGISTRY.get(est.name)
+    if prev is not None:
+        est = dataclasses.replace(est, eid=prev.eid)
+        REGISTRY_BY_ID[prev.eid] = est
+    else:
+        est = dataclasses.replace(est, eid=len(REGISTRY_BY_ID))
+        REGISTRY_BY_ID.append(est)
     REGISTRY[est.name] = est
     return est
 
@@ -72,6 +93,60 @@ def get(name: str) -> Estimator:
         return REGISTRY[name]
     except KeyError:  # pragma: no cover - defensive
         raise KeyError(f"unknown estimator {name!r}; have {sorted(REGISTRY)}")
+
+
+def get_by_id(eid: int) -> Estimator:
+    try:
+        return REGISTRY_BY_ID[eid]
+    except IndexError:  # pragma: no cover - defensive
+        raise KeyError(f"unknown estimator id {eid}; have 0..{len(REGISTRY_BY_ID) - 1}")
+
+
+def est_id(name: str) -> int:
+    return get(name).eid
+
+
+def moment_family() -> Tuple[Estimator, ...]:
+    """The moments-fast-path estimators, ordered by ``eid``.
+
+    These share ONE replicate computation (the masked ``(B, n) @ (n, 3)``
+    moment matmul) and differ only in the cheap ``moments_finish``
+    epilogue -- which is why heterogeneous query lanes can share a single
+    fused program: the step computes the moment sums once and routes each
+    lane through ``lax.switch`` over this family's finish branches
+    (``core/bootstrap.estimate_error_lanes_het``).  The branch index of a
+    lane is its *family index* (position in this tuple), not the global
+    ``eid``.
+    """
+    return tuple(e for e in REGISTRY_BY_ID if e.moments_finish is not None)
+
+
+def moment_family_index(name: str) -> int:
+    """Family (branch) index of a moment estimator; raises for others."""
+    est = get(name)
+    fam = moment_family()
+    for i, e in enumerate(fam):
+        if e.eid == est.eid:
+            return i
+    raise ValueError(
+        f"estimator {name!r} has no moments fast path; heterogeneous lanes "
+        f"support {[e.name for e in fam]}")
+
+
+def population_scale_row(name: str, data_scale) -> "np.ndarray":
+    """(m,) per-group scale row for one estimator (paper SS2.2.1).
+
+    SUM/COUNT-style estimators report ``|D|_i * consistent_estimator``;
+    everything else is served at unit scale.  The ONE place the rule lives:
+    both the lane pool's per-lane scale rows and the service's batched
+    group scale come through here.
+    """
+    import numpy as np
+
+    scale = np.asarray(data_scale, np.float32)
+    if get(name).needs_population_scale:
+        return scale
+    return np.ones_like(scale)
 
 
 # ---------------------------------------------------------------------------

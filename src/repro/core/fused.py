@@ -9,40 +9,48 @@ buffers:
 
   * sample buffer   (q, m, n_cap, c) -- CARRIED across iterations.  Slot j of
     group i is bound to a fixed uniform row index by a counter PRNG
-    (kernels/prng.hash3), so the sample sequence is *nested*: iteration k+1's
-    sample extends iteration k's prefix instead of replacing it.  Each
-    iteration reads an (m, ext_cap) extension window past the filled
-    watermark -- per-iteration gather drops from O(n_cap) to O(ext_cap) --
-    and the distinct rows gathered over a run equal the final watermark
-    sum(filled) = stacked init windows + the prediction-phase prefix
-    (reported as rows_sampled; >= final sum(n), see DESIGN.md SS3.2).
+    (sampling.counter_slot_table), so the sample sequence is *nested*:
+    iteration k+1's sample extends iteration k's prefix instead of replacing
+    it.  Each iteration reads an (m, ext_cap) extension window past the
+    filled watermark -- per-iteration gather drops from O(n_cap) to
+    O(ext_cap) -- and the distinct rows gathered over a run equal the final
+    watermark sum(filled) (reported as rows_sampled; see DESIGN.md SS3.2).
   * width-adaptive ESTIMATE (phase C): the bootstrap runs on a power-of-two
     width bucket of the carried buffer covering the current watermark, not
     on the full ``n_cap`` capacity -- ``lax.switch`` over a static bucket
-    ladder, one branch per width, at most ``log2(n_cap / base) + 1``
-    branches compiled into the one program.  Replicate weights come from the
-    counter PRNG (entry (j, b) = poisson1(hash3(seed, j, b)), j the absolute
-    slot), so the draws are invariant to the bucket width: crossing a bucket
-    boundary changes compute width, never the statistics or which rows are
-    gathered.  With ``use_kernel`` the moment estimators route through
-    ``kernels/poisson_bootstrap`` and the weights are generated in VMEM,
-    never materialized in HBM.
+    ladder.  Replicate weights come from the counter PRNG (entry (j, b) =
+    poisson1(hash3(seed, j, b)), j the absolute slot), so the draws are
+    invariant to the bucket width.  With ``use_kernel`` the moment
+    estimators route through ``kernels/poisson_bootstrap`` and the weights
+    are generated in VMEM, never materialized in HBM.
   * error profile   (max_iters, m) + (max_iters,) -- row-masked WLS
-  * two-point init rows are drawn inside the loop from the iteration counter
+  * two-point init rows are drawn inside the loop from the lane's iteration
+    counter
 
 ``sample_key`` (optional, defaults to ``key``) seeds the slot->row binding
 separately from the bootstrap stream, so a server can share one permuted
 prefix across many queries (serve/aqp_service.py) while keeping bootstrap
 replicates independent.
 
-Multi-lane serving (phase C): ``fused_l2miss_lanes`` runs ``q`` independent
-query lanes over ONE resident table inside a single while_loop -- values and
-offsets are shared operands (never copied per lane), only
-(scale, key, epsilon, delta, sample_key) carry a lane axis, and the width
-bucket is the max watermark across *active* lanes, so the switch index stays
-scalar and exactly one branch executes per iteration.  This is the
-single-dispatch batched configuration ``serve/aqp_service.py`` uses to
-answer a whole func group of tenant queries as one XLA program.
+Resumable step architecture (phase D): the loop state is the explicit
+:class:`LaneState` carry and one iteration is the standalone jitted
+:func:`fused_step` -- SAMPLE -> ESTIMATE -> FIT -> PREDICT -> TEST for all
+``q`` lanes, predicated per lane.  :func:`fused_l2miss_lanes` is now a thin
+``lax.while_loop`` wrapper over the very same step body, so closed-loop and
+host-ticked trajectories are identical by construction.  Crucially the tick
+counter ``k`` is PER LANE: in the closed loop every lane starts at k=0 and
+the counters advance in lockstep (bit-identical to the old scalar counter),
+while a host ticker (serve/lane_pool.py) can retire a converged lane and
+splice a fresh query into it mid-flight -- the spliced lane restarts at its
+own k=0 with its own counter-PRNG streams, so its trajectory is the one a
+solo run with the same (key, sample_key) would produce.
+
+Per-lane estimators: with ``est_name=None`` each lane selects its estimator
+by moment-family index (``LaneParams.est_fids``) routed through
+``lax.switch`` inside ESTIMATE (core/bootstrap.estimate_error_lanes_het) --
+mean/sum/count/std/var/proportion queries share one resident program
+instead of one dispatch per func group.
+
 ``fused_l2miss_batch`` keeps the legacy vmap-over-tables entry for batches
 of *different* same-shape datasets.
 """
@@ -62,7 +70,7 @@ Array = jax.Array
 LOG_FLOOR = -60.0
 
 # Domain-separation constants for the counter-PRNG streams.
-_SALT_SAMPLE = 0x5A17      # slot -> row binding (must match serve docstring)
+_SALT_SAMPLE = sampling.SLOT_SALT   # slot -> row binding (sampling.py owns it)
 _SALT_BOOT = 0xB007        # per-lane bootstrap seed base
 _SALT_GROUP = 0x7F4A7C15   # per-(iteration, group) bootstrap stream split
 
@@ -81,6 +89,49 @@ class FusedResult(NamedTuple):
     rows_sampled: Array # total rows gathered (== sum of the filled watermark)
 
 
+class LaneState(NamedTuple):
+    """The carried state of the fused loop -- one row per query lane.
+
+    This is the resume point: ``fused_step`` maps ``LaneState -> LaneState``
+    and everything a lane's future depends on is in its rows here plus its
+    rows of :class:`LaneParams`.  A host ticker persists it between steps;
+    the closed loop threads it through ``lax.while_loop``.
+    """
+    keys: Array         # (q, 2) fallback-backend bootstrap keys
+    k: Array            # (q,) per-lane tick counter (lockstep in the
+                        #   closed loop; restarts at 0 on a pool refill)
+    iters: Array        # (q,) per-lane active-iteration count
+    n_cur: Array        # (q, m)
+    filled: Array       # (q, m) gathered-slot watermark (monotone)
+    buf: Array          # (q, m, n_cap, c) carried nested samples
+    prof_n: Array       # (q, max_iters, m)
+    prof_loge: Array    # (q, max_iters)
+    e: Array            # (q,)
+    theta: Array        # (q, m, p)
+    done: Array         # (q,) sticky
+    failed: Array       # (q,) sticky
+    beta: Array         # (q, m + 1)
+    r2: Array           # (q,)
+
+
+class LaneParams(NamedTuple):
+    """Per-lane query parameters -- constant across ticks, spliceable per lane.
+
+    Splitting these out of :class:`LaneState` is what makes retire-and-
+    refill cheap: a pool swaps ONE lane's rows here (plus resetting its
+    state rows) without touching the neighbors or recompiling anything.
+    ``slot_idx`` is the counter-PRNG slot->row binding -- shape ``(m,
+    n_cap)`` when all lanes share one sample key (the server epoch policy)
+    or ``(q, m, n_cap)`` for per-lane bindings.
+    """
+    scale: Array        # (q, m) per-group |D|_i scale (1.0 for consistent f)
+    epsilons: Array     # (q,)
+    deltas: Array       # (q,)
+    est_fids: Array     # (q,) int32 moment-family indices (est_name=None)
+    boot_base: Array    # (q,) uint32 per-lane bootstrap seed base
+    slot_idx: Array     # (m, n_cap) shared | (q, m, n_cap) per lane
+
+
 def _bucket_widths(n_cap: int, base: int) -> Tuple[int, ...]:
     """Static power-of-two width ladder base, 2*base, ... topped by n_cap."""
     base = min(max(int(base), 1), n_cap)
@@ -93,14 +144,357 @@ def _bucket_widths(n_cap: int, base: int) -> Tuple[int, ...]:
     return tuple(widths)
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "est_name", "B", "n_min", "n_max", "l", "tau", "max_iters", "n_cap",
-        "backend", "metric", "growth_cap", "ext_cap", "adaptive",
-        "use_kernel",
-    ),
+def resolve_ext_cap(n_cap: int, n_max: int, ext_cap: Optional[int] = None) -> int:
+    """Extension window: the most new rows one iteration may gather.
+
+    Must cover the init levels (or the two-point design would collapse);
+    beyond that it trades per-iteration gather width against extra
+    refinement iterations when PREDICT wants a bigger jump than the window
+    allows.  Step callers must resolve once and pass the same value every
+    tick -- the window size is part of the compiled step signature.
+    """
+    if ext_cap is None:
+        ext_cap = min(n_cap, max(sampling.bucket_cap(n_max), n_cap // 8))
+    return min(max(ext_cap, n_max), n_cap)
+
+
+def lane_boot_seed(key: Array) -> Array:
+    """uint32 bootstrap seed base for one lane key (the _SALT_BOOT stream).
+
+    Split out so a lane pool splicing a fresh query into lane i derives the
+    identical seed a full ``make_lane_params`` rebuild would -- the refilled
+    lane's bootstrap stream is the one a solo run with ``key`` would use.
+    """
+    return jax.random.bits(jax.random.fold_in(key, _SALT_BOOT), (),
+                           jnp.uint32)
+
+
+def make_lane_params(
+    offsets: Array,
+    scale: Array,
+    keys: Array,
+    epsilons: Array,
+    deltas: Array,
+    sample_keys: Optional[Array] = None,
+    est_fids: Optional[Array] = None,
+    *,
+    n_cap: int,
+) -> LaneParams:
+    """Build the per-lane query parameters (slot tables + seed bases).
+
+    ``sample_keys``: ``None`` derives one slot->row binding per lane from
+    ``keys``; shape ``(2,)`` shares ONE binding (and slot table) across all
+    lanes -- the server's shared-prefix epoch policy; shape ``(q, 2)`` pins
+    one per lane.
+    """
+    starts = offsets[:-1].astype(jnp.int32)
+    sizes = (offsets[1:] - offsets[:-1]).astype(jnp.int32)
+    q = epsilons.shape[0]
+    skeys = keys if sample_keys is None else sample_keys
+    if skeys.ndim == 1:
+        slot_idx = sampling.counter_slot_table(skeys, starts, sizes, n_cap)
+    else:
+        slot_idx = jax.vmap(
+            lambda sk: sampling.counter_slot_table(sk, starts, sizes, n_cap)
+        )(skeys)
+    # Per-lane bootstrap seed base: the per-iteration, per-group streams are
+    # counter-derived (hash3) so the loop carries no RNG key state for the
+    # default backend.  The non-poisson fallbacks still consume LaneState.keys.
+    boot_base = jax.vmap(lane_boot_seed)(keys)                 # (q,)
+    if est_fids is None:
+        est_fids = jnp.zeros((q,), jnp.int32)
+    return LaneParams(
+        scale=jnp.asarray(scale), epsilons=jnp.asarray(epsilons, jnp.float32),
+        deltas=jnp.asarray(deltas, jnp.float32),
+        est_fids=jnp.asarray(est_fids, jnp.int32), boot_base=boot_base,
+        slot_idx=slot_idx)
+
+
+def init_lane_state(
+    keys: Array,
+    m: int,
+    *,
+    n_cap: int,
+    c_dim: int,
+    p_dim: int,
+    n_min: int,
+    max_iters: int,
+    dtype=jnp.float32,
+) -> LaneState:
+    """Fresh carry for ``q = keys.shape[0]`` lanes (every lane at tick 0)."""
+    q = keys.shape[0]
+    return LaneState(
+        keys=keys,
+        k=jnp.zeros((q,), jnp.int32),
+        iters=jnp.zeros((q,), jnp.int32),
+        n_cur=jnp.full((q, m), n_min, jnp.int32),
+        filled=jnp.zeros((q, m), jnp.int32),
+        buf=jnp.zeros((q, m, n_cap, c_dim), dtype),
+        prof_n=jnp.ones((q, max_iters, m), jnp.float32),
+        prof_loge=jnp.zeros((q, max_iters), jnp.float32),
+        e=jnp.full((q,), jnp.inf, jnp.float32),
+        theta=jnp.zeros((q, m, p_dim), jnp.float32),
+        done=jnp.zeros((q,), bool),
+        failed=jnp.zeros((q,), bool),
+        beta=jnp.zeros((q, m + 1), jnp.float32),
+        r2=jnp.zeros((q,), jnp.float32),
+    )
+
+
+def lane_active(state: LaneState, max_iters: int) -> Array:
+    """(q,) lanes still iterating: not converged, not failed, ticks left."""
+    return ~state.done & ~state.failed & (state.k < max_iters)
+
+
+def _step_body(
+    values: Array,
+    offsets: Array,
+    s: LaneState,
+    p: LaneParams,
+    *,
+    est_name: Optional[str],
+    B: int,
+    n_min: int,
+    n_max: int,
+    l: int,
+    tau: float,
+    max_iters: int,
+    n_cap: int,
+    backend: str,
+    metric: str,
+    growth_cap: float,
+    ext_cap: int,
+    adaptive: bool,
+    use_kernel: bool,
+) -> LaneState:
+    """One SAMPLE -> ESTIMATE -> FIT -> PREDICT -> TEST tick over all lanes.
+
+    Every per-lane computation is lane-separable and predicated on the
+    lane's own ``active`` flag, so a lane's trajectory is a pure function of
+    its (key, sample_key, epsilon, delta, scale, est_fid) rows and its own
+    tick counter -- bit-identical whether its neighbors are the same age
+    (closed loop), frozen, or mid-refill (lane pool).  The ESTIMATE width
+    bucket is shared -- the max watermark over *active* lanes -- which is
+    statistically invisible because the counter-PRNG weight draws do not
+    depend on the bucket width.
+    """
+    est = get_estimator(est_name) if est_name is not None else None
+    m = offsets.shape[0] - 1
+    q = p.epsilons.shape[0]
+    sizes = (offsets[1:] - offsets[:-1]).astype(jnp.int32)
+    log_eps = jnp.log(p.epsilons.astype(jnp.float32))
+    # Deterministic balanced two-point design (Eq. 15/16): cyclic shifts give
+    # every group both levels, keeping all slopes identifiable.
+    l_min = min(max(int(round(l * n_max / (n_min + n_max))), 1), l - 1)
+    widths = (_bucket_widths(n_cap, sampling.bucket_cap(min(n_max, n_cap)))
+              if adaptive else (n_cap,))
+    shared_slots = p.slot_idx.ndim == 2
+
+    keys2 = jax.vmap(jax.random.split)(s.keys)                 # (q, 2, 2)
+    new_keys, kest = keys2[:, 0], keys2[:, 1]
+    active = lane_active(s, max_iters)                         # (q,)
+    # ---- generate this iteration's n (per lane) ----
+    phase = (s.k[:, None] + jnp.arange(m)[None, :]) % l        # (q, m)
+    n_init = jnp.where(phase < l_min, n_min, n_max).astype(jnp.int32)
+    row_valid = (jnp.arange(max_iters)[None, :]
+                 < s.k[:, None]).astype(jnp.float32)           # (q, max_iters)
+
+    def lane_predict(prof_n, prof_loge, rv, e_lane, n_cur, le, eps_lane):
+        n_hat, fit = error_model.fit_and_predict(
+            prof_n, prof_loge, rv, le, tau)
+        n_next = jnp.ceil(n_hat).astype(jnp.int32)
+        # Local-model correction from the last iterate (see l2miss).
+        slope = jnp.maximum(jnp.sum(fit.beta[1:]), 1e-3)
+        ratio = jnp.maximum(e_lane / eps_lane, 1.0)
+        local = jnp.ceil(
+            n_cur.astype(jnp.float32) * ratio ** (1.0 / slope)
+        ).astype(jnp.int32)
+        n_next = jnp.maximum(n_next, local)
+        # Trust region + growth guard (see l2miss.MissConfig.growth_cap).
+        cap = (n_cur.astype(jnp.float32) * growth_cap).astype(
+            jnp.int32) + 1
+        n_next = jnp.minimum(n_next, cap)
+        n_next = jnp.maximum(n_next, n_cur + 1)
+        failed = fit.status == error_model.DIAG_FAILURE
+        return n_next, fit.beta, fit.r2, failed
+
+    n_pred, beta, r2, failed_fit = jax.vmap(lane_predict)(
+        s.prof_n, s.prof_loge, row_valid, s.e, s.n_cur, log_eps, p.epsilons)
+    init_phase = s.k < l                                       # (q,)
+    n_vec = jnp.where(init_phase[:, None], n_init, n_pred)
+    n_vec = jnp.clip(n_vec, 1, jnp.minimum(sizes, n_cap)[None, :])
+    # Complete-sample clamp: one iteration can extend the resident prefix
+    # by at most the window; a larger predicted jump is taken over
+    # several iterations (growth guard keeps it monotone).
+    n_vec = jnp.minimum(n_vec, s.filled + ext_cap)
+    # Frozen lanes neither grow nor gather: their window degenerates to
+    # the resident prefix and every update below is predicated on
+    # ``active``.
+    n_vec = jnp.where(active[:, None], n_vec, s.n_cur)
+    # Init probes read STACKED slot windows [filled, filled + n): two
+    # probes at the same design level must be different rows or the WLS
+    # fit loses its independent variation.  Their union is the prefix
+    # the prediction phase (win_lo = 0) then reuses wholesale.  A window
+    # that would overrun n_cap is shifted back into the resident prefix
+    # (reusing rows) rather than truncated -- n_eff must never collapse
+    # to an empty mask.
+    win_lo = jnp.where(init_phase[:, None],
+                       jnp.minimum(s.filled, n_cap - n_vec), 0)
+    win_lo = jnp.where(active[:, None], win_lo, 0)
+    win_hi = jnp.where(active[:, None], win_lo + n_vec,
+                       jnp.minimum(s.n_cur, s.filled))
+    n_eff = n_vec
+    # ---- extend the carried nested samples by the window only ----
+    slots = s.filled[:, :, None] + jnp.arange(
+        ext_cap, dtype=jnp.int32)[None, None, :]               # (q, m, ext)
+    valid = slots < win_hi[:, :, None]
+    clipped = jnp.minimum(slots, n_cap - 1)
+    if shared_slots:
+        gidx = jax.vmap(
+            lambda sl: jnp.take_along_axis(p.slot_idx, sl, axis=1))(clipped)
+    else:
+        gidx = jnp.take_along_axis(p.slot_idx, clipped, axis=2)
+    new_rows = values[gidx]                                    # (q, m, ext, c)
+    tgt = jnp.where(valid, slots, n_cap)                       # OOB -> dropped
+    buf = s.buf.at[
+        jnp.arange(q)[:, None, None],
+        jnp.arange(m)[None, :, None],
+        tgt,
+    ].set(new_rows, mode="drop")
+    filled = jnp.maximum(s.filled, win_hi)
+    # ---- bootstrap estimate on the active width bucket ----
+    # Bucket = max watermark over ACTIVE lanes: frozen lanes' (possibly
+    # larger) windows are excluded -- their estimate output is discarded
+    # below, so computing it on a truncated mask is harmless.
+    needed = jnp.maximum(
+        jnp.max(jnp.where(active[:, None], win_hi, 0)), 1)
+    w_arr = jnp.asarray(widths[:-1], jnp.int32)
+    b_idx = jnp.sum(needed > w_arr).astype(jnp.int32)
+    seeds = prng.hash3(
+        prng.hash3(p.boot_base, s.k.astype(jnp.uint32),
+                   jnp.uint32(_SALT_GROUP))[:, None],
+        jnp.arange(m, dtype=jnp.uint32)[None, :],
+        jnp.uint32(_SALT_GROUP))                               # (q, m)
+
+    def make_branch(width):
+        def branch(buf_b, lo_b, hi_b, seeds_b, kest_b):
+            bw = jax.lax.slice_in_dim(buf_b, 0, width, axis=2)
+            pos = jnp.arange(width, dtype=jnp.int32)[None, None, :]
+            msk = ((pos >= lo_b[:, :, None]) &
+                   (pos < hi_b[:, :, None])).astype(jnp.float32)
+            # Frozen/parked lanes skip the bootstrap entirely (their output
+            # is discarded by the predicated merges below) -- a pool tick
+            # costs its ACTIVE lanes, not its capacity.
+            if est is None:
+                if backend != "poisson":
+                    raise ValueError(
+                        "per-lane estimators (est_name=None) require the "
+                        "counter-PRNG poisson backend")
+                return bootstrap.estimate_error_lanes_het(
+                    bw, msk, seeds_b, p.est_fids, p.scale, p.deltas, B=B,
+                    metric=metric, use_kernel=use_kernel,
+                    lane_active=active)
+            if backend == "poisson":
+                return bootstrap.estimate_error_lanes(
+                    est, bw, msk, seeds_b, p.scale, p.deltas, B=B,
+                    metric=metric, use_kernel=use_kernel,
+                    lane_active=active)
+            return jax.vmap(
+                lambda smp, mk, kk, sc, d: bootstrap.estimate_error(
+                    est, smp, mk, sc, kk, d, B=B, backend=backend,
+                    metric=metric))(bw, msk, kest_b, p.scale, p.deltas)
+        return branch
+
+    e_b, theta_b = jax.lax.switch(
+        b_idx, [make_branch(w) for w in widths],
+        buf, win_lo, win_hi, seeds, kest)
+    loge = jnp.maximum(jnp.log(jnp.maximum(e_b, 1e-30)), LOG_FLOOR)
+    qi = jnp.arange(q)
+    kq = jnp.minimum(s.k, max_iters - 1)     # frozen lanes: no-op rewrite
+    prof_n = s.prof_n.at[qi, kq].set(
+        jnp.where(active[:, None], n_eff.astype(jnp.float32),
+                  s.prof_n[qi, kq]))
+    prof_loge = s.prof_loge.at[qi, kq].set(
+        jnp.where(active, loge, s.prof_loge[qi, kq]))
+    done = s.done | (active & (e_b <= p.epsilons))
+    failed = s.failed | (active & ~init_phase & failed_fit)
+    return LaneState(
+        keys=new_keys, k=s.k + 1, iters=s.iters + active.astype(jnp.int32),
+        n_cur=jnp.where(active[:, None], n_eff, s.n_cur),
+        filled=filled, buf=buf, prof_n=prof_n, prof_loge=prof_loge,
+        e=jnp.where(active, e_b, s.e),
+        theta=jnp.where(active[:, None, None], theta_b, s.theta),
+        done=done, failed=failed,
+        beta=jnp.where((active & ~init_phase)[:, None], beta, s.beta),
+        r2=jnp.where(active & ~init_phase, r2, s.r2),
+    )
+
+
+_STEP_STATICS = (
+    "est_name", "B", "n_min", "n_max", "l", "tau", "max_iters", "n_cap",
+    "backend", "metric", "growth_cap", "ext_cap", "adaptive", "use_kernel",
 )
+
+
+@partial(jax.jit, static_argnames=_STEP_STATICS + ("num_ticks",))
+def fused_step(
+    values: Array,
+    offsets: Array,
+    state: LaneState,
+    params: LaneParams,
+    *,
+    est_name: Optional[str] = None,
+    B: int = 500,
+    n_min: int = 100,
+    n_max: int = 200,
+    l: int = 10,
+    tau: float = 1e-3,
+    max_iters: int = 32,
+    n_cap: int = 1 << 16,
+    backend: str = "poisson",
+    metric: str = "l2",
+    growth_cap: float = 8.0,
+    ext_cap: Optional[int] = None,
+    adaptive: bool = True,
+    use_kernel: bool = False,
+    num_ticks: int = 1,
+) -> LaneState:
+    """Host-callable resumable step: ``num_ticks`` iterations, one dispatch.
+
+    The same body the closed loop runs; converged/failed/exhausted lanes
+    freeze via predicated updates, so ticking past a lane's convergence is
+    harmless (its state no longer changes) and a multi-tick dispatch never
+    needs a mid-window host check.  ``est_name=None`` selects each lane's
+    estimator from ``params.est_fids`` (moment family only).
+    """
+    ext_cap = resolve_ext_cap(n_cap, n_max, ext_cap)
+    spec = dict(
+        est_name=est_name, B=B, n_min=n_min, n_max=n_max, l=l, tau=tau,
+        max_iters=max_iters, n_cap=n_cap, backend=backend, metric=metric,
+        growth_cap=growth_cap, ext_cap=ext_cap, adaptive=adaptive,
+        use_kernel=use_kernel)
+    if num_ticks == 1:
+        return _step_body(values, offsets, state, params, **spec)
+    return jax.lax.fori_loop(
+        0, num_ticks,
+        lambda _, st: _step_body(values, offsets, st, params, **spec),
+        state)
+
+
+def lanes_result(state: LaneState) -> FusedResult:
+    """Project the carried state onto the public result contract."""
+    max_iters = state.prof_loge.shape[1]
+    row_live = (jnp.arange(max_iters)[None, :] < state.iters[:, None])
+    return FusedResult(
+        n=state.n_cur, error=state.e, theta=state.theta,
+        iterations=state.iters, success=state.done, failed=state.failed,
+        beta=state.beta, r2=state.r2, profile_n=state.prof_n,
+        profile_e=jnp.exp(state.prof_loge) * row_live,
+        rows_sampled=jnp.sum(state.filled, axis=1),
+    )
+
+
+@partial(jax.jit, static_argnames=_STEP_STATICS)
 def fused_l2miss_lanes(
     values: Array,        # (N, c) group-sorted rows -- SHARED across lanes
     offsets: Array,       # (m + 1,) -- shared
@@ -109,8 +503,9 @@ def fused_l2miss_lanes(
     epsilons: Array,      # (q,)
     deltas: Array,        # (q,)
     sample_keys: Optional[Array] = None,  # None | (2,) shared | (q, 2)
+    est_fids: Optional[Array] = None,     # (q,) when est_name is None
     *,
-    est_name: str = "avg",
+    est_name: Optional[str] = "avg",
     B: int = 500,
     n_min: int = 100,
     n_max: int = 200,
@@ -125,9 +520,11 @@ def fused_l2miss_lanes(
     adaptive: bool = True,
     use_kernel: bool = False,
 ) -> FusedResult:
-    """q query lanes, one resident table, one while_loop (SS7 phase C).
+    """q query lanes, one resident table, one while_loop (SS7 phase C/D).
 
-    Every per-lane computation (fit, predict, window, bootstrap) is
+    A thin closed-loop wrapper over :func:`fused_step`'s body: init the
+    carry, tick until every lane is done/failed/out of ticks, project the
+    result.  Every per-lane computation (fit, predict, window, bootstrap) is
     lane-separable, so a lane's trajectory is bit-identical to running it
     alone with the same keys; lanes that converge early are frozen
     (predicated updates) while the loop serves the stragglers.  The ESTIMATE
@@ -140,6 +537,9 @@ def fused_l2miss_lanes(
     lanes -- the server's shared-prefix epoch policy; shape ``(q, 2)`` pins
     one per lane.
 
+    ``est_name=None`` makes lanes heterogeneous: lane i runs the moment-
+    family estimator ``est_fids[i]`` (estimators.moment_family_index).
+
     ``backend="poisson"`` (default) uses the width-invariant counter-PRNG
     Poisson weights (kernel-backed for moment estimators when
     ``use_kernel``); other backends fall back to
@@ -147,226 +547,27 @@ def fused_l2miss_lanes(
     width-dependent -- pair them with ``adaptive=False`` when exact
     bucket-boundary invariance matters.
     """
-    est = get_estimator(est_name)
     m = offsets.shape[0] - 1
-    q = epsilons.shape[0]
-    sizes = (offsets[1:] - offsets[:-1]).astype(jnp.int32)
-    log_eps = jnp.log(epsilons.astype(jnp.float32))
-    # Deterministic balanced two-point design (Eq. 15/16): cyclic shifts give
-    # every group both levels, keeping all slopes identifiable.
-    l_min = min(max(int(round(l * n_max / (n_min + n_max))), 1), l - 1)
-    # Extension window: the most new rows one iteration may gather.  Must
-    # cover the init levels (or the two-point design would collapse); beyond
-    # that it trades per-iteration gather width against extra refinement
-    # iterations when PREDICT wants a bigger jump than the window allows.
-    if ext_cap is None:
-        ext_cap = min(n_cap, max(sampling.bucket_cap(n_max), n_cap // 8))
-    ext_cap = min(max(ext_cap, n_max), n_cap)
-    widths = (_bucket_widths(n_cap, sampling.bucket_cap(min(n_max, n_cap)))
-              if adaptive else (n_cap,))
+    ext_cap = resolve_ext_cap(n_cap, n_max, ext_cap)
+    params = make_lane_params(
+        offsets, scale, keys, epsilons, deltas, sample_keys, est_fids,
+        n_cap=n_cap)
+    p_dim = (get_estimator(est_name).out_dim(values.shape[1])
+             if est_name is not None else 1)
+    state0 = init_lane_state(
+        keys, m, n_cap=n_cap, c_dim=values.shape[1], p_dim=p_dim,
+        n_min=n_min, max_iters=max_iters, dtype=values.dtype)
+    spec = dict(
+        est_name=est_name, B=B, n_min=n_min, n_max=n_max, l=l, tau=tau,
+        max_iters=max_iters, n_cap=n_cap, backend=backend, metric=metric,
+        growth_cap=growth_cap, ext_cap=ext_cap, adaptive=adaptive,
+        use_kernel=use_kernel)
 
-    # Slot -> row binding: slot j of group i reads row start_i + floor(u * sz)
-    # with u from a counter hash of (sample_seed, i, j).  Computing the index
-    # table is elementwise integer work -- no data rows are touched until the
-    # extension window gathers them.  A shared (2,) sample key keeps ONE
-    # (m, n_cap) table; per-lane keys build (q, m, n_cap).
-    if sample_keys is None:
-        skeys = keys
-    else:
-        skeys = sample_keys
-    shared_slots = skeys.ndim == 1
-    starts = offsets[:-1].astype(jnp.int32)
-    rows_i = jnp.arange(m, dtype=jnp.uint32)[:, None]
-    cols_j = jnp.arange(n_cap, dtype=jnp.uint32)[None, :]
-
-    def slot_table(sk):
-        seed = jax.random.bits(jax.random.fold_in(sk, _SALT_SAMPLE), (),
-                               jnp.uint32)
-        u = prng.uniform01(prng.hash3(seed, rows_i, cols_j))   # (m, n_cap)
-        return starts[:, None] + jnp.minimum(
-            (u * sizes[:, None]).astype(jnp.int32), sizes[:, None] - 1)
-
-    slot_idx = slot_table(skeys) if shared_slots else jax.vmap(slot_table)(
-        skeys)
-
-    # Per-lane bootstrap seed base: the per-iteration, per-group streams are
-    # counter-derived (hash3) so the loop carries no RNG key state for the
-    # default backend.  The non-poisson fallbacks still consume c.keys.
-    boot_base = jax.vmap(
-        lambda kk: jax.random.bits(jax.random.fold_in(kk, _SALT_BOOT), (),
-                                   jnp.uint32))(keys)          # (q,)
-
-    p_dim = est.out_dim(values.shape[1])
-    c_dim = values.shape[1]
-
-    class Carry(NamedTuple):
-        keys: Array         # (q, 2) fallback-backend bootstrap keys
-        k: Array            # scalar global step (lanes step in lockstep)
-        iters: Array        # (q,) per-lane active-iteration count
-        n_cur: Array        # (q, m)
-        filled: Array       # (q, m) gathered-slot watermark (monotone)
-        buf: Array          # (q, m, n_cap, c) carried nested samples
-        prof_n: Array       # (q, max_iters, m)
-        prof_loge: Array    # (q, max_iters)
-        e: Array            # (q,)
-        theta: Array        # (q, m, p)
-        done: Array         # (q,) sticky
-        failed: Array       # (q,) sticky
-        beta: Array         # (q, m + 1)
-        r2: Array           # (q,)
-
-    def cond(c: Carry):
-        return jnp.any(~c.done & ~c.failed) & (c.k < max_iters)
-
-    def body(c: Carry) -> Carry:
-        keys2 = jax.vmap(jax.random.split)(c.keys)             # (q, 2, 2)
-        new_keys, kest = keys2[:, 0], keys2[:, 1]
-        active = ~c.done & ~c.failed                           # (q,)
-        # ---- generate this iteration's n (per lane) ----
-        phase = (c.k + jnp.arange(m)) % l
-        n_init = jnp.where(phase < l_min, n_min, n_max).astype(jnp.int32)
-        row_valid = (jnp.arange(max_iters) < c.k).astype(jnp.float32)
-
-        def lane_predict(prof_n, prof_loge, e_lane, n_cur, le, eps_lane):
-            n_hat, fit = error_model.fit_and_predict(
-                prof_n, prof_loge, row_valid, le, tau)
-            n_next = jnp.ceil(n_hat).astype(jnp.int32)
-            # Local-model correction from the last iterate (see l2miss).
-            s = jnp.maximum(jnp.sum(fit.beta[1:]), 1e-3)
-            ratio = jnp.maximum(e_lane / eps_lane, 1.0)
-            local = jnp.ceil(
-                n_cur.astype(jnp.float32) * ratio ** (1.0 / s)
-            ).astype(jnp.int32)
-            n_next = jnp.maximum(n_next, local)
-            # Trust region + growth guard (see l2miss.MissConfig.growth_cap).
-            cap = (n_cur.astype(jnp.float32) * growth_cap).astype(
-                jnp.int32) + 1
-            n_next = jnp.minimum(n_next, cap)
-            n_next = jnp.maximum(n_next, n_cur + 1)
-            failed = fit.status == error_model.DIAG_FAILURE
-            return n_next, fit.beta, fit.r2, failed
-
-        n_pred, beta, r2, failed_fit = jax.vmap(lane_predict)(
-            c.prof_n, c.prof_loge, c.e, c.n_cur, log_eps, epsilons)
-        init_phase = c.k < l
-        n_vec = jnp.where(init_phase, n_init[None, :], n_pred)
-        n_vec = jnp.clip(n_vec, 1, jnp.minimum(sizes, n_cap)[None, :])
-        # Complete-sample clamp: one iteration can extend the resident prefix
-        # by at most the window; a larger predicted jump is taken over
-        # several iterations (growth guard keeps it monotone).
-        n_vec = jnp.minimum(n_vec, c.filled + ext_cap)
-        # Frozen lanes neither grow nor gather: their window degenerates to
-        # the resident prefix and every update below is predicated on
-        # ``active``.
-        n_vec = jnp.where(active[:, None], n_vec, c.n_cur)
-        # Init probes read STACKED slot windows [filled, filled + n): two
-        # probes at the same design level must be different rows or the WLS
-        # fit loses its independent variation.  Their union is the prefix
-        # the prediction phase (win_lo = 0) then reuses wholesale.  A window
-        # that would overrun n_cap is shifted back into the resident prefix
-        # (reusing rows) rather than truncated -- n_eff must never collapse
-        # to an empty mask.
-        win_lo = jnp.where(init_phase,
-                           jnp.minimum(c.filled, n_cap - n_vec), 0)
-        win_lo = jnp.where(active[:, None], win_lo, 0)
-        win_hi = jnp.where(active[:, None], win_lo + n_vec,
-                           jnp.minimum(c.n_cur, c.filled))
-        n_eff = n_vec
-        # ---- extend the carried nested samples by the window only ----
-        slots = c.filled[:, :, None] + jnp.arange(
-            ext_cap, dtype=jnp.int32)[None, None, :]           # (q, m, ext)
-        valid = slots < win_hi[:, :, None]
-        clipped = jnp.minimum(slots, n_cap - 1)
-        if shared_slots:
-            gidx = jax.vmap(
-                lambda s: jnp.take_along_axis(slot_idx, s, axis=1))(clipped)
-        else:
-            gidx = jnp.take_along_axis(slot_idx, clipped, axis=2)
-        new_rows = values[gidx]                                # (q, m, ext, c)
-        tgt = jnp.where(valid, slots, n_cap)                   # OOB -> dropped
-        buf = c.buf.at[
-            jnp.arange(q)[:, None, None],
-            jnp.arange(m)[None, :, None],
-            tgt,
-        ].set(new_rows, mode="drop")
-        filled = jnp.maximum(c.filled, win_hi)
-        # ---- bootstrap estimate on the active width bucket ----
-        # Bucket = max watermark over ACTIVE lanes: frozen lanes' (possibly
-        # larger) windows are excluded -- their estimate output is discarded
-        # below, so computing it on a truncated mask is harmless.
-        needed = jnp.maximum(
-            jnp.max(jnp.where(active[:, None], win_hi, 0)), 1)
-        w_arr = jnp.asarray(widths[:-1], jnp.int32)
-        b_idx = jnp.sum(needed > w_arr).astype(jnp.int32)
-        seeds = prng.hash3(
-            prng.hash3(boot_base, c.k.astype(jnp.uint32),
-                       jnp.uint32(_SALT_GROUP))[:, None],
-            jnp.arange(m, dtype=jnp.uint32)[None, :],
-            jnp.uint32(_SALT_GROUP))                           # (q, m)
-
-        def make_branch(width):
-            def branch(buf_b, lo_b, hi_b, seeds_b, kest_b):
-                bw = jax.lax.slice_in_dim(buf_b, 0, width, axis=2)
-                pos = jnp.arange(width, dtype=jnp.int32)[None, None, :]
-                msk = ((pos >= lo_b[:, :, None]) &
-                       (pos < hi_b[:, :, None])).astype(jnp.float32)
-                if backend == "poisson":
-                    return bootstrap.estimate_error_lanes(
-                        est, bw, msk, seeds_b, scale, deltas, B=B,
-                        metric=metric, use_kernel=use_kernel)
-                return jax.vmap(
-                    lambda s, mk, kk, sc, d: bootstrap.estimate_error(
-                        est, s, mk, sc, kk, d, B=B, backend=backend,
-                        metric=metric))(bw, msk, kest_b, scale, deltas)
-            return branch
-
-        e_b, theta_b = jax.lax.switch(
-            b_idx, [make_branch(w) for w in widths],
-            buf, win_lo, win_hi, seeds, kest)
-        loge = jnp.maximum(jnp.log(jnp.maximum(e_b, 1e-30)), LOG_FLOOR)
-        prof_n = c.prof_n.at[:, c.k].set(
-            jnp.where(active[:, None], n_eff.astype(jnp.float32),
-                      c.prof_n[:, c.k]))
-        prof_loge = c.prof_loge.at[:, c.k].set(
-            jnp.where(active, loge, c.prof_loge[:, c.k]))
-        done = c.done | (active & (e_b <= epsilons))
-        failed = c.failed | (active & ~init_phase & failed_fit)
-        return Carry(
-            keys=new_keys, k=c.k + 1, iters=c.iters + active.astype(jnp.int32),
-            n_cur=jnp.where(active[:, None], n_eff, c.n_cur),
-            filled=filled, buf=buf, prof_n=prof_n, prof_loge=prof_loge,
-            e=jnp.where(active, e_b, c.e),
-            theta=jnp.where(active[:, None, None], theta_b, c.theta),
-            done=done, failed=failed,
-            beta=jnp.where((active & ~init_phase)[:, None], beta, c.beta),
-            r2=jnp.where(active & ~init_phase, r2, c.r2),
-        )
-
-    c0 = Carry(
-        keys=keys,
-        k=jnp.zeros((), jnp.int32),
-        iters=jnp.zeros((q,), jnp.int32),
-        n_cur=jnp.full((q, m), n_min, jnp.int32),
-        filled=jnp.zeros((q, m), jnp.int32),
-        buf=jnp.zeros((q, m, n_cap, c_dim), values.dtype),
-        prof_n=jnp.ones((q, max_iters, m), jnp.float32),
-        prof_loge=jnp.zeros((q, max_iters), jnp.float32),
-        e=jnp.full((q,), jnp.inf, jnp.float32),
-        theta=jnp.zeros((q, m, p_dim), jnp.float32),
-        done=jnp.zeros((q,), bool),
-        failed=jnp.zeros((q,), bool),
-        beta=jnp.zeros((q, m + 1), jnp.float32),
-        r2=jnp.zeros((q,), jnp.float32),
-    )
-    c = jax.lax.while_loop(cond, body, c0)
-    row_live = (jnp.arange(max_iters)[None, :] < c.iters[:, None])
-    return FusedResult(
-        n=c.n_cur, error=c.e, theta=c.theta, iterations=c.iters,
-        success=c.done, failed=c.failed, beta=c.beta, r2=c.r2,
-        profile_n=c.prof_n,
-        profile_e=jnp.exp(c.prof_loge) * row_live,
-        rows_sampled=jnp.sum(c.filled, axis=1),
-    )
+    state = jax.lax.while_loop(
+        lambda st: jnp.any(lane_active(st, max_iters)),
+        lambda st: _step_body(values, offsets, st, params, **spec),
+        state0)
+    return lanes_result(state)
 
 
 def fused_l2miss(

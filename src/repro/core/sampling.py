@@ -185,6 +185,39 @@ def gap_sample_indices(rng: np.random.Generator, n_rows: int, p: float) -> np.nd
     return pos[pos < n_rows].astype(np.int64)
 
 
+# ---------------------------------------------------------------------------
+# Counter-PRNG slot binding (the fused-loop analogue of _PrefixPermutation)
+# ---------------------------------------------------------------------------
+
+# Domain-separation salt for the slot->row stream.  Shared by core/fused.py
+# and serve/lane_pool.py so one ``sample_key`` names one binding everywhere.
+SLOT_SALT = 0x5A17
+
+
+def counter_slot_table(sample_key, starts, sizes, n_cap: int):
+    """(m, n_cap) slot->row binding: slot j of group i reads a fixed row.
+
+    Row = ``start_i + floor(u * size_i)`` with ``u`` a murmur3 counter hash
+    of ``(seed, i, j)`` (`kernels/prng.hash3`), so the sample sequence is a
+    pure function of the key: iteration k+1's sample extends iteration k's
+    prefix, and two programs given the same key gather the same rows (the
+    serve-layer shared-prefix contract).  Computing the table is elementwise
+    integer work -- no data rows are touched until a gather reads them.
+    """
+    from ..kernels import prng
+
+    starts = jnp.asarray(starts, jnp.int32)
+    sizes = jnp.asarray(sizes, jnp.int32)
+    m = sizes.shape[0]
+    seed = jax.random.bits(
+        jax.random.fold_in(sample_key, SLOT_SALT), (), jnp.uint32)
+    rows_i = jnp.arange(m, dtype=jnp.uint32)[:, None]
+    cols_j = jnp.arange(n_cap, dtype=jnp.uint32)[None, :]
+    u = prng.uniform01(prng.hash3(seed, rows_i, cols_j))       # (m, n_cap)
+    return starts[:, None] + jnp.minimum(
+        (u * sizes[:, None]).astype(jnp.int32), sizes[:, None] - 1)
+
+
 def bucket_cap(n: int, *, base: int = 256) -> int:
     """Round ``n`` up to the next power-of-two bucket >= base.
 

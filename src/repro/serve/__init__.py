@@ -1,3 +1,4 @@
 from .batching import ContinuousBatcher, Request
+from .lane_pool import LanePool, PoolResponse
 
-__all__ = ["ContinuousBatcher", "Request"]
+__all__ = ["ContinuousBatcher", "Request", "LanePool", "PoolResponse"]

@@ -1,25 +1,38 @@
 """AQP-as-a-service: a multi-tenant query server over a resident dataset.
 
-Queries arrive with per-request (func, epsilon, delta, metric); same-func L2
-moment queries are answered in ONE batched fused dispatch per func group
-(``fused_l2miss_batch`` shared-operand lanes, DESIGN.md SS7 phase C): the
-resident table enters the program once, each query is a lane of the
-multi-lane while_loop, and the ESTIMATE step runs on the width bucket of the
-active watermark instead of the full capacity.  Everything else falls back
-to the host engine.
+Queries arrive with per-request (func, epsilon, delta, metric); L2 moment
+queries are answered on the fused on-device path, everything else falls back
+to the host engine.  The fused path has three serving modes
+(``batch_fused``):
+
+  * ``"pool"``  -- the continuous lane pool (DESIGN.md SS7 phase D,
+    serve/lane_pool.py): a fixed pool of lanes ticked via the resumable
+    ``fused_step``; converged lanes are retired and refilled from the
+    admission queue between ticks, and lanes are HETEROGENEOUS -- every
+    moment-family func (avg/proportion/var/std/sum/count) shares one
+    resident program, so a mixed-func batch needs no per-func grouping and
+    stragglers never hold freed capacity hostage.
+  * ``True``    -- phase-C closed-loop batching: ONE dispatch per func
+    group (``fused_l2miss_batch`` shared-operand lanes); converged lanes
+    stay resident until the group's slowest lane finishes.
+  * ``False``   -- the per-query dispatch loop (benchmark baseline).
+  * ``"auto"``  (default) -- the pool when a request batch has >= 2 fusable
+    queries (amortizes host ticking), the loop for singletons.
 
 Sample reuse (DESIGN.md SS3.2): the service owns ONE resident SampleStore per
 dataset, shared by the host engine's pilot estimates and every tenant's
 queries, and pins a shared ``sample_key`` for the fused path -- so concurrent
 tenants extend the same permuted prefixes instead of each re-scanning rows.
 Because answers served from one prefix are correlated, an eviction/reshuffle
-policy redraws the permutations (and rotates the fused sample key) every
-``reshuffle_every`` queries; ``refresh()`` does the same on data updates.
+policy redraws the permutations (and rotates the fused sample key -- the
+lane pool's binding rotates with it) every ``reshuffle_every`` queries;
+``refresh()`` does the same on data updates.
 
 Accounting: ``fused_dispatches`` counts XLA program launches on the fused
-path (one per func group when ``batch_fused``; one per query otherwise) and
-``wall_time_s`` on a batched response is dispatch time / lane count -- the
-amortized per-query latency, not the cumulative group time.
+path (pool step syncs in pool mode; one per func group when batched; one
+per query in the loop).  ``wall_time_s`` is per-query real latency in pool
+mode (submit -> harvest, including queue wait) and dispatch time / lane
+count (amortized) in batched mode.
 """
 from __future__ import annotations
 
@@ -33,9 +46,11 @@ import numpy as np
 
 from ..aqp.engine import AQPEngine
 from ..aqp.query import Query
+from ..core import estimators
 from ..core.fused import fused_l2miss_batch
 from ..core.sampling import GroupedData, SampleStore
 from ..kernels import resolve_use_kernel
+from .lane_pool import LanePool
 
 
 @dataclasses.dataclass
@@ -51,14 +66,18 @@ class AQPResponse:
 class AQPService:
     """Serve Listing-1 queries against one resident GroupedData."""
 
-    FUSABLE = ("avg", "proportion", "var", "std")
+    # The moment family shares one replicate computation (and hence one
+    # lane pool); SUM/COUNT ride with their population scale as their
+    # lanes' scale rows (paper SS2.2.1).
+    FUSABLE = ("avg", "proportion", "var", "std", "sum", "count")
 
     def __init__(self, data: GroupedData, *, B: int = 300, n_min: int = 1000,
                  n_max: int = 2000, max_iters: int = 24,
                  n_cap: int = 1 << 16, seed: int = 0,
                  reshuffle_every: int = 256,
                  use_kernel: "bool | str" = "auto",
-                 batch_fused: bool = True):
+                 batch_fused: "bool | str" = "auto",
+                 pool_lanes: int = 4, pool_ticks_per_sync: int = 1):
         self.data = data
         self.store = SampleStore(data, seed=seed)
         self.engine = AQPEngine(data, B=B, n_min=n_min, n_max=n_max,
@@ -66,10 +85,20 @@ class AQPService:
                                 use_kernel=use_kernel)
         self.B, self.n_min, self.n_max = B, n_min, n_max
         self.max_iters, self.n_cap = max_iters, n_cap
+        self.seed = seed
         self.use_kernel = resolve_use_kernel(use_kernel)
-        # ``batch_fused=False`` restores the per-query dispatch loop -- kept
-        # for the looped-vs-batched benchmark and equivalence tests.
-        self.batch_fused = bool(batch_fused)
+        if batch_fused in (True, False):
+            # Normalize truthy/falsy equals (1, 0, np.True_) to real bools:
+            # answer() dispatches on identity (`mode is True`).
+            batch_fused = bool(batch_fused)
+        elif batch_fused not in ("auto", "pool"):
+            raise ValueError(
+                f"batch_fused must be True, False, 'auto' or 'pool'; "
+                f"got {batch_fused!r}")
+        self.batch_fused = batch_fused
+        self.pool_lanes = int(pool_lanes)
+        self.pool_ticks_per_sync = int(pool_ticks_per_sync)
+        self._lane_pool: Optional[LanePool] = None
         self.key = jax.random.PRNGKey(seed)
         self._offsets = jnp.asarray(data.offsets)
         self._m = data.num_groups
@@ -98,6 +127,7 @@ class AQPService:
             self._offsets = jnp.asarray(data.offsets)
             self._m = data.num_groups
         self.store.refresh(self.data)
+        self._lane_pool = None          # resident prefixes follow the data
         self._rotate_epoch()
 
     def _rotate_epoch(self) -> None:
@@ -105,12 +135,32 @@ class AQPService:
         self._queries_in_epoch = 0
         self._sample_key = jax.random.fold_in(
             jax.random.PRNGKey(self.store.seed ^ 0x5A17), self._epoch_counter)
+        if self._lane_pool is not None:
+            # The pool is always drained between answer() calls, so the
+            # epoch rotation can rebind its slot table in place.
+            self._lane_pool.set_sample_key(self._sample_key)
 
     def _account_queries(self, k: int) -> None:
         self._queries_in_epoch += k
         if self._queries_in_epoch >= self.reshuffle_every:
             self.store.reshuffle()
             self._rotate_epoch()
+
+    def _ensure_pool(self) -> LanePool:
+        if self._lane_pool is None:
+            self._lane_pool = LanePool(
+                self.data, lanes=self.pool_lanes, B=self.B,
+                n_min=self.n_min, n_max=self.n_max, max_iters=self.max_iters,
+                n_cap=self.n_cap, use_kernel=self.use_kernel, seed=self.seed,
+                sample_key=self._sample_key,
+                ticks_per_sync=self.pool_ticks_per_sync)
+        return self._lane_pool
+
+    def _group_scale(self, func: str, k: int):
+        """(k, m) per-lane scale rows for one func (SS2.2.1 transform)."""
+        row = jnp.asarray(
+            estimators.population_scale_row(func, self.data.scale))
+        return jnp.broadcast_to(row, (k, self._m))
 
     def _dispatch_fused(self, func: str, queries: List[Query],
                         keys) -> "list":
@@ -120,13 +170,35 @@ class AQPService:
         deltas = jnp.asarray([q.delta for q in queries], jnp.float32)
         res = fused_l2miss_batch(
             self.data.values, self._offsets,
-            jnp.ones((k, self._m), jnp.float32), jnp.stack(keys), eps,
+            self._group_scale(func, k), jnp.stack(keys), eps,
             deltas, sample_keys=self._sample_key,
             est_name=func, B=self.B, n_min=self.n_min, n_max=self.n_max,
             l=min(self._m + 2, 12), max_iters=self.max_iters,
             n_cap=self.n_cap, use_kernel=self.use_kernel)
         self.fused_dispatches += 1
         return res
+
+    def _answer_pooled(self, queries: List[Query], fused_idx: List[int],
+                       out: dict) -> None:
+        """Mixed-func fused queries through ONE heterogeneous lane pool."""
+        pool = self._ensure_pool()
+        self.key, *keys = jax.random.split(self.key, len(fused_idx) + 1)
+        keys = np.asarray(jnp.stack(keys))        # one transfer for the batch
+        qid_to_i = {}
+        for i, k in zip(fused_idx, keys):
+            qid_to_i[pool.submit(queries[i], key=k)] = i
+        d0 = pool.dispatches
+        for r in pool.drain():
+            i = qid_to_i.get(r.qid)
+            if i is None:
+                # Residue from a previous interrupted answer() (drain pops
+                # every uncollected retiree): drop it, serve this batch.
+                continue
+            self._fused_rows += r.rows_sampled
+            out[i] = AQPResponse(
+                qid=i, theta=r.theta, error=r.error, success=r.success,
+                n=r.n, wall_time_s=r.wall_time_s)
+        self.fused_dispatches += pool.dispatches - d0
 
     def answer(self, queries: List[Query]) -> List[AQPResponse]:
         """Answer a batch of queries; fuse the L2 moment queries on device."""
@@ -136,54 +208,62 @@ class AQPService:
                          and q.epsilon is not None
                          and q.predicate is None)]
         rest = [i for i in range(len(queries)) if i not in fused_idx]
+        mode = self.batch_fused
+        if mode == "auto":
+            mode = "pool" if len(fused_idx) >= 2 else False
 
-        # --- fused on-device pass: ONE batched dispatch per func group ---
+        # --- fused on-device pass ---
         # All fused queries of an epoch share ``self._sample_key``: their
-        # slot->row bindings are identical, so every lane of the batched
-        # program reads the SAME underlying rows (one hot working set for
-        # the storage / cache tiers beneath, and -- with the shared (2,)
-        # sample key -- one slot table inside the program rather than one
-        # per lane).  Identical rows mean correlated answers; that is the
-        # deliberate trade the reshuffle_every policy bounds.  Bootstrap
-        # keys stay per-query, so replicate noise is independent.
-        by_func: dict[str, List[int]] = {}
-        for i in fused_idx:
-            by_func.setdefault(queries[i].func, []).append(i)
-        for func, idxs in by_func.items():
-            self.key, *keys = jax.random.split(self.key, len(idxs) + 1)
-            if self.batch_fused:
-                t0 = time.perf_counter()
-                res = self._dispatch_fused(
-                    func, [queries[i] for i in idxs], keys)
-                theta = np.asarray(res.theta)      # forces the dispatch
-                errs, succ = np.asarray(res.error), np.asarray(res.success)
-                ns, rows = np.asarray(res.n), np.asarray(res.rows_sampled)
-                # Honest per-query latency: the group cost is one dispatch;
-                # each lane's share is dispatch time / lane count (lanes run
-                # concurrently inside the one program, so per-lane wall
-                # clock is not observable -- amortized cost is).
-                per_q = (time.perf_counter() - t0) / len(idxs)
-                for lane, i in enumerate(idxs):
-                    self._fused_rows += int(rows[lane])
-                    out[i] = AQPResponse(
-                        qid=i, theta=theta[lane], error=float(errs[lane]),
-                        success=bool(succ[lane]), n=ns[lane],
-                        wall_time_s=per_q)
-            else:
-                # Per-query loop (legacy): k dispatches, timed individually.
-                for i, key in zip(idxs, keys):
+        # slot->row bindings are identical, so every lane reads the SAME
+        # underlying rows (one hot working set for the storage / cache
+        # tiers beneath, and one slot table inside the program rather than
+        # one per lane).  Identical rows mean correlated answers; that is
+        # the deliberate trade the reshuffle_every policy bounds.
+        # Bootstrap keys stay per-query, so replicate noise is independent.
+        if mode == "pool" and fused_idx:
+            self._answer_pooled(queries, fused_idx, out)
+        else:
+            by_func: dict[str, List[int]] = {}
+            for i in fused_idx:
+                by_func.setdefault(queries[i].func, []).append(i)
+            for func, idxs in by_func.items():
+                self.key, *keys = jax.random.split(self.key, len(idxs) + 1)
+                if mode is True:
                     t0 = time.perf_counter()
-                    res = self._dispatch_fused(func, [queries[i]], [key])
-                    theta = np.asarray(res.theta)
-                    self._fused_rows += int(np.asarray(res.rows_sampled)[0])
-                    out[i] = AQPResponse(
-                        qid=i, theta=theta[0],
-                        error=float(np.asarray(res.error)[0]),
-                        success=bool(np.asarray(res.success)[0]),
-                        n=np.asarray(res.n)[0],
-                        wall_time_s=time.perf_counter() - t0)
+                    res = self._dispatch_fused(
+                        func, [queries[i] for i in idxs], keys)
+                    theta = np.asarray(res.theta)      # forces the dispatch
+                    errs, succ = np.asarray(res.error), np.asarray(res.success)
+                    ns, rows = np.asarray(res.n), np.asarray(res.rows_sampled)
+                    # Honest per-query latency: the group cost is one
+                    # dispatch; each lane's share is dispatch time / lane
+                    # count (lanes run concurrently inside the one program,
+                    # so per-lane wall clock is not observable -- amortized
+                    # cost is).
+                    per_q = (time.perf_counter() - t0) / len(idxs)
+                    for lane, i in enumerate(idxs):
+                        self._fused_rows += int(rows[lane])
+                        out[i] = AQPResponse(
+                            qid=i, theta=theta[lane], error=float(errs[lane]),
+                            success=bool(succ[lane]), n=ns[lane],
+                            wall_time_s=per_q)
+                else:
+                    # Per-query loop (legacy): k dispatches, timed
+                    # individually.
+                    for i, key in zip(idxs, keys):
+                        t0 = time.perf_counter()
+                        res = self._dispatch_fused(func, [queries[i]], [key])
+                        theta = np.asarray(res.theta)
+                        self._fused_rows += int(
+                            np.asarray(res.rows_sampled)[0])
+                        out[i] = AQPResponse(
+                            qid=i, theta=theta[0],
+                            error=float(np.asarray(res.error)[0]),
+                            success=bool(np.asarray(res.success)[0]),
+                            n=np.asarray(res.n)[0],
+                            wall_time_s=time.perf_counter() - t0)
 
-        # --- host-engine fallback (order/diff/linf/predicates/quantiles) ---
+        # --- host-engine fallback (order/diff/lp/linf/predicates/quantiles) ---
         for i in rest:
             t0 = time.perf_counter()
             tr = self.engine.execute(queries[i])

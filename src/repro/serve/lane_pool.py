@@ -1,0 +1,358 @@
+"""Continuous lane-pool AQP serving (DESIGN.md SS7 phase D).
+
+The batched phase-C path answers a func group as one closed ``while_loop``:
+converged lanes stay frozen-but-resident until the slowest lane finishes, so
+under mixed-epsilon traffic most of the program's lane-ticks are spent on
+already-answered queries.  This module ports the seed repo's continuous-
+batching pattern (serve/batching.py: lockstep decode slots with splice-in
+refill) to AQP: a FIXED pool of ``lanes`` query lanes is ticked from the
+host via the resumable :func:`~repro.core.fused.fused_step`, and between
+ticks converged lanes are RETIRED (answer harvested) and REFILLED by
+splicing a waiting query's (scale, key, epsilon, delta, estimator) into the
+freed lane -- one resident XLA program serves an unbounded query stream.
+
+Why retire/refill preserves trajectories (the counter-PRNG nesting):
+
+  * a lane's tick counter ``k`` is per-lane state; the splice resets it to
+    0, so the refilled lane replays the exact init schedule a fresh run
+    would;
+  * the bootstrap stream is ``hash3(boot_base(key), k, group)`` -- a pure
+    function of the lane's OWN key and age, never of its neighbors or of
+    wall-clock tick count;
+  * the slot->row binding is the pool-shared ``sample_key`` table
+    (``sampling.counter_slot_table``), so every occupant of every lane
+    extends the same permuted prefixes (SS3.2 reuse), and a refilled lane
+    gathers exactly the rows a solo run with that ``sample_key`` would;
+  * the ESTIMATE width bucket is the max watermark over active lanes --
+    compute width only; the counter-PRNG draws are width-invariant.
+
+Heterogeneity: lanes select their estimator per-lane by moment-family index
+(``est_name=None`` routing through ``estimate_error_lanes_het``), so
+mean/sum/count/std/var/proportion queries share ONE pool instead of one
+dispatch per func group.  SUM/COUNT lanes carry their population scale in
+their ``LaneParams.scale`` row.
+
+Accounting: per-query latency is measured submit -> harvest (real, not
+amortized), queue wait separately; ``stats()`` exposes tick/dispatch
+counts, lane occupancy, and backpressure (peak queue depth).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from functools import partial
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..aqp.query import Query
+from ..core import estimators
+from ..core.fused import (LaneParams, LaneState, fused_step, init_lane_state,
+                          lane_boot_seed, make_lane_params, resolve_ext_cap)
+from ..core.sampling import GroupedData, counter_slot_table
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class PoolResponse:
+    """One retired query: the answer plus the pool's latency accounting."""
+    qid: int
+    func: str
+    theta: np.ndarray       # (m, 1) scaled estimate
+    error: float
+    success: bool           # error bound met
+    failed: bool            # Algorithm-2 unrecoverable failure
+    n: np.ndarray           # (m,) final sizes
+    iterations: int
+    rows_sampled: int       # final filled watermark (shared-prefix rows)
+    wall_time_s: float      # submit -> harvest
+    queue_wait_s: float     # submit -> splice
+    ticks_in_lane: int      # loop ticks while resident
+    lane: int
+
+
+@dataclasses.dataclass
+class _Ticket:
+    qid: int
+    func: str
+    fid: int
+    epsilon: float
+    delta: float
+    key: np.ndarray
+    scale_row: np.ndarray
+    submitted_s: float
+    spliced_s: float = 0.0
+    spliced_tick: int = 0
+
+
+@partial(jax.jit, static_argnames=("n_min",))
+def _splice(state: LaneState, params: LaneParams, lanes, keys, scale_rows,
+            eps, deltas, fids, *, n_min: int):
+    """Reset lanes ``lanes`` to tick 0, swapping in their new queries.
+
+    One dispatch splices a whole refill round: the row arrays are padded to
+    pool width with out-of-range lane indices, which ``mode="drop"``
+    discards -- so every round shares ONE compiled splice regardless of how
+    many lanes freed up.  Must reproduce ``init_lane_state`` /
+    ``make_lane_params`` row-for-row so a refilled lane is indistinguishable
+    from lane i of a fresh pool -- the refill invariant the parity tests
+    assert.
+    """
+    drop = dict(mode="drop")
+    st = state._replace(
+        keys=state.keys.at[lanes].set(keys, **drop),
+        k=state.k.at[lanes].set(0, **drop),
+        iters=state.iters.at[lanes].set(0, **drop),
+        n_cur=state.n_cur.at[lanes].set(n_min, **drop),
+        filled=state.filled.at[lanes].set(0, **drop),
+        buf=state.buf.at[lanes].set(0.0, **drop),
+        prof_n=state.prof_n.at[lanes].set(1.0, **drop),
+        prof_loge=state.prof_loge.at[lanes].set(0.0, **drop),
+        e=state.e.at[lanes].set(jnp.inf, **drop),
+        theta=state.theta.at[lanes].set(0.0, **drop),
+        done=state.done.at[lanes].set(False, **drop),
+        failed=state.failed.at[lanes].set(False, **drop),
+        beta=state.beta.at[lanes].set(0.0, **drop),
+        r2=state.r2.at[lanes].set(0.0, **drop),
+    )
+    pr = params._replace(
+        scale=params.scale.at[lanes].set(scale_rows, **drop),
+        epsilons=params.epsilons.at[lanes].set(eps, **drop),
+        deltas=params.deltas.at[lanes].set(deltas, **drop),
+        est_fids=params.est_fids.at[lanes].set(fids, **drop),
+        boot_base=params.boot_base.at[lanes].set(
+            jax.vmap(lane_boot_seed)(keys), **drop),
+    )
+    return st, pr
+
+
+class LanePool:
+    """A fixed pool of query lanes with admission, retire-and-refill.
+
+    One resident program: the pool compiles ONE ``fused_step`` signature at
+    construction shapes and every query -- any moment-family estimator, any
+    (epsilon, delta) -- runs through it.  ``ticks_per_sync`` trades host
+    round-trips against refill granularity: converged lanes freeze natively
+    inside a multi-tick dispatch (predicated updates), they just aren't
+    refilled until the next sync.
+    """
+
+    def __init__(self, data: GroupedData, *, lanes: int = 4, B: int = 300,
+                 n_min: int = 1000, n_max: int = 2000, max_iters: int = 24,
+                 n_cap: int = 1 << 16, l: Optional[int] = None,
+                 metric: str = "l2", growth_cap: float = 8.0,
+                 ext_cap: Optional[int] = None, use_kernel: bool = False,
+                 seed: int = 0, sample_key: Optional[Array] = None,
+                 ticks_per_sync: int = 1):
+        self.data = data
+        self.lanes = int(lanes)
+        m = data.num_groups
+        self._values = data.values
+        self._offsets = jnp.asarray(data.offsets)
+        self._family = {e.name: i
+                        for i, e in enumerate(estimators.moment_family())}
+        self._spec = dict(
+            est_name=None, B=B, n_min=n_min, n_max=n_max,
+            l=int(l if l is not None else min(m + 2, 12)), tau=1e-3,
+            max_iters=max_iters, n_cap=n_cap, backend="poisson",
+            metric=metric, growth_cap=growth_cap,
+            ext_cap=resolve_ext_cap(n_cap, n_max, ext_cap), adaptive=True,
+            use_kernel=use_kernel)
+        self.ticks_per_sync = int(ticks_per_sync)
+        self.key = jax.random.PRNGKey(seed)
+        if sample_key is None:
+            sample_key = jax.random.PRNGKey(seed ^ 0x5A17)
+        self._sample_key = jnp.asarray(sample_key)
+        keys0 = jax.random.split(jax.random.PRNGKey(seed), self.lanes)
+        self._params = make_lane_params(
+            self._offsets, jnp.ones((self.lanes, m), jnp.float32), keys0,
+            jnp.ones((self.lanes,), jnp.float32),
+            jnp.full((self.lanes,), 0.05, jnp.float32),
+            self._sample_key, jnp.zeros((self.lanes,), jnp.int32),
+            n_cap=n_cap)
+        state = init_lane_state(
+            keys0, m, n_cap=n_cap, c_dim=data.values.shape[1], p_dim=1,
+            n_min=n_min, max_iters=max_iters, dtype=data.values.dtype)
+        # Empty lanes are parked as ``done``: the step freezes them and the
+        # width bucket ignores them until a splice brings them live.
+        self._state = state._replace(done=jnp.ones((self.lanes,), bool))
+        self._occupant: List[Optional[_Ticket]] = [None] * self.lanes
+        self._queue: Deque[_Ticket] = deque()
+        self._scale_rows: Dict[str, np.ndarray] = {}
+        # Hand-off buffer: harvest fills it, drain() pops it.  Never grows
+        # past the queries in flight plus uncollected retirees.
+        self.results: Dict[int, PoolResponse] = {}
+        self._next_qid = 0
+        # Scheduling / backpressure accounting.
+        self.ticks = 0            # loop ticks executed (lane-steps / lanes)
+        self.dispatches = 0       # step program launches (syncs)
+        self.lane_ticks_busy = 0  # occupied-lane ticks (occupancy integral)
+        self.submitted = 0
+        self.retired = 0
+        self.peak_queue_depth = 0
+
+    # -- admission ----------------------------------------------------------
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def busy_lanes(self) -> int:
+        return sum(t is not None for t in self._occupant)
+
+    def supports(self, query: Query) -> bool:
+        """Whether this pool can serve ``query`` (moment family, this
+        metric, absolute bound, no predicate)."""
+        return (query.func in self._family
+                and query.metric == self._spec["metric"]
+                and query.epsilon is not None
+                and query.predicate is None)
+
+    def submit(self, query: Query, key: Optional[Array] = None) -> int:
+        """Enqueue one query; returns its qid (results keyed on it)."""
+        if not self.supports(query):
+            raise ValueError(
+                f"lane pool cannot serve func={query.func!r} "
+                f"metric={query.metric!r} (supported funcs: "
+                f"{sorted(self._family)}, metric {self._spec['metric']!r}, "
+                f"absolute epsilon, no predicate)")
+        if key is None:
+            self.key, key = jax.random.split(self.key)
+        scale_row = self._scale_rows.get(query.func)
+        if scale_row is None:
+            scale_row = estimators.population_scale_row(
+                query.func, self.data.scale)
+            self._scale_rows[query.func] = scale_row
+        qid = self._next_qid
+        self._next_qid += 1
+        self.submitted += 1
+        self._queue.append(_Ticket(
+            qid=qid, func=query.func, fid=self._family[query.func],
+            epsilon=float(query.epsilon), delta=float(query.delta),
+            key=np.asarray(key), scale_row=scale_row,
+            submitted_s=time.perf_counter()))
+        self.peak_queue_depth = max(self.peak_queue_depth, len(self._queue))
+        return qid
+
+    # -- scheduling ---------------------------------------------------------
+    def _refill(self) -> None:
+        if not self._queue:
+            return
+        free = [lane for lane in range(self.lanes)
+                if self._occupant[lane] is None]
+        take = min(len(free), len(self._queue))
+        if not take:
+            return
+        now = time.perf_counter()
+        Q, m = self.lanes, self.data.num_groups
+        # Pad the round to pool width with out-of-range lanes (dropped by
+        # the splice) so every round hits the one compiled splice program.
+        lanes = np.full((Q,), Q, np.int32)
+        keys = np.zeros((Q,) + self._queue[0].key.shape,
+                        self._queue[0].key.dtype)
+        rows = np.ones((Q, m), np.float32)
+        eps = np.ones((Q,), np.float32)
+        dts = np.full((Q,), 0.05, np.float32)
+        fids = np.zeros((Q,), np.int32)
+        for j in range(take):
+            t = self._queue.popleft()
+            t.spliced_s, t.spliced_tick = now, self.ticks
+            lane = free[j]
+            self._occupant[lane] = t
+            lanes[j], keys[j], rows[j] = lane, t.key, t.scale_row
+            eps[j], dts[j], fids[j] = t.epsilon, t.delta, t.fid
+        self._state, self._params = _splice(
+            self._state, self._params, lanes, keys, rows, eps, dts, fids,
+            n_min=self._spec["n_min"])
+
+    def _harvest(self) -> int:
+        """Retire finished lanes; returns the number retired this sync."""
+        s = self._state
+        done, failed, k = jax.device_get((s.done, s.failed, s.k))
+        max_iters = self._spec["max_iters"]
+        finished = [lane for lane, t in enumerate(self._occupant)
+                    if t is not None
+                    and (done[lane] or failed[lane] or k[lane] >= max_iters)]
+        if not finished:
+            return 0
+        e, n_cur, iters, theta, filled = jax.device_get(
+            (s.e, s.n_cur, s.iters, s.theta, s.filled))
+        now = time.perf_counter()
+        for lane in finished:
+            t = self._occupant[lane]
+            self.results[t.qid] = PoolResponse(
+                qid=t.qid, func=t.func, theta=np.asarray(theta[lane]),
+                error=float(e[lane]), success=bool(done[lane]),
+                failed=bool(failed[lane]), n=np.asarray(n_cur[lane]),
+                iterations=int(iters[lane]),
+                rows_sampled=int(filled[lane].sum()),
+                wall_time_s=now - t.submitted_s,
+                queue_wait_s=t.spliced_s - t.submitted_s,
+                ticks_in_lane=self.ticks - t.spliced_tick, lane=lane)
+            self._occupant[lane] = None
+            self.retired += 1
+        return len(finished)
+
+    def tick(self) -> int:
+        """One scheduling round: refill, run ``ticks_per_sync`` loop ticks
+        in one dispatch, harvest.  Returns the number of busy lanes left."""
+        self._refill()
+        if self.busy_lanes == 0:
+            return 0
+        self._state = fused_step(
+            self._values, self._offsets, self._state, self._params,
+            num_ticks=self.ticks_per_sync, **self._spec)
+        self.ticks += self.ticks_per_sync
+        self.dispatches += 1
+        self.lane_ticks_busy += self.busy_lanes * self.ticks_per_sync
+        self._harvest()
+        return self.busy_lanes
+
+    def drain(self, max_ticks: int = 100_000) -> List[PoolResponse]:
+        """Tick until the queue and every lane are empty; pop and return
+        every retired result not yet collected, in qid order.
+
+        Popping is what keeps an unbounded query stream at bounded memory:
+        ``results`` is a hand-off buffer between harvest and the caller,
+        not a history."""
+        guard = 0
+        while (self._queue or self.busy_lanes) and guard < max_ticks:
+            self.tick()
+            guard += self.ticks_per_sync
+        return [self.results.pop(qid) for qid in sorted(self.results)]
+
+    # -- epoch policy -------------------------------------------------------
+    def set_sample_key(self, sample_key: Array) -> None:
+        """Rotate the pool-shared slot->row binding (reshuffle epoch).
+
+        Only legal while the pool is idle: a resident lane's filled prefix
+        is defined by the OLD binding, so rotating under it would break the
+        nesting invariant.
+        """
+        if self.busy_lanes or self._queue:
+            raise RuntimeError("cannot rotate sample_key with queries in "
+                               "flight; drain() first")
+        self._sample_key = jnp.asarray(sample_key)
+        starts = self._offsets[:-1].astype(jnp.int32)
+        sizes = (self._offsets[1:] - self._offsets[:-1]).astype(jnp.int32)
+        self._params = self._params._replace(
+            slot_idx=counter_slot_table(
+                self._sample_key, starts, sizes, self._spec["n_cap"]))
+
+    # -- accounting ---------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        cap = max(self.ticks * self.lanes, 1)
+        return {
+            "lanes": self.lanes,
+            "ticks": self.ticks,
+            "dispatches": self.dispatches,
+            "submitted": self.submitted,
+            "retired": self.retired,
+            "queue_depth": self.queue_depth,
+            "peak_queue_depth": self.peak_queue_depth,
+            "lane_occupancy": self.lane_ticks_busy / cap,
+        }

@@ -50,6 +50,30 @@ def test_engine_count_with_predicate(engine):
     assert err <= 0.15 * np.linalg.norm(truth.ravel())
 
 
+def test_query_lp_metric_validation():
+    with pytest.raises(ValueError):
+        Query(func="avg", epsilon=0.1, metric="lp")           # lp missing
+    with pytest.raises(ValueError):
+        Query(func="avg", epsilon=0.1, metric="lp", lp=0.5)   # p < 1
+    with pytest.raises(ValueError):
+        Query(func="avg", epsilon=0.1, lp=2.0)                # lp w/o metric
+    q = Query(func="avg", epsilon=0.1, metric="lp", lp=1.0)
+    assert q.lp == 1.0
+
+
+def test_engine_lp_metric(engine):
+    """metric='lp' routes through run_lpmiss with the query's p: p=1 is the
+    L1 conversion (Thm 11), p>=2 falls back to the L2 bound."""
+    for p, eps in ((1.0, 0.2), (2.0, 0.1)):
+        q = Query(func="avg", epsilon=eps, metric="lp", lp=p)
+        tr = engine.execute(q)
+        assert tr.success
+        truth = engine.exact(q)
+        dev = np.abs(tr.theta.ravel() - truth.ravel())
+        joint = dev.sum() if p == 1.0 else np.sqrt((dev ** 2).sum())
+        assert joint <= 2 * eps
+
+
 def test_engine_order_metric():
     data = make_grouped(["normal"] * 3, 60_000, seed=9, biases=[1., 2., 3.])
     eng = AQPEngine(data, B=150, n_min=400, n_max=800)

@@ -1,0 +1,30 @@
+"""Id-indexed estimator registry: device code (lax.switch branch tables)
+routes per-lane estimator selection by these ids, so their assignment is
+part of the compiled-trajectory contract."""
+import pytest
+
+from repro.core import estimators
+
+SCALAR_ESTS = ["avg", "var", "std", "median", "proportion", "sum", "count"]
+
+
+
+# ---------------------------------------------------------------------------
+# Id-indexed registry (device code routes per-lane switch branches by id)
+# ---------------------------------------------------------------------------
+def test_registry_ids_stable_and_indexed():
+    for name in SCALAR_ESTS:
+        est = estimators.get(name)
+        assert estimators.get_by_id(est.eid) is est
+        assert estimators.est_id(name) == est.eid
+    by_id = estimators.REGISTRY_BY_ID
+    assert [e.eid for e in by_id] == list(range(len(by_id)))
+    # The moment family's ORDER is part of the compiled-program contract
+    # (lax.switch branch positions); new members may only be appended.
+    fam = estimators.moment_family()
+    assert [e.name for e in fam] == [
+        "avg", "proportion", "var", "std", "sum", "count"]
+    for i, e in enumerate(fam):
+        assert estimators.moment_family_index(e.name) == i
+    with pytest.raises(ValueError):
+        estimators.moment_family_index("median")   # no moments fast path

@@ -236,7 +236,7 @@ def test_aqp_service_batched_single_dispatch():
            for e, d in [(0.2, 0.05), (0.15, 0.05), (0.25, 0.1), (0.3, 0.05)]]
           + [Query(func="var", epsilon=0.3)])
 
-    svc_b = AQPService(data, **kw)
+    svc_b = AQPService(data, batch_fused=True, **kw)
     rb = svc_b.answer(qs)
     assert svc_b.fused_dispatches == 2        # one per func group (avg, var)
     assert all(r.success for r in rb)

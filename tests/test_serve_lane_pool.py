@@ -1,0 +1,296 @@
+"""Phase-D serving (DESIGN.md SS7): resumable fused steps, the heterogeneous
+retire-and-refill lane pool, and the AQPService pool mode.
+
+The load-bearing invariants:
+
+  * host-ticked ``fused_step`` == closed ``fused_l2miss_lanes`` while_loop
+    (the step refactor is trajectory-preserving);
+  * a pool-served query == a solo ``fused_l2miss`` run with the same
+    (key, sample_key), even when its lane was refilled mid-flight and even
+    when a straggler neighbor outlives several refills;
+  * >= 3 distinct estimator funcs share ONE resident program.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.aqp.query import Query
+from repro.core import estimators, fused
+from repro.core.fused import (fused_l2miss, fused_l2miss_lanes, fused_step,
+                              init_lane_state, lane_active, lanes_result,
+                              make_lane_params)
+from repro.data import make_grouped
+from repro.serve.lane_pool import LanePool
+
+# One shared spec so pool lanes and solo references compile comparably.
+SPEC = dict(B=100, n_min=300, n_max=600, l=6, max_iters=16, n_cap=1 << 13,
+            ext_cap=1 << 10)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_grouped(["normal", "exp"], 60_000, seed=1, biases=[5.0, 3.0])
+
+
+def _solo(data, func, key, eps, skey, **over):
+    kw = {**SPEC, "est_name": func, **over}
+    return fused_l2miss(
+        data.values, jnp.asarray(data.offsets),
+        jnp.asarray(data.scale, jnp.float32)
+        if estimators.get(func).needs_population_scale
+        else jnp.ones(data.num_groups, jnp.float32),
+        key, jnp.float32(eps), 0.05, sample_key=skey, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Step refactor: host-ticked fused_step == closed while_loop
+# ---------------------------------------------------------------------------
+
+def test_step_matches_while_loop(data):
+    """fused_l2miss_lanes rebuilt on fused_step must reproduce the closed
+    loop bit-exactly: same body, so ticking it from the host with the same
+    carry gives the same trajectory."""
+    q = 3
+    keys = jax.random.split(jax.random.PRNGKey(1), q)
+    eps = jnp.asarray([0.15, 0.08, 0.2], jnp.float32)
+    deltas = jnp.full((q,), 0.05, jnp.float32)
+    skey = jax.random.PRNGKey(7)
+    offsets = jnp.asarray(data.offsets)
+    scale = jnp.ones((q, 2), jnp.float32)
+    kw = {**SPEC, "est_name": "avg"}
+
+    r_loop = fused_l2miss_lanes(
+        data.values, offsets, scale, keys, eps, deltas, skey, **kw)
+
+    params = make_lane_params(offsets, scale, keys, eps, deltas, skey,
+                              n_cap=SPEC["n_cap"])
+    state = init_lane_state(keys, 2, n_cap=SPEC["n_cap"], c_dim=1, p_dim=1,
+                            n_min=SPEC["n_min"], max_iters=SPEC["max_iters"],
+                            dtype=data.values.dtype)
+    ticks = 0
+    while bool(np.any(np.asarray(lane_active(state, SPEC["max_iters"])))):
+        state = fused_step(data.values, offsets, state, params, **kw)
+        ticks += 1
+    r_step = lanes_result(state)
+
+    assert ticks == int(np.max(np.asarray(r_loop.iterations)))
+    assert np.array_equal(np.asarray(r_loop.n), np.asarray(r_step.n))
+    assert np.array_equal(np.asarray(r_loop.rows_sampled),
+                          np.asarray(r_step.rows_sampled))
+    assert np.array_equal(np.asarray(r_loop.iterations),
+                          np.asarray(r_step.iterations))
+    assert np.array_equal(np.asarray(r_loop.success),
+                          np.asarray(r_step.success))
+    assert_allclose(np.asarray(r_loop.error), np.asarray(r_step.error),
+                    rtol=1e-6)
+    assert_allclose(np.asarray(r_loop.theta), np.asarray(r_step.theta),
+                    rtol=1e-6)
+
+
+def test_multi_tick_dispatch_matches_single(data):
+    """num_ticks>1 (one dispatch, fori_loop) == ticking one at a time:
+    converged lanes freeze natively inside the window."""
+    q = 2
+    keys = jax.random.split(jax.random.PRNGKey(3), q)
+    eps = jnp.asarray([0.15, 0.25], jnp.float32)
+    deltas = jnp.full((q,), 0.05, jnp.float32)
+    offsets = jnp.asarray(data.offsets)
+    scale = jnp.ones((q, 2), jnp.float32)
+    kw = {**SPEC, "est_name": "avg"}
+    params = make_lane_params(offsets, scale, keys, eps, deltas,
+                              jax.random.PRNGKey(9), n_cap=SPEC["n_cap"])
+
+    def fresh():
+        return init_lane_state(
+            keys, 2, n_cap=SPEC["n_cap"], c_dim=1, p_dim=1,
+            n_min=SPEC["n_min"], max_iters=SPEC["max_iters"],
+            dtype=data.values.dtype)
+
+    s1 = fresh()
+    for _ in range(8):
+        s1 = fused_step(data.values, offsets, s1, params, **kw)
+    s4 = fresh()
+    for _ in range(2):
+        s4 = fused_step(data.values, offsets, s4, params, num_ticks=4, **kw)
+    r1, r4 = lanes_result(s1), lanes_result(s4)
+    assert np.array_equal(np.asarray(r1.n), np.asarray(r4.n))
+    assert np.array_equal(np.asarray(r1.iterations), np.asarray(r4.iterations))
+    assert_allclose(np.asarray(r1.error), np.asarray(r4.error), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Lane pool: retire-and-refill parity with one-shot runs
+# ---------------------------------------------------------------------------
+
+def test_pool_matches_one_shot_with_straggler_refills(data):
+    """A tight-epsilon straggler occupies its lane while the neighbor lane
+    retires and refills several times; every query's answer must equal the
+    solo fused_l2miss run with the same (key, sample_key)."""
+    skey = jax.random.PRNGKey(42)
+    pool = LanePool(data, lanes=2, **SPEC, sample_key=skey, seed=5)
+    specs = [("avg", 0.06)] + [("avg", 0.25)] * 4   # straggler + fast ones
+    keys = jax.random.split(jax.random.PRNGKey(11), len(specs))
+    qids = [pool.submit(Query(func=f, epsilon=e), key=keys[i])
+            for i, (f, e) in enumerate(specs)]
+    res = {r.qid: r for r in pool.drain()}
+    assert len(res) == len(specs)
+
+    # The straggler really did outlive refills: its lane held one query,
+    # the other lane cycled through the remaining four.
+    lane_of = {qid: res[qid].lane for qid in qids}
+    straggler_lane = lane_of[qids[0]]
+    neighbors = [qid for qid in qids[1:] if lane_of[qid] != straggler_lane]
+    assert len(neighbors) >= 3
+    assert res[qids[0]].iterations > max(res[q].iterations
+                                         for q in qids[1:])
+
+    for i, (f, e) in enumerate(specs):
+        solo = _solo(data, f, keys[i], e, skey, l=pool._spec["l"])
+        r = res[qids[i]]
+        assert r.success and bool(solo.success)
+        assert np.array_equal(r.n, np.asarray(solo.n)), (i, f, e)
+        assert r.rows_sampled == int(solo.rows_sampled)
+        assert r.iterations == int(solo.iterations)
+        assert_allclose(r.error, float(solo.error), rtol=1e-5)
+        assert_allclose(r.theta, np.asarray(solo.theta), rtol=1e-5)
+
+
+def test_pool_heterogeneous_one_program(data):
+    """>= 3 distinct estimator funcs share ONE resident pool program for a
+    16-query mixed workload, and every answer matches the host-side exact
+    reference within its bound."""
+    from repro.core.l2miss import exact_answer
+
+    skey = jax.random.PRNGKey(7)
+    pool = LanePool(data, lanes=4, **SPEC, sample_key=skey, seed=3)
+    scale = np.asarray(data.scale)
+    workload = []
+    for rep in range(4):
+        workload += [
+            ("avg", 0.15 + 0.02 * rep),
+            ("var", 0.2 + 0.03 * rep),
+            ("std", 0.12 + 0.02 * rep),
+            # SUM rides at population scale: eps scales with |D|.
+            ("sum", (0.15 + 0.02 * rep) * float(scale.max())),
+        ]
+    assert len(workload) == 16
+    qids = [pool.submit(Query(func=f, epsilon=e)) for f, e in workload]
+
+    pool.tick()                                   # compile + first tick
+    cache0 = fused_step._cache_size()
+    res = {r.qid: r for r in pool.drain()}        # pops early retirees too
+    assert fused_step._cache_size() == cache0     # ONE resident program
+    assert len(res) == 16 and pool.stats()["retired"] == 16
+    assert not pool.results                       # hand-off buffer drained
+
+    for qid, (f, e) in zip(qids, workload):
+        r = res[qid]
+        assert r.success, (f, e)
+        assert r.error <= e
+        truth = exact_answer(data, estimators.get(f)).ravel()
+        dev = float(np.linalg.norm(r.theta.ravel() - truth))
+        assert dev <= 2 * e, (f, e, dev)
+
+
+def test_pool_admission_and_stats(data):
+    pool = LanePool(data, lanes=2, **SPEC)
+    # Non-moment funcs, wrong metric, relative bounds, predicates: rejected.
+    with pytest.raises(ValueError):
+        pool.submit(Query(func="median", epsilon=0.1))
+    with pytest.raises(ValueError):
+        pool.submit(Query(func="avg", epsilon=0.1, metric="linf"))
+    with pytest.raises(ValueError):
+        pool.submit(Query(func="avg", epsilon_rel=0.1))
+    with pytest.raises(ValueError):
+        pool.submit(Query(func="avg", epsilon=0.1,
+                          predicate=lambda v: v[:, 0] > 0))
+
+    for e in (0.25, 0.2, 0.3, 0.22):
+        pool.submit(Query(func="avg", epsilon=e))
+    assert pool.queue_depth == 4                  # backpressure visible
+    assert pool.peak_queue_depth == 4
+    res = pool.drain()
+    st = pool.stats()
+    assert st["submitted"] == st["retired"] == 4
+    assert st["queue_depth"] == 0
+    assert st["ticks"] >= 1 and st["dispatches"] >= 1
+    assert 0.0 < st["lane_occupancy"] <= 1.0
+    for r in res:
+        assert r.wall_time_s >= r.queue_wait_s >= 0.0
+        assert r.ticks_in_lane >= 1
+    # Queued-behind queries waited: with 2 lanes and 4 queries, the last
+    # two spliced strictly after ticking began.
+    waited = [r for r in res if r.queue_wait_s > 0]
+    assert len(waited) >= 2
+
+    # Sample-key rotation is only legal while idle.
+    pool.submit(Query(func="avg", epsilon=0.3))
+    with pytest.raises(RuntimeError):
+        pool.set_sample_key(jax.random.PRNGKey(1))
+    pool.drain()
+    pool.set_sample_key(jax.random.PRNGKey(1))    # idle: fine
+
+
+def test_pool_refill_equals_fresh_pool(data):
+    """The refill invariant: a query spliced into a USED lane answers
+    exactly as the same query admitted into a fresh pool."""
+    skey = jax.random.PRNGKey(13)
+    key_a, key_b = jax.random.split(jax.random.PRNGKey(2))
+
+    pool = LanePool(data, lanes=1, **SPEC, sample_key=skey)
+    qa = pool.submit(Query(func="var", epsilon=0.2), key=key_a)
+    qb = pool.submit(Query(func="std", epsilon=0.1), key=key_b)  # refill
+    res = {r.qid: r for r in pool.drain()}
+    assert res[qb].lane == res[qa].lane == 0      # same physical lane
+
+    fresh = LanePool(data, lanes=1, **SPEC, sample_key=skey)
+    qf = fresh.submit(Query(func="std", epsilon=0.1), key=key_b)
+    rf = fresh.drain()[0]
+    assert rf.qid == qf
+    assert np.array_equal(res[qb].n, rf.n)
+    assert res[qb].iterations == rf.iterations
+    assert_allclose(res[qb].error, rf.error, rtol=1e-6)
+    assert_allclose(res[qb].theta, rf.theta, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Service integration: batch_fused="auto"/"pool"
+# ---------------------------------------------------------------------------
+
+def test_service_pool_mode_mixed_funcs(data):
+    """The service's pool mode serves a mixed-func batch (incl. SUM at
+    population scale) without per-func grouping, with answers matching the
+    per-query loop references."""
+    from repro.serve.aqp_service import AQPService
+
+    kw = dict(B=100, n_min=300, n_max=600, max_iters=16, n_cap=1 << 13,
+              seed=0, reshuffle_every=1000)
+    qs = [Query(func="avg", epsilon=0.2),
+          Query(func="std", epsilon=0.12),
+          Query(func="var", epsilon=0.25),
+          Query(func="sum", epsilon=0.2 * float(np.max(data.scale))),
+          Query(func="median", epsilon=0.3)]      # host-engine fallback
+
+    svc = AQPService(data, batch_fused="pool", **kw)
+    rs = svc.answer(qs)
+    assert all(r.success for r in rs)
+    assert svc.fused_dispatches >= 1              # pool step syncs counted
+    assert svc._lane_pool is not None
+    assert svc._lane_pool.stats()["retired"] == 4
+    # auto mode picks the pool for multi-query fusable batches.
+    svc_auto = AQPService(data, **kw)
+    assert svc_auto.batch_fused == "auto"
+    rs_auto = svc_auto.answer(qs[:3])
+    assert all(r.success for r in rs_auto)
+    assert svc_auto._lane_pool is not None
+    # ... and the loop for singletons (no pool build).
+    svc_one = AQPService(data, **kw)
+    r1 = svc_one.answer([qs[0]])[0]
+    assert r1.success and svc_one._lane_pool is None
+
+    # Answers agree with the exact references within their bounds.
+    for q, r in zip(qs[:4], rs):
+        truth = svc.engine.exact(q).ravel()
+        assert np.linalg.norm(r.theta.ravel() - truth) <= 2 * q.epsilon
