@@ -1,25 +1,32 @@
-"""Serving-path benchmark (DESIGN.md SS7 phase D): per-query dispatch loop
-vs closed-loop batched lanes vs the continuous retire-and-refill lane pool.
+"""Serving-path benchmark (DESIGN.md SS7 phases D + E): per-query dispatch
+loop vs closed-loop batched lanes vs the continuous retire-and-refill lane
+pool.
 
-Three arrival mixes, 16 queries each, answered by all three ``batch_fused``
+Four arrival mixes, 16 queries each, answered by all three ``batch_fused``
 modes of AQPService:
 
-  * ``uniform``   -- one func, epsilons spread over a moderate band: every
-    lane runs a similar number of iterations, the batched path's frozen-
-    straggler waste is small.
-  * ``straggler`` -- 15 loose queries + 1 tight one: the adversarial case
-    for closed-loop batching (every lane stays resident until the straggler
-    converges) and the motivating case for retire-and-refill.
-  * ``mixedfunc`` -- 4 estimator funcs x mixed epsilons: the looped/batched
-    paths pay one dispatch (group) per func; the heterogeneous pool serves
-    all funcs from ONE resident program.
+  * ``uniform``      -- one func, epsilons spread over a moderate band:
+    every lane runs a similar number of iterations, the batched path's
+    frozen-straggler waste is small.
+  * ``straggler``    -- 15 loose queries + 1 tight one: the adversarial
+    case for closed-loop batching (every lane stays resident until the
+    straggler converges) and the motivating case for retire-and-refill.
+  * ``parked-heavy`` -- 14 very loose queries that converge almost
+    immediately + 2 tight stragglers: once the loose tail retires the pool
+    runs mostly-parked for the stragglers' long middle game, which
+    isolates the phase-E gating (parked lanes skip bootstrap tiles AND
+    window gathers; a tick costs its active lanes, not pool width).
+  * ``mixedfunc``    -- 4 estimator funcs x mixed epsilons: the looped/
+    batched paths pay one dispatch (group) per func; the heterogeneous
+    pool serves all funcs from ONE resident program.
 
 Rows report amortized us/query, the rows gathered, and the dispatch/tick
 counts; the pool row carries ``speedup_vs_loop`` -- the acceptance number
-(pool >= looped throughput on the mixed-epsilon workloads).  On CPU the
-pool's edge comes from amortizing per-tick fixed overhead over busy lanes
-while never spending ticks on frozen stragglers; on accelerators the
-dispatch-count gap widens it.
+(pool >= looped throughput on the mixed-epsilon workloads) -- plus the
+phase-E observables ``active_frac`` (per-dispatch active-lane fraction)
+and ``rows_per_tick``.  On CPU the pool's edge comes from amortizing
+per-tick fixed overhead over busy lanes while never spending ticks on
+frozen stragglers; on accelerators the dispatch-count gap widens it.
 """
 from __future__ import annotations
 
@@ -39,10 +46,15 @@ SKW = dict(B=100, n_min=300, n_max=600, max_iters=12, seed=0,
 
 def _mixes(q: int, scale_max: float):
     tight, loose = 0.08, 0.25
+    n_strag = max(1, q // 8)
     return {
         "uniform": [("avg", float(e))
                     for e in np.linspace(0.1, 0.2, q)],
         "straggler": [("avg", loose)] * (q - 1) + [("avg", tight)],
+        # Early-converging tail + a few stragglers: most lanes spend the
+        # run parked, so the pool's cost is its gated active lanes.
+        "parked-heavy": ([("avg", 0.35)] * (q - n_strag)
+                         + [("avg", 0.07)] * n_strag),
         "mixedfunc": [(("avg", "var", "std", "sum")[i % 4],
                        float(e) * (scale_max if i % 4 == 3 else 1.0))
                       for i, e in enumerate(np.linspace(0.1, 0.22, q))],
@@ -98,7 +110,9 @@ def run(emit: CsvEmitter, *, full: bool = False, smoke: bool = False):
 
         def snap_pool():
             p = svc_p._lane_pool
-            snap.update(ticks=p.ticks, busy=p.lane_ticks_busy)
+            snap.update(ticks=p.ticks, busy=p.lane_ticks_busy,
+                        disp=p.dispatches, frac=p._active_frac_sum,
+                        rows=p.stats()["rows_gathered"])
 
         ((rl, t_loop, rows_l, disp_l),
          (rb, t_batch, rows_b, disp_b),
@@ -114,15 +128,20 @@ def run(emit: CsvEmitter, *, full: bool = False, smoke: bool = False):
         # cumulative stats() would fold warm-up + every repeat together).
         pool = svc_p._lane_pool
         dticks = pool.ticks - snap["ticks"]
+        ddisp = pool.dispatches - snap["disp"]
         occ = (pool.lane_ticks_busy - snap["busy"]) / max(
             dticks * pool.lanes, 1)
+        active_frac = (pool._active_frac_sum - snap["frac"]) / max(ddisp, 1)
+        drows = pool.stats()["rows_gathered"] - snap["rows"]
         ok = all(r.success for r in rp)
         if not ok:
             print(f"warning: pool missed the bound on {mix}", flush=True)
         emit.add(f"serve/{mix}-pool", t_pool / q, {
             "rows_touched": rows_p, "dispatches": disp_p, "queries": q,
-            "lanes": lanes, "ticks": dticks // repeats,
+            "lanes": lanes, "tiers": pool.tiers, "ticks": dticks // repeats,
             "occupancy": round(occ, 3),
+            "active_frac": round(active_frac, 3),
+            "rows_per_tick": int(drows / max(dticks, 1)),
             "all_success": ok,
             "speedup_vs_loop": round(t_loop / max(t_pool, 1e-9), 2),
             "speedup_vs_batched": round(t_batch / max(t_pool, 1e-9), 2)})

@@ -77,7 +77,8 @@ def main() -> None:
                 json.dump(emit.json_rows(
                     "serve/",
                     keys=("bench", "us_per_call", "rows_touched",
-                          "dispatches", "speedup_vs_loop")), fh, indent=2)
+                          "dispatches", "speedup_vs_loop", "active_frac",
+                          "rows_per_tick")), fh, indent=2)
             print("wrote BENCH_serve.json", flush=True)
             wrote_json = True
     if args.json and not wrote_json:

@@ -205,16 +205,22 @@ def _lane_moment_sums(v, mf, seeds, B, use_kernel, interpret,
     ``lax.map``, where a ``lax.cond`` is a real branch, not the
     execute-both of vmapped control flow.  This is what keeps a lane pool's
     straggler tail (one live lane, q-1 parked) from paying q lanes of
-    bootstrap compute per tick.  The kernel path ignores the hint (the MXU
-    tile schedule is shape-static).
+    bootstrap compute per tick.  The kernel path gets the same gating at
+    grid level (DESIGN.md SS7 phase E): the flag is broadcast over the
+    lane's groups and each inactive group's tiles early-exit under
+    ``pl.when`` -- no weight tile, no MXU contraction.  Both paths report
+    identical zeros for inactive lanes, so kernel-vs-jnp parity holds for
+    any flag pattern.
     """
     q, m, w = mf.shape
     feats = jnp.stack([mf, mf * v, mf * v * v], axis=-1)       # (q, m, w, 3)
     M_plain = jnp.sum(feats, axis=2)                           # (q, m, 3)
     if use_kernel:
         from ..kernels.poisson_bootstrap import ops as pb_ops
+        act = (None if lane_active is None
+               else jnp.broadcast_to(lane_active[:, None], (q, m)))
         M = pb_ops.bootstrap_moments_masked(
-            v, mf, seeds, B, interpret=interpret)[..., :3]
+            v, mf, seeds, B, lane_active=act, interpret=interpret)[..., :3]
     else:
         rows = jnp.arange(w, dtype=jnp.uint32)
         cols = jnp.arange(B, dtype=jnp.uint32)

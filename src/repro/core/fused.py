@@ -15,6 +15,9 @@ buffers:
     filled watermark -- per-iteration gather drops from O(n_cap) to
     O(ext_cap) -- and the distinct rows gathered over a run equal the final
     watermark sum(filled) (reported as rows_sampled; see DESIGN.md SS3.2).
+    The window gather is predicated per lane (phase E): frozen/parked lanes
+    skip it via a real ``lax.cond`` branch, bounding a tick's gather
+    traffic by its ACTIVE lanes.
   * width-adaptive ESTIMATE (phase C): the bootstrap runs on a power-of-two
     width bucket of the carried buffer covering the current watermark, not
     on the full ``n_cap`` capacity -- ``lax.switch`` over a static bucket
@@ -86,7 +89,11 @@ class FusedResult(NamedTuple):
     r2: Array
     profile_n: Array    # (max_iters, m)
     profile_e: Array    # (max_iters,)
-    rows_sampled: Array # total rows gathered (== sum of the filled watermark)
+    rows_sampled: Array # total rows gathered (== sum of the filled
+                        #   watermark).  Only ACTIVE ticks gather (the
+                        #   per-lane gated window; frozen/parked lanes skip
+                        #   their gather entirely), so this also equals the
+                        #   rows the lane's active iterations pulled from HBM.
 
 
 class LaneState(NamedTuple):
@@ -144,14 +151,27 @@ def _bucket_widths(n_cap: int, base: int) -> Tuple[int, ...]:
     return tuple(widths)
 
 
+def bucket_ladder(n_cap: int, n_max: int) -> Tuple[int, ...]:
+    """The static ESTIMATE width ladder the fused step compiles (phase C).
+
+    Shared with the pool's admission cost model (serve/lane_pool.py), so
+    the bucket a scheduler reasons about is the bucket the step executes.
+    """
+    return _bucket_widths(n_cap, sampling.bucket_cap(min(n_max, n_cap)))
+
+
 def resolve_ext_cap(n_cap: int, n_max: int, ext_cap: Optional[int] = None) -> int:
-    """Extension window: the most new rows one iteration may gather.
+    """Extension window: the most new rows one ACTIVE lane-tick may gather.
 
     Must cover the init levels (or the two-point design would collapse);
     beyond that it trades per-iteration gather width against extra
     refinement iterations when PREDICT wants a bigger jump than the window
-    allows.  Step callers must resolve once and pass the same value every
-    tick -- the window size is part of the compiled step signature.
+    allows.  The window gather is gated per lane (``gate_gather``, a real
+    ``lax.cond`` branch): frozen/parked lanes skip theirs, so one tick's
+    gather traffic is bounded by ``sum(active) * ext_cap``, not
+    ``q * ext_cap``.  Step callers must resolve once and pass the same
+    value every tick -- the window size is part of the compiled step
+    signature.
     """
     if ext_cap is None:
         ext_cap = min(n_cap, max(sampling.bucket_cap(n_max), n_cap // 8))
@@ -266,6 +286,7 @@ def _step_body(
     ext_cap: int,
     adaptive: bool,
     use_kernel: bool,
+    gate_gather: bool,
 ) -> LaneState:
     """One SAMPLE -> ESTIMATE -> FIT -> PREDICT -> TEST tick over all lanes.
 
@@ -286,8 +307,7 @@ def _step_body(
     # Deterministic balanced two-point design (Eq. 15/16): cyclic shifts give
     # every group both levels, keeping all slopes identifiable.
     l_min = min(max(int(round(l * n_max / (n_min + n_max))), 1), l - 1)
-    widths = (_bucket_widths(n_cap, sampling.bucket_cap(min(n_max, n_cap)))
-              if adaptive else (n_cap,))
+    widths = bucket_ladder(n_cap, n_max) if adaptive else (n_cap,)
     shared_slots = p.slot_idx.ndim == 2
 
     keys2 = jax.vmap(jax.random.split)(s.keys)                 # (q, 2, 2)
@@ -345,22 +365,48 @@ def _step_body(
                        jnp.minimum(s.n_cur, s.filled))
     n_eff = n_vec
     # ---- extend the carried nested samples by the window only ----
-    slots = s.filled[:, :, None] + jnp.arange(
-        ext_cap, dtype=jnp.int32)[None, None, :]               # (q, m, ext)
-    valid = slots < win_hi[:, :, None]
-    clipped = jnp.minimum(slots, n_cap - 1)
-    if shared_slots:
-        gidx = jax.vmap(
-            lambda sl: jnp.take_along_axis(p.slot_idx, sl, axis=1))(clipped)
+    # One lane's window gather: (m, ext_cap) rows past the watermark,
+    # scattered into the lane's carried buffer (OOB targets dropped).
+    def _lane_gather(buf_l, filled_l, hi_l, slot_idx_l):
+        slots = filled_l[:, None] + jnp.arange(
+            ext_cap, dtype=jnp.int32)[None, :]                 # (m, ext)
+        valid = slots < hi_l[:, None]
+        clipped = jnp.minimum(slots, n_cap - 1)
+        gidx = jnp.take_along_axis(slot_idx_l, clipped, axis=1)
+        new_rows = values[gidx]                                # (m, ext, c)
+        tgt = jnp.where(valid, slots, n_cap)                   # OOB -> dropped
+        return buf_l.at[jnp.arange(m)[:, None], tgt].set(
+            new_rows, mode="drop")
+
+    if gate_gather:
+        # Per-lane lax.cond (a REAL branch under lax.map, not the
+        # execute-both of vmapped control flow): frozen/parked lanes skip
+        # the gather entirely, so a tick's HBM row traffic is bounded by
+        # sum(active) * ext_cap instead of q * ext_cap.  Exact skip:
+        # an inactive lane's window degenerates to the resident prefix
+        # (win_hi <= filled above), so its gather would scatter nothing --
+        # gated and ungated buffers are bit-identical.
+        def _one(args):
+            buf_l, filled_l, hi_l, act_l = args[:4]
+            slot_idx_l = p.slot_idx if shared_slots else args[4]
+            return jax.lax.cond(
+                act_l,
+                lambda _: _lane_gather(buf_l, filled_l, hi_l, slot_idx_l),
+                lambda _: buf_l, 0)
+
+        operands = (s.buf, s.filled, win_hi, active)
+        if not shared_slots:
+            operands = operands + (p.slot_idx,)
+        buf = jax.lax.map(_one, operands)
     else:
-        gidx = jnp.take_along_axis(p.slot_idx, clipped, axis=2)
-    new_rows = values[gidx]                                    # (q, m, ext, c)
-    tgt = jnp.where(valid, slots, n_cap)                       # OOB -> dropped
-    buf = s.buf.at[
-        jnp.arange(q)[:, None, None],
-        jnp.arange(m)[None, :, None],
-        tgt,
-    ].set(new_rows, mode="drop")
+        if shared_slots:
+            buf = jax.lax.map(
+                lambda a: _lane_gather(a[0], a[1], a[2], p.slot_idx),
+                (s.buf, s.filled, win_hi))
+        else:
+            buf = jax.lax.map(
+                lambda a: _lane_gather(*a),
+                (s.buf, s.filled, win_hi, p.slot_idx))
     filled = jnp.maximum(s.filled, win_hi)
     # ---- bootstrap estimate on the active width bucket ----
     # Bucket = max watermark over ACTIVE lanes: frozen lanes' (possibly
@@ -433,6 +479,7 @@ def _step_body(
 _STEP_STATICS = (
     "est_name", "B", "n_min", "n_max", "l", "tau", "max_iters", "n_cap",
     "backend", "metric", "growth_cap", "ext_cap", "adaptive", "use_kernel",
+    "gate_gather",
 )
 
 
@@ -457,6 +504,7 @@ def fused_step(
     ext_cap: Optional[int] = None,
     adaptive: bool = True,
     use_kernel: bool = False,
+    gate_gather: bool = True,
     num_ticks: int = 1,
 ) -> LaneState:
     """Host-callable resumable step: ``num_ticks`` iterations, one dispatch.
@@ -472,7 +520,7 @@ def fused_step(
         est_name=est_name, B=B, n_min=n_min, n_max=n_max, l=l, tau=tau,
         max_iters=max_iters, n_cap=n_cap, backend=backend, metric=metric,
         growth_cap=growth_cap, ext_cap=ext_cap, adaptive=adaptive,
-        use_kernel=use_kernel)
+        use_kernel=use_kernel, gate_gather=gate_gather)
     if num_ticks == 1:
         return _step_body(values, offsets, state, params, **spec)
     return jax.lax.fori_loop(
@@ -519,6 +567,7 @@ def fused_l2miss_lanes(
     ext_cap: Optional[int] = None,
     adaptive: bool = True,
     use_kernel: bool = False,
+    gate_gather: bool = True,
 ) -> FusedResult:
     """q query lanes, one resident table, one while_loop (SS7 phase C/D).
 
@@ -561,7 +610,7 @@ def fused_l2miss_lanes(
         est_name=est_name, B=B, n_min=n_min, n_max=n_max, l=l, tau=tau,
         max_iters=max_iters, n_cap=n_cap, backend=backend, metric=metric,
         growth_cap=growth_cap, ext_cap=ext_cap, adaptive=adaptive,
-        use_kernel=use_kernel)
+        use_kernel=use_kernel, gate_gather=gate_gather)
 
     state = jax.lax.while_loop(
         lambda st: jnp.any(lane_active(st, max_iters)),

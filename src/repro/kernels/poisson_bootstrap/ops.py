@@ -9,6 +9,11 @@
                               the result is invariant to the padded width:
                               slicing the sample to a wider bucket with zero
                               mask beyond the watermark changes nothing.
+                              ``lane_active`` (phase E) gates whole groups at
+                              grid level: inactive groups skip weight
+                              generation + the MXU contraction and report
+                              zero sums; active groups are bit-equal to an
+                              all-active call.
 ``estimate_error_moments``    drop-in replacement for
                               core.bootstrap.estimate_error for the moment
                               estimators (avg/var/std/sum/count/proportion):
@@ -80,6 +85,7 @@ def bootstrap_moments_masked(
     seeds: jax.Array,      # (...,) uint32 counter seeds, one per group
     B: int = 500,
     *,
+    lane_active: jax.Array | None = None,  # (...,) gate flags, None = all on
     tb: int = 256,
     tn: int = 512,
     interpret: bool | None = None,
@@ -95,6 +101,13 @@ def bootstrap_moments_masked(
     :func:`~..ref.bootstrap_moments_masked_ref` materializes the same weight
     matrix in jnp; interpret-mode parity is bit-comparable up to f32
     accumulation order.
+
+    ``lane_active`` gates whole groups at grid level (``pl.when`` inside the
+    kernel): an inactive group's tiles neither generate weights nor touch
+    the MXU, and its replicate sums come back as zeros.  Callers may only
+    pass it when they discard inactive groups' outputs -- the fused loop's
+    frozen-lane predication -- because zeros are NOT the ungated result for
+    those groups.  Active groups are bit-equal with any flag pattern.
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -104,17 +117,15 @@ def bootstrap_moments_masked(
     B_pad = _round_up(B, tb)
     xf = x.reshape((-1, n))
     mf = mask.reshape((-1, n))
-    sf = seeds.reshape((-1,))
-
-    def one(xg, mg, sg):
-        feats = build_feats(xg, mg, n_pad)
-        M = K.poisson_bootstrap_moments(
-            feats, sg.astype(jnp.uint32).reshape(1), B_pad,
-            tb=tb, tn=tn, interpret=interpret)
-        return M[:5, :B].T
-
-    M = jax.vmap(one)(xf, mf, sf)
-    return M.reshape(lead + (B, 5))
+    sf = seeds.reshape((-1,)).astype(jnp.uint32)
+    if lane_active is None:
+        act = jnp.ones((xf.shape[0],), jnp.int32)
+    else:
+        act = lane_active.reshape((-1,)).astype(jnp.int32)
+    feats = jax.vmap(lambda xg, mg: build_feats(xg, mg, n_pad))(xf, mf)
+    M = K.poisson_bootstrap_moments_lanes(
+        feats, sf, act, B_pad, tb=tb, tn=tn, interpret=interpret)
+    return M[:, :5, :B].transpose(0, 2, 1).reshape(lead + (B, 5))
 
 
 @functools.partial(
@@ -129,32 +140,37 @@ def estimate_error_moments(
     delta,
     B: int = 500,
     metric: str = "l2",
+    active: jax.Array | None = None,   # (m,) group gate flags, None = all on
     tb: int = 256,
     tn: int = 512,
     interpret: bool | None = None,
 ):
-    """Kernel-backed ESTIMATE: mirrors core.bootstrap.estimate_error."""
+    """Kernel-backed ESTIMATE: mirrors core.bootstrap.estimate_error.
+
+    ``active`` forwards to the kernel's grid-level gating: inactive groups
+    skip their bootstrap tiles and contribute ZERO per-group error to the
+    joint metric (their theta falls back to the plain-sample estimate via
+    the dead-replicate guard).  Only pass it when the caller discards or
+    re-derives those groups' contributions.
+    """
     est = get_estimator(est_name)
     if est.moments_finish is None:
         raise ValueError(f"{est_name} is not a moment estimator")
     m = sample.shape[0]
     seeds = jax.random.randint(key, (m,), 0, jnp.iinfo(jnp.int32).max)
-
-    def per_group(xg, mg, sg):
-        v = xg[:, 0]
-        M = bootstrap_moments(v, mg, sg.astype(jnp.uint32), B,
-                              tb=tb, tn=tn, interpret=interpret)  # (B, 5)
-        # Guard dead replicates (sum w == 0): substitute the plain sample.
-        feats = jnp.stack([mg, mg * v, mg * v * v], axis=1)       # (n, 3)
-        M_plain = mg @ feats                                       # (3,)
-        dead = M[:, 0:1] <= 0
-        M3 = jnp.where(dead, M_plain[None, :], M[:, :3])
-        reps = est.moments_finish(M3)                              # (B, 1)
-        theta = est.moments_finish(M_plain[None, :])[0]            # (1,)
-        err = jnp.sqrt(jnp.sum((reps - theta[None, :]) ** 2, axis=-1))
-        return theta, err
-
-    theta_hat, errs = jax.vmap(per_group)(sample, mask, seeds)  # (m,1),(m,B)
+    v = sample[..., 0]
+    M = bootstrap_moments_masked(
+        v, mask, seeds.astype(jnp.uint32), B, lane_active=active,
+        tb=tb, tn=tn, interpret=interpret)                     # (m, B, 5)
+    # Guard dead replicates (sum w == 0): substitute the plain sample.
+    mf = mask.astype(jnp.float32)
+    feats = jnp.stack([mf, mf * v, mf * v * v], axis=-1)       # (m, n, 3)
+    M_plain = jnp.einsum("mn,mnp->mp", mf, feats)              # (m, 3)
+    dead = M[:, :, 0:1] <= 0
+    M3 = jnp.where(dead, M_plain[:, None, :], M[:, :, :3])
+    reps = est.moments_finish(M3)                              # (m, B, 1)
+    theta_hat = est.moments_finish(M_plain[:, None, :])[:, 0, :]  # (m, 1)
+    errs = jnp.sqrt(jnp.sum((reps - theta_hat[:, None, :]) ** 2, axis=-1))
     errs = errs * scale[:, None]
     joint = _joint_metric(errs, metric, axis=0)
     e = jnp.quantile(joint, 1.0 - delta)

@@ -29,7 +29,9 @@ def poisson_bootstrap_moments_ref(feats: jax.Array, seed: jax.Array,
 
 
 def bootstrap_moments_masked_ref(x: jax.Array, mask: jax.Array,
-                                 seeds: jax.Array, B: int) -> jax.Array:
+                                 seeds: jax.Array, B: int,
+                                 lane_active: jax.Array | None = None
+                                 ) -> jax.Array:
     """(..., B, 5) oracle for ops.bootstrap_moments_masked.
 
     Materializes the per-group (n, B) weight matrix from the SAME counter
@@ -38,6 +40,9 @@ def bootstrap_moments_masked_ref(x: jax.Array, mask: jax.Array,
     draws are a pure function of (seed, j, b), padding ``x``/``mask`` with
     zero-mask rows leaves the result exactly unchanged -- the width-bucket
     invariance contract of DESIGN.md SS7 phase C.
+
+    ``lane_active`` mirrors the kernel's grid-level gating contract (phase
+    E): inactive groups report zero sums, active groups are untouched.
     """
     n = x.shape[-1]
     rows = jnp.arange(n, dtype=jnp.uint32)
@@ -50,7 +55,10 @@ def bootstrap_moments_masked_ref(x: jax.Array, mask: jax.Array,
     x2 = xf * xf
     feats = jnp.stack(
         [mf, mf * xf, mf * x2, mf * x2 * xf, mf * x2 * x2], axis=-1)
-    return jnp.einsum("...nb,...np->...bp", W, feats)
+    M = jnp.einsum("...nb,...np->...bp", W, feats)
+    if lane_active is not None:
+        M = M * lane_active.astype(jnp.float32)[..., None, None]
+    return M
 
 
 def moments_to_stats(M: jax.Array) -> dict:

@@ -19,6 +19,16 @@ to the host engine.  The fused path has three serving modes
   * ``"auto"``  (default) -- the pool when a request batch has >= 2 fusable
     queries (amortizes host ticking), the loop for singletons.
 
+Workload-tuned pool sizing: with ``pool_lanes=None`` / ``pool_ticks_per_
+sync=None`` (the defaults) the pool's lane count and sync cadence are
+chosen from the FIRST pooled batch -- lane count covers the batch in about
+two refill waves (capped so parked tails stay cheap under the phase-E
+gating), and a wide epsilon spread (straggler-prone traffic) picks
+per-tick syncs for fine-grained refill while uniform traffic amortizes
+host round-trips over multi-tick dispatches.  The chosen values are
+visible in ``LanePool.stats()`` (``lanes`` / ``tiers`` /
+``ticks_per_sync``).
+
 Sample reuse (DESIGN.md SS3.2): the service owns ONE resident SampleStore per
 dataset, shared by the host engine's pilot estimates and every tenant's
 queries, and pins a shared ``sample_key`` for the fused path -- so concurrent
@@ -77,7 +87,9 @@ class AQPService:
                  reshuffle_every: int = 256,
                  use_kernel: "bool | str" = "auto",
                  batch_fused: "bool | str" = "auto",
-                 pool_lanes: int = 4, pool_ticks_per_sync: int = 1):
+                 pool_lanes: Optional[int] = None,
+                 pool_ticks_per_sync: Optional[int] = None,
+                 pool_tiers: "int | str" = "auto"):
         self.data = data
         self.store = SampleStore(data, seed=seed)
         self.engine = AQPEngine(data, B=B, n_min=n_min, n_max=n_max,
@@ -96,8 +108,10 @@ class AQPService:
                 f"batch_fused must be True, False, 'auto' or 'pool'; "
                 f"got {batch_fused!r}")
         self.batch_fused = batch_fused
-        self.pool_lanes = int(pool_lanes)
-        self.pool_ticks_per_sync = int(pool_ticks_per_sync)
+        self.pool_lanes = None if pool_lanes is None else int(pool_lanes)
+        self.pool_ticks_per_sync = (None if pool_ticks_per_sync is None
+                                    else int(pool_ticks_per_sync))
+        self.pool_tiers = pool_tiers
         self._lane_pool: Optional[LanePool] = None
         self.key = jax.random.PRNGKey(seed)
         self._offsets = jnp.asarray(data.offsets)
@@ -146,14 +160,39 @@ class AQPService:
             self.store.reshuffle()
             self._rotate_epoch()
 
-    def _ensure_pool(self) -> LanePool:
+    def _auto_pool_config(self, queries: List[Query]) -> "tuple[int, int]":
+        """(lanes, ticks_per_sync) from the first pooled batch's workload.
+
+        Lane count targets ~two refill waves over the batch (enough
+        concurrency to amortize per-tick fixed cost, few enough that the
+        convergence tail isn't a sea of parked lanes), rounded even so the
+        width tiers split cleanly and capped at 8.  A wide epsilon spread
+        signals straggler-prone traffic -> sync every tick so freed lanes
+        refill promptly; a narrow spread (lanes converge together) ->
+        fold two ticks per dispatch and halve the host round-trips.
+        """
+        k = max(len(queries), 1)
+        lanes = self.pool_lanes
+        if lanes is None:
+            lanes = max(2, min(8, (k + 1) // 2))
+            lanes += lanes % 2
+        tps = self.pool_ticks_per_sync
+        if tps is None:
+            eps = [float(q.epsilon) for q in queries
+                   if q.epsilon is not None]
+            spread = (max(eps) / max(min(eps), 1e-9)) if eps else 1.0
+            tps = 1 if spread > 1.5 else 2
+        return int(lanes), int(tps)
+
+    def _ensure_pool(self, queries: Optional[List[Query]] = None) -> LanePool:
         if self._lane_pool is None:
+            lanes, tps = self._auto_pool_config(queries or [])
             self._lane_pool = LanePool(
-                self.data, lanes=self.pool_lanes, B=self.B,
+                self.data, lanes=lanes, B=self.B,
                 n_min=self.n_min, n_max=self.n_max, max_iters=self.max_iters,
                 n_cap=self.n_cap, use_kernel=self.use_kernel, seed=self.seed,
                 sample_key=self._sample_key,
-                ticks_per_sync=self.pool_ticks_per_sync)
+                ticks_per_sync=tps, tiers=self.pool_tiers)
         return self._lane_pool
 
     def _group_scale(self, func: str, k: int):
@@ -181,7 +220,7 @@ class AQPService:
     def _answer_pooled(self, queries: List[Query], fused_idx: List[int],
                        out: dict) -> None:
         """Mixed-func fused queries through ONE heterogeneous lane pool."""
-        pool = self._ensure_pool()
+        pool = self._ensure_pool([queries[i] for i in fused_idx])
         self.key, *keys = jax.random.split(self.key, len(fused_idx) + 1)
         keys = np.asarray(jnp.stack(keys))        # one transfer for the batch
         qid_to_i = {}

@@ -1,4 +1,4 @@
-"""Continuous lane-pool AQP serving (DESIGN.md SS7 phase D).
+"""Continuous lane-pool AQP serving (DESIGN.md SS7 phases D + E).
 
 The batched phase-C path answers a func group as one closed ``while_loop``:
 converged lanes stay frozen-but-resident until the slowest lane finishes, so
@@ -26,6 +26,21 @@ Why retire/refill preserves trajectories (the counter-PRNG nesting):
   * the ESTIMATE width bucket is the max watermark over active lanes --
     compute width only; the counter-PRNG draws are width-invariant.
 
+Width-aware admission (phase E): the shared ESTIMATE bucket makes lane
+PLACEMENT a cost decision -- a fresh ``n_min`` lane spliced next to a wide
+straggler rides at the straggler's bucket even though its own watermark
+needs the narrowest one.  The pool therefore splits its lanes into
+``tiers`` equal sub-pools, each with its own ``LaneState``/``LaneParams``
+and its own per-tier dispatch (equal shapes, so every tier shares ONE
+compiled step program), and admission places each waiting query into the
+free-laned tier with the SMALLEST active watermark.  Stragglers pile up in
+the wide tier; fresh queries ride narrow buckets next to other young
+lanes.  Placement is best-effort: when only a wide tier has a free lane
+the query is admitted there rather than held back (capacity is never
+hostage to the cost model), and per-lane trajectories are tier-invariant
+(the bucket is compute width only), so tiering changes cost, never
+answers.
+
 Heterogeneity: lanes select their estimator per-lane by moment-family index
 (``est_name=None`` routing through ``estimate_error_lanes_het``), so
 mean/sum/count/std/var/proportion queries share ONE pool instead of one
@@ -34,7 +49,10 @@ their ``LaneParams.scale`` row.
 
 Accounting: per-query latency is measured submit -> harvest (real, not
 amortized), queue wait separately; ``stats()`` exposes tick/dispatch
-counts, lane occupancy, and backpressure (peak queue depth).
+counts, lane occupancy, backpressure (peak queue depth), the per-dispatch
+active-lane fraction, and the gathered-rows-per-tick rate -- the two
+observables of the phase-E gating (kernel tiles and window gathers both
+scale with active lanes, not pool width).
 """
 from __future__ import annotations
 
@@ -50,8 +68,9 @@ import numpy as np
 
 from ..aqp.query import Query
 from ..core import estimators
-from ..core.fused import (LaneParams, LaneState, fused_step, init_lane_state,
-                          lane_boot_seed, make_lane_params, resolve_ext_cap)
+from ..core.fused import (LaneParams, LaneState, bucket_ladder, fused_step,
+                          init_lane_state, lane_boot_seed, make_lane_params,
+                          resolve_ext_cap)
 from ..core.sampling import GroupedData, counter_slot_table
 
 Array = jax.Array
@@ -72,7 +91,9 @@ class PoolResponse:
     wall_time_s: float      # submit -> harvest
     queue_wait_s: float     # submit -> splice
     ticks_in_lane: int      # loop ticks while resident
-    lane: int
+    lane: int               # global lane id (tier * tier_lanes + local)
+    tier: int               # width tier the query rode in
+    spliced_tier_width: int  # tier's max active watermark at splice time
 
 
 @dataclasses.dataclass
@@ -87,6 +108,28 @@ class _Ticket:
     submitted_s: float
     spliced_s: float = 0.0
     spliced_tick: int = 0
+    spliced_width: int = 0
+
+
+@dataclasses.dataclass
+class _Tier:
+    """One width tier: its own carry/params and occupancy bookkeeping."""
+    state: LaneState
+    params: LaneParams
+    occupant: List[Optional[_Ticket]]
+    filled_host: np.ndarray     # (tier_lanes, m) watermarks at last sync
+
+    @property
+    def busy(self) -> int:
+        return sum(t is not None for t in self.occupant)
+
+    @property
+    def width(self) -> int:
+        """Max watermark over OCCUPIED lanes -- the bucket driver a fresh
+        splice would share.  Lags one sync (host cache); a just-spliced
+        lane counts as 0, which is exactly its watermark."""
+        occ = [i for i, t in enumerate(self.occupant) if t is not None]
+        return int(self.filled_host[occ].max()) if occ else 0
 
 
 @partial(jax.jit, static_argnames=("n_min",))
@@ -95,12 +138,12 @@ def _splice(state: LaneState, params: LaneParams, lanes, keys, scale_rows,
     """Reset lanes ``lanes`` to tick 0, swapping in their new queries.
 
     One dispatch splices a whole refill round: the row arrays are padded to
-    pool width with out-of-range lane indices, which ``mode="drop"``
+    tier width with out-of-range lane indices, which ``mode="drop"``
     discards -- so every round shares ONE compiled splice regardless of how
-    many lanes freed up.  Must reproduce ``init_lane_state`` /
-    ``make_lane_params`` row-for-row so a refilled lane is indistinguishable
-    from lane i of a fresh pool -- the refill invariant the parity tests
-    assert.
+    many lanes freed up (tiers have equal lane counts, so all tiers share
+    it too).  Must reproduce ``init_lane_state`` / ``make_lane_params``
+    row-for-row so a refilled lane is indistinguishable from lane i of a
+    fresh pool -- the refill invariant the parity tests assert.
     """
     drop = dict(mode="drop")
     st = state._replace(
@@ -131,14 +174,16 @@ def _splice(state: LaneState, params: LaneParams, lanes, keys, scale_rows,
 
 
 class LanePool:
-    """A fixed pool of query lanes with admission, retire-and-refill.
+    """A fixed pool of query lanes with width-aware admission and
+    retire-and-refill.
 
-    One resident program: the pool compiles ONE ``fused_step`` signature at
-    construction shapes and every query -- any moment-family estimator, any
-    (epsilon, delta) -- runs through it.  ``ticks_per_sync`` trades host
-    round-trips against refill granularity: converged lanes freeze natively
-    inside a multi-tick dispatch (predicated updates), they just aren't
-    refilled until the next sync.
+    One resident program: all tiers share ONE compiled ``fused_step``
+    signature (equal tier shapes) and every query -- any moment-family
+    estimator, any (epsilon, delta) -- runs through it.  ``ticks_per_sync``
+    trades host round-trips against refill granularity: converged lanes
+    freeze natively inside a multi-tick dispatch (predicated updates), they
+    just aren't refilled until the next sync.  ``tiers="auto"`` splits any
+    even pool into two width tiers; ``tiers=1`` restores the flat pool.
     """
 
     def __init__(self, data: GroupedData, *, lanes: int = 4, B: int = 300,
@@ -146,10 +191,19 @@ class LanePool:
                  n_cap: int = 1 << 16, l: Optional[int] = None,
                  metric: str = "l2", growth_cap: float = 8.0,
                  ext_cap: Optional[int] = None, use_kernel: bool = False,
-                 seed: int = 0, sample_key: Optional[Array] = None,
-                 ticks_per_sync: int = 1):
+                 gate_gather: bool = True, seed: int = 0,
+                 sample_key: Optional[Array] = None,
+                 ticks_per_sync: int = 1, tiers: "int | str" = "auto"):
         self.data = data
         self.lanes = int(lanes)
+        if tiers == "auto":
+            tiers = 2 if self.lanes >= 2 and self.lanes % 2 == 0 else 1
+        self.tiers = int(tiers)
+        if self.lanes % self.tiers:
+            raise ValueError(
+                f"lanes ({self.lanes}) must divide evenly into tiers "
+                f"({self.tiers})")
+        self.tier_lanes = self.lanes // self.tiers
         m = data.num_groups
         self._values = data.values
         self._offsets = jnp.asarray(data.offsets)
@@ -161,26 +215,33 @@ class LanePool:
             max_iters=max_iters, n_cap=n_cap, backend="poisson",
             metric=metric, growth_cap=growth_cap,
             ext_cap=resolve_ext_cap(n_cap, n_max, ext_cap), adaptive=True,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, gate_gather=gate_gather)
         self.ticks_per_sync = int(ticks_per_sync)
         self.key = jax.random.PRNGKey(seed)
         if sample_key is None:
             sample_key = jax.random.PRNGKey(seed ^ 0x5A17)
         self._sample_key = jnp.asarray(sample_key)
         keys0 = jax.random.split(jax.random.PRNGKey(seed), self.lanes)
-        self._params = make_lane_params(
-            self._offsets, jnp.ones((self.lanes, m), jnp.float32), keys0,
-            jnp.ones((self.lanes,), jnp.float32),
-            jnp.full((self.lanes,), 0.05, jnp.float32),
-            self._sample_key, jnp.zeros((self.lanes,), jnp.int32),
-            n_cap=n_cap)
-        state = init_lane_state(
-            keys0, m, n_cap=n_cap, c_dim=data.values.shape[1], p_dim=1,
-            n_min=n_min, max_iters=max_iters, dtype=data.values.dtype)
-        # Empty lanes are parked as ``done``: the step freezes them and the
-        # width bucket ignores them until a splice brings them live.
-        self._state = state._replace(done=jnp.ones((self.lanes,), bool))
-        self._occupant: List[Optional[_Ticket]] = [None] * self.lanes
+        tl = self.tier_lanes
+        self._tiers: List[_Tier] = []
+        for ti in range(self.tiers):
+            tkeys = keys0[ti * tl:(ti + 1) * tl]
+            params = make_lane_params(
+                self._offsets, jnp.ones((tl, m), jnp.float32), tkeys,
+                jnp.ones((tl,), jnp.float32),
+                jnp.full((tl,), 0.05, jnp.float32),
+                self._sample_key, jnp.zeros((tl,), jnp.int32),
+                n_cap=n_cap)
+            state = init_lane_state(
+                tkeys, m, n_cap=n_cap, c_dim=data.values.shape[1], p_dim=1,
+                n_min=n_min, max_iters=max_iters, dtype=data.values.dtype)
+            # Empty lanes are parked as ``done``: the step freezes them
+            # (gated bootstrap AND gated gather -- phase E) until a splice
+            # brings them live.
+            self._tiers.append(_Tier(
+                state=state._replace(done=jnp.ones((tl,), bool)),
+                params=params, occupant=[None] * tl,
+                filled_host=np.zeros((tl, m), np.int64)))
         self._queue: Deque[_Ticket] = deque()
         self._scale_rows: Dict[str, np.ndarray] = {}
         # Hand-off buffer: harvest fills it, drain() pops it.  Never grows
@@ -188,12 +249,14 @@ class LanePool:
         self.results: Dict[int, PoolResponse] = {}
         self._next_qid = 0
         # Scheduling / backpressure accounting.
-        self.ticks = 0            # loop ticks executed (lane-steps / lanes)
-        self.dispatches = 0       # step program launches (syncs)
+        self.ticks = 0            # scheduling rounds executed
+        self.dispatches = 0       # step program launches (tier syncs)
         self.lane_ticks_busy = 0  # occupied-lane ticks (occupancy integral)
         self.submitted = 0
         self.retired = 0
         self.peak_queue_depth = 0
+        self._active_frac_sum = 0.0   # sum over dispatches of busy/tier_lanes
+        self._retired_rows = 0        # rows_sampled of retired queries
 
     # -- admission ----------------------------------------------------------
     @property
@@ -202,7 +265,7 @@ class LanePool:
 
     @property
     def busy_lanes(self) -> int:
-        return sum(t is not None for t in self._occupant)
+        return sum(t.busy for t in self._tiers)
 
     def supports(self, query: Query) -> bool:
         """Whether this pool can serve ``query`` (moment family, this
@@ -239,76 +302,120 @@ class LanePool:
         return qid
 
     # -- scheduling ---------------------------------------------------------
+    def _place_tier(self) -> Optional[int]:
+        """Width-aware placement: the free-laned tier with the smallest
+        active watermark -- a fresh lane rides the narrowest bucket any
+        free lane can offer."""
+        best, best_w = None, None
+        for ti, t in enumerate(self._tiers):
+            if t.busy == self.tier_lanes:
+                continue
+            w = t.width
+            if best is None or w < best_w:
+                best, best_w = ti, w
+        return best
+
     def _refill(self) -> None:
         if not self._queue:
             return
-        free = [lane for lane in range(self.lanes)
-                if self._occupant[lane] is None]
-        take = min(len(free), len(self._queue))
-        if not take:
-            return
         now = time.perf_counter()
-        Q, m = self.lanes, self.data.num_groups
-        # Pad the round to pool width with out-of-range lanes (dropped by
-        # the splice) so every round hits the one compiled splice program.
-        lanes = np.full((Q,), Q, np.int32)
-        keys = np.zeros((Q,) + self._queue[0].key.shape,
-                        self._queue[0].key.dtype)
-        rows = np.ones((Q, m), np.float32)
-        eps = np.ones((Q,), np.float32)
-        dts = np.full((Q,), 0.05, np.float32)
-        fids = np.zeros((Q,), np.int32)
-        for j in range(take):
-            t = self._queue.popleft()
-            t.spliced_s, t.spliced_tick = now, self.ticks
-            lane = free[j]
-            self._occupant[lane] = t
-            lanes[j], keys[j], rows[j] = lane, t.key, t.scale_row
-            eps[j], dts[j], fids[j] = t.epsilon, t.delta, t.fid
-        self._state, self._params = _splice(
-            self._state, self._params, lanes, keys, rows, eps, dts, fids,
-            n_min=self._spec["n_min"])
+        m = self.data.num_groups
+        tl = self.tier_lanes
+        # One padded splice batch per tier that receives lanes this round.
+        rounds: Dict[int, list] = {}
+        while self._queue:
+            ti = self._place_tier()
+            if ti is None:
+                break
+            tier = self._tiers[ti]
+            lane = next(i for i, t in enumerate(tier.occupant) if t is None)
+            tk = self._queue.popleft()
+            tk.spliced_s, tk.spliced_tick = now, self.ticks
+            tk.spliced_width = tier.width
+            tier.occupant[lane] = tk
+            # The splice resets the lane's watermark on device; mirror it
+            # host-side so the lane's RETIRED predecessor's width neither
+            # repels the next placement nor inflates ``spliced_width``.
+            tier.filled_host[lane] = 0
+            rounds.setdefault(ti, []).append((lane, tk))
+        for ti, picks in rounds.items():
+            tier = self._tiers[ti]
+            # Pad the round to tier width with out-of-range lane indices
+            # (dropped by the splice) so every round -- and every tier --
+            # hits the one compiled splice program.
+            lanes = np.full((tl,), tl, np.int32)
+            keys = np.zeros((tl,) + picks[0][1].key.shape,
+                            picks[0][1].key.dtype)
+            rows = np.ones((tl, m), np.float32)
+            eps = np.ones((tl,), np.float32)
+            dts = np.full((tl,), 0.05, np.float32)
+            fids = np.zeros((tl,), np.int32)
+            for j, (lane, tk) in enumerate(picks):
+                lanes[j], keys[j], rows[j] = lane, tk.key, tk.scale_row
+                eps[j], dts[j], fids[j] = tk.epsilon, tk.delta, tk.fid
+            tier.state, tier.params = _splice(
+                tier.state, tier.params, lanes, keys, rows, eps, dts, fids,
+                n_min=self._spec["n_min"])
 
     def _harvest(self) -> int:
         """Retire finished lanes; returns the number retired this sync."""
-        s = self._state
-        done, failed, k = jax.device_get((s.done, s.failed, s.k))
         max_iters = self._spec["max_iters"]
-        finished = [lane for lane, t in enumerate(self._occupant)
-                    if t is not None
-                    and (done[lane] or failed[lane] or k[lane] >= max_iters)]
-        if not finished:
-            return 0
-        e, n_cur, iters, theta, filled = jax.device_get(
-            (s.e, s.n_cur, s.iters, s.theta, s.filled))
         now = time.perf_counter()
-        for lane in finished:
-            t = self._occupant[lane]
-            self.results[t.qid] = PoolResponse(
-                qid=t.qid, func=t.func, theta=np.asarray(theta[lane]),
-                error=float(e[lane]), success=bool(done[lane]),
-                failed=bool(failed[lane]), n=np.asarray(n_cur[lane]),
-                iterations=int(iters[lane]),
-                rows_sampled=int(filled[lane].sum()),
-                wall_time_s=now - t.submitted_s,
-                queue_wait_s=t.spliced_s - t.submitted_s,
-                ticks_in_lane=self.ticks - t.spliced_tick, lane=lane)
-            self._occupant[lane] = None
-            self.retired += 1
-        return len(finished)
+        n_retired = 0
+        for ti, tier in enumerate(self._tiers):
+            if tier.busy == 0:
+                continue
+            s = tier.state
+            done, failed, k, filled = jax.device_get(
+                (s.done, s.failed, s.k, s.filled))
+            tier.filled_host = np.asarray(filled, np.int64)
+            finished = [lane for lane, t in enumerate(tier.occupant)
+                        if t is not None
+                        and (done[lane] or failed[lane]
+                             or k[lane] >= max_iters)]
+            if not finished:
+                continue
+            e, n_cur, iters, theta = jax.device_get(
+                (s.e, s.n_cur, s.iters, s.theta))
+            for lane in finished:
+                t = tier.occupant[lane]
+                rows = int(filled[lane].sum())
+                self.results[t.qid] = PoolResponse(
+                    qid=t.qid, func=t.func, theta=np.asarray(theta[lane]),
+                    error=float(e[lane]), success=bool(done[lane]),
+                    failed=bool(failed[lane]), n=np.asarray(n_cur[lane]),
+                    iterations=int(iters[lane]), rows_sampled=rows,
+                    wall_time_s=now - t.submitted_s,
+                    queue_wait_s=t.spliced_s - t.submitted_s,
+                    ticks_in_lane=self.ticks - t.spliced_tick,
+                    lane=ti * self.tier_lanes + lane, tier=ti,
+                    spliced_tier_width=t.spliced_width)
+                tier.occupant[lane] = None
+                self.retired += 1
+                self._retired_rows += rows
+                n_retired += 1
+        return n_retired
 
     def tick(self) -> int:
         """One scheduling round: refill, run ``ticks_per_sync`` loop ticks
-        in one dispatch, harvest.  Returns the number of busy lanes left."""
+        per busy tier (one dispatch each), harvest.  Returns the number of
+        busy lanes left."""
         self._refill()
-        if self.busy_lanes == 0:
+        ran = False
+        for tier in self._tiers:
+            busy = tier.busy
+            if not busy:
+                continue
+            tier.state = fused_step(
+                self._values, self._offsets, tier.state, tier.params,
+                num_ticks=self.ticks_per_sync, **self._spec)
+            self.dispatches += 1
+            self.lane_ticks_busy += busy * self.ticks_per_sync
+            self._active_frac_sum += busy / self.tier_lanes
+            ran = True
+        if not ran:
             return 0
-        self._state = fused_step(
-            self._values, self._offsets, self._state, self._params,
-            num_ticks=self.ticks_per_sync, **self._spec)
         self.ticks += self.ticks_per_sync
-        self.dispatches += 1
-        self.lane_ticks_busy += self.busy_lanes * self.ticks_per_sync
         self._harvest()
         return self.busy_lanes
 
@@ -339,15 +446,36 @@ class LanePool:
         self._sample_key = jnp.asarray(sample_key)
         starts = self._offsets[:-1].astype(jnp.int32)
         sizes = (self._offsets[1:] - self._offsets[:-1]).astype(jnp.int32)
-        self._params = self._params._replace(
-            slot_idx=counter_slot_table(
-                self._sample_key, starts, sizes, self._spec["n_cap"]))
+        slot_idx = counter_slot_table(
+            self._sample_key, starts, sizes, self._spec["n_cap"])
+        for tier in self._tiers:
+            tier.params = tier.params._replace(slot_idx=slot_idx)
 
     # -- accounting ---------------------------------------------------------
+    def tier_watermarks(self) -> List[int]:
+        """Per-tier max active watermark (host view, lags one sync)."""
+        return [t.width for t in self._tiers]
+
+    def bucket_of(self, watermark: int) -> int:
+        """The ESTIMATE bucket width a lane with ``watermark`` filled rows
+        rides at (the step's static ladder) -- what admission minimizes."""
+        widths = bucket_ladder(self._spec["n_cap"], self._spec["n_max"])
+        for w in widths:
+            if watermark <= w:
+                return w
+        return widths[-1]
+
     def stats(self) -> Dict[str, float]:
         cap = max(self.ticks * self.lanes, 1)
+        resident = sum(
+            int(t.filled_host[i].sum())
+            for t in self._tiers
+            for i, tk in enumerate(t.occupant) if tk is not None)
+        rows_gathered = self._retired_rows + resident
         return {
             "lanes": self.lanes,
+            "tiers": self.tiers,
+            "ticks_per_sync": self.ticks_per_sync,
             "ticks": self.ticks,
             "dispatches": self.dispatches,
             "submitted": self.submitted,
@@ -355,4 +483,11 @@ class LanePool:
             "queue_depth": self.queue_depth,
             "peak_queue_depth": self.peak_queue_depth,
             "lane_occupancy": self.lane_ticks_busy / cap,
+            # Phase-E observables: what fraction of a dispatch's lanes were
+            # live (the gating's compute bound), and how many rows the
+            # gated window gathers actually pulled per scheduling round.
+            "active_lane_fraction": (
+                self._active_frac_sum / max(self.dispatches, 1)),
+            "rows_gathered": float(rows_gathered),
+            "rows_per_tick": rows_gathered / max(self.ticks, 1),
         }

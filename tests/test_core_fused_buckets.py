@@ -67,6 +67,50 @@ def test_ncap_invariance(data):
     assert_allclose(float(r_small.error), float(r_large.error), rtol=1e-4)
 
 
+def test_gated_gather_invariance(data):
+    """Phase-E extension-gather gating: wrapping the per-lane window gather
+    in lax.cond must not change ONE BIT of the trajectory -- an inactive
+    lane's window degenerates to its resident prefix, so the gather it
+    skips would have scattered nothing."""
+    r_g = _run(data, gate_gather=True)
+    r_u = _run(data, gate_gather=False)
+    assert bool(r_g.success)
+    assert np.array_equal(np.asarray(r_g.n), np.asarray(r_u.n))
+    assert int(r_g.rows_sampled) == int(r_u.rows_sampled)
+    assert int(r_g.iterations) == int(r_u.iterations)
+    assert float(r_g.error) == float(r_u.error)
+    assert np.array_equal(np.asarray(r_g.theta), np.asarray(r_u.theta))
+    assert np.array_equal(np.asarray(r_g.profile_e), np.asarray(r_u.profile_e))
+
+
+def test_gated_gather_rows_accounting(data):
+    """In the gated path ``rows_sampled`` must still equal the final filled
+    watermark exactly: only ACTIVE ticks gather, and each gathers exactly
+    its window's worth of new rows."""
+    from repro.core.fused import (fused_step, init_lane_state, lane_active,
+                                  lanes_result, make_lane_params)
+
+    q = 3
+    keys = jax.random.split(jax.random.PRNGKey(5), q)
+    eps = jnp.asarray([0.15, 0.08, 0.25], jnp.float32)
+    deltas = jnp.full((q,), 0.05, jnp.float32)
+    offsets = jnp.asarray(data.offsets)
+    kw = {**KW}
+    params = make_lane_params(offsets, jnp.ones((q, 2), jnp.float32), keys,
+                              eps, deltas, jax.random.PRNGKey(8),
+                              n_cap=KW["n_cap"])
+    state = init_lane_state(keys, 2, n_cap=KW["n_cap"], c_dim=1, p_dim=1,
+                            n_min=KW["n_min"], max_iters=KW["max_iters"],
+                            dtype=data.values.dtype)
+    while bool(np.any(np.asarray(lane_active(state, KW["max_iters"])))):
+        state = fused_step(data.values, offsets, state, params,
+                           gate_gather=True, **kw)
+    res = lanes_result(state)
+    assert np.array_equal(np.asarray(res.rows_sampled),
+                          np.asarray(state.filled).sum(axis=1))
+    assert bool(np.all(np.asarray(res.success)))
+
+
 def test_kernel_interpret_matches_jnp(data):
     """use_kernel routes ESTIMATE through the Pallas kernel (interpret mode
     on CPU); it consumes the SAME counter stream as the jnp path, so the

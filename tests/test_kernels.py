@@ -131,6 +131,62 @@ def test_bootstrap_moments_masked_width_invariant():
                     atol=1e-4)
 
 
+def test_bootstrap_moments_masked_gated_vs_ungated():
+    """Grid-level predication (DESIGN.md SS7 phase E): with a mixed
+    ``lane_active`` pattern, active groups' replicate moment sums are
+    BIT-equal to the all-true call (the gate skips tiles, it never touches
+    active groups' compute), and inactive groups report exact zeros."""
+    rng = np.random.default_rng(21)
+    g, n, B = 5, 700, 200
+    x = jnp.asarray(rng.exponential(1.0, (g, n)).astype(np.float32))
+    mask = jnp.asarray((rng.uniform(size=(g, n)) > 0.2).astype(np.float32))
+    seeds = jnp.arange(900, 900 + g, dtype=jnp.uint32)
+    act = jnp.asarray([1, 0, 1, 0, 1], jnp.int32)
+    ungated = np.asarray(pb_ops.bootstrap_moments_masked(
+        x, mask, seeds, B, interpret=True))
+    alltrue = np.asarray(pb_ops.bootstrap_moments_masked(
+        x, mask, seeds, B, lane_active=jnp.ones((g,), jnp.int32),
+        interpret=True))
+    gated = np.asarray(pb_ops.bootstrap_moments_masked(
+        x, mask, seeds, B, lane_active=act, interpret=True))
+    assert np.array_equal(alltrue, ungated)
+    for i, a in enumerate([1, 0, 1, 0, 1]):
+        if a:
+            assert np.array_equal(gated[i], ungated[i]), i
+        else:
+            assert np.all(gated[i] == 0.0), i
+    # The jnp oracle implements the same gating contract.
+    ref_gated = np.asarray(pb_ref.bootstrap_moments_masked_ref(
+        x, mask, seeds, B, lane_active=act))
+    assert_allclose(gated, ref_gated, rtol=2e-3, atol=1e-2)
+
+
+def test_lane_moment_sums_kernel_gating_matches_jnp():
+    """core.bootstrap._lane_moment_sums must report the SAME sums per lane
+    on the kernel path and the jnp path for any lane_active pattern --
+    inactive lanes fall back to the plain-sample sums on both (the dead-
+    replicate guard), active lanes agree to f32 accumulation noise."""
+    from repro.core.bootstrap import _lane_moment_sums
+
+    rng = np.random.default_rng(22)
+    q, m, w, B = 3, 2, 512, 128
+    v = jnp.asarray(rng.standard_normal((q, m, w)).astype(np.float32))
+    mf = jnp.asarray((rng.uniform(size=(q, m, w)) > 0.1).astype(np.float32))
+    seeds = jnp.arange(50, 50 + q * m, dtype=jnp.uint32).reshape(q, m)
+    act = jnp.asarray([True, False, True])
+    M_j, Mp_j = _lane_moment_sums(v, mf, seeds, B, False, None,
+                                  lane_active=act)
+    M_k, Mp_k = _lane_moment_sums(v, mf, seeds, B, True, True,
+                                  lane_active=act)
+    assert_allclose(np.asarray(M_k), np.asarray(M_j), rtol=2e-3, atol=1e-2)
+    assert_allclose(np.asarray(Mp_k), np.asarray(Mp_j), rtol=1e-5)
+    # Inactive lane 1 reports the plain sums (guard) on BOTH paths.
+    want_j = np.broadcast_to(np.asarray(Mp_j)[1][:, None, :], (2, B, 3))
+    want_k = np.broadcast_to(np.asarray(Mp_k)[1][:, None, :], (2, B, 3))
+    assert_allclose(np.asarray(M_j)[1], want_j)
+    assert_allclose(np.asarray(M_k)[1], want_k)
+
+
 def test_estimate_error_moments_matches_jnp_path():
     from repro.core import bootstrap as bs
     from repro.core import estimators

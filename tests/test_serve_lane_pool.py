@@ -255,6 +255,50 @@ def test_pool_refill_equals_fresh_pool(data):
     assert_allclose(res[qb].theta, rf.theta, rtol=1e-6)
 
 
+def test_width_aware_admission(data):
+    """Phase-E admission: while a wide straggler holds one tier, fresh
+    queries must be placed in the narrow tier -- a fresh lane never rides
+    a bucket wider than its own watermark requires when a narrower tier
+    has a free lane."""
+    skey = jax.random.PRNGKey(21)
+    pool = LanePool(data, lanes=4, tiers=2, **SPEC, sample_key=skey, seed=9)
+    assert pool.tiers == 2 and pool.tier_lanes == 2
+
+    narrowest = pool.bucket_of(0)
+    sq = pool.submit(Query(func="avg", epsilon=0.06))   # straggler
+    for _ in range(6):                                  # let it grow wide
+        pool.tick()
+    wm = pool.tier_watermarks()
+    straggler_tier = int(np.argmax(wm))
+    assert wm[straggler_tier] > narrowest               # scenario is real
+    assert sq not in pool.results                       # still in flight
+
+    # Three fresh queries against two narrow free lanes: the first two must
+    # be placed away from the straggler, and the third -- with every narrow
+    # lane taken -- is admitted into the wide tier rather than queued
+    # behind the cost model (best-effort, not hostage-taking).
+    fresh = [pool.submit(Query(func="avg", epsilon=0.28)) for _ in range(3)]
+    pool.tick()                                         # one refill round
+    assert pool.queue_depth == 0                        # all three admitted
+    res = {r.qid: r for r in pool.drain()}
+    for qid in fresh[:2]:
+        r = res[qid]
+        assert r.tier != straggler_tier, (r.tier, wm)
+        # The bucket the fresh lane rode at splice time is the one its own
+        # watermark requires -- the narrowest rung, not the straggler's.
+        assert pool.bucket_of(r.spliced_tier_width) == narrowest
+    r3 = res[fresh[2]]
+    assert r3.tier == straggler_tier
+    assert r3.spliced_tier_width == wm[straggler_tier]
+    assert res[sq].tier == straggler_tier
+    assert res[sq].success and all(res[q].success for q in fresh)
+
+    st = pool.stats()
+    assert st["active_lane_fraction"] > 0.0
+    assert st["rows_per_tick"] > 0.0
+    assert st["rows_gathered"] >= sum(r.rows_sampled for r in res.values())
+
+
 # ---------------------------------------------------------------------------
 # Service integration: batch_fused="auto"/"pool"
 # ---------------------------------------------------------------------------
