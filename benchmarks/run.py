@@ -31,6 +31,10 @@ def main() -> None:
                          "(fused / serve sections)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI smoke runs (serve section)")
+    ap.add_argument("--arrivals", default=None, choices=("poisson",),
+                    help="also run the open-loop serve benchmark with this "
+                         "arrival process (serve section: seeded Poisson "
+                         "arrivals, p50/p95/p99 latency, SLO-miss rate)")
     ap.add_argument("--trials", type=int, default=40,
                     help="simulated-confidence trials")
     args = ap.parse_args()
@@ -71,14 +75,16 @@ def main() -> None:
             wrote_json = True
     if only in (None, "serve"):
         from . import bench_serve_pool
-        bench_serve_pool.run(emit, full=args.full, smoke=args.smoke)
+        bench_serve_pool.run(emit, full=args.full, smoke=args.smoke,
+                             arrivals=args.arrivals)
         if args.json:
             with open("BENCH_serve.json", "w") as fh:
                 json.dump(emit.json_rows(
                     "serve/",
                     keys=("bench", "us_per_call", "rows_touched",
                           "dispatches", "speedup_vs_loop", "active_frac",
-                          "rows_per_tick")), fh, indent=2)
+                          "rows_per_tick", "p50_ms", "p95_ms", "p99_ms",
+                          "slo_miss")), fh, indent=2)
             print("wrote BENCH_serve.json", flush=True)
             wrote_json = True
     if args.json and not wrote_json:

@@ -1,20 +1,27 @@
-"""End-to-end AQP driver: a TPC-H query suite under error guarantees.
+"""End-to-end AQP serving: a TPC-H query suite through the async session.
 
     PYTHONPATH=src python examples/aqp_tpch.py [--rows 1000000]
 
-Builds a synthetic lineitem table, then serves a suite of Listing-1 queries
-through the AQP engine: AVG / SUM / COUNT-with-predicate under L2 and Linf
-bounds, plus an ordering-guaranteed Top-k -- each answered from a
-MISS-optimal sample, with the exact answer computed for verification.
+Builds a synthetic lineitem table and serves Listing-1 queries through the
+asynchronous :class:`AQPSession` (DESIGN.md SS7 phase F): each request
+carries an ERROR clause (epsilon, delta) AND an SLO envelope (deadline,
+priority), is submitted into the live arrival queue, and is collected with
+a non-blocking submit/poll/pump loop -- answers stream back as lanes
+retire, tight-epsilon stragglers keep ticking while loose queries overtake
+them through freed lanes.  Host-only queries (predicates, Linf, ordering)
+ride the same session and route to the host engine.  The final batch goes
+through ``AQPService.answer`` -- the synchronous compatibility wrapper
+over the same session machinery.
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.aqp import AQPEngine, Query
+from repro.aqp import AQPEngine, Query, Request
 from repro.core.extensions import metric_value
 from repro.data.tpch import add_group_bias, make_lineitem
+from repro.serve import AQPService, AQPSession
 
 
 def main():
@@ -24,35 +31,85 @@ def main():
 
     data, _ = make_lineitem(rows=args.rows, group_by="returnflag", seed=2)
     data = add_group_bias(data, 0.05)
-    eng = AQPEngine(data, B=300, n_min=1000, n_max=2000, seed=0)
+    sess = AQPSession(data, B=300, n_min=1000, n_max=2000, seed=0)
+    eng: AQPEngine = sess.engine
     print(f"lineitem: {args.rows:,} rows, {data.num_groups} RETURNFLAG groups")
 
+    # Absolute L2 bounds sized off the exact answer's magnitude (an example
+    # convenience; production would use epsilon_rel through the host path).
+    avg_mag = float(np.linalg.norm(eng.exact(Query(func="avg", epsilon=1.0))))
+    sum_mag = float(np.linalg.norm(eng.exact(Query(func="sum", epsilon=1.0))))
+
     suite = [
-        ("AVG(extendedprice) +-1%", Query(func="avg", epsilon_rel=0.01)),
-        ("SUM(extendedprice) +-1%", Query(func="sum", epsilon_rel=0.01)),
-        ("COUNT(price>30k) +-2%",
-         Query(func="count", epsilon_rel=0.02,
-               predicate=lambda v: v[:, 0] > 30_000.0)),
-        ("AVG Linf +-100", Query(func="avg", epsilon=100.0, metric="linf")),
-        ("AVG ordered (Top-k)", Query(func="avg", metric="order")),
+        ("AVG +-1% (tight straggler)",
+         Request(query=Query(func="avg", epsilon=0.01 * avg_mag),
+                 deadline_s=120.0, priority=1)),
+        ("AVG +-2%",
+         Request(query=Query(func="avg", epsilon=0.02 * avg_mag),
+                 deadline_s=60.0)),
+        ("VAR +-5% of AVG-scale",
+         Request(query=Query(func="var", epsilon=0.05 * avg_mag**2),
+                 deadline_s=60.0)),
+        ("SUM +-2%",
+         Request(query=Query(func="sum", epsilon=0.02 * sum_mag),
+                 deadline_s=60.0)),
+        ("COUNT(price>30k) +-2% (host)",
+         Request(query=Query(func="count", epsilon_rel=0.02,
+                             predicate=lambda v: v[:, 0] > 30_000.0))),
+        ("AVG ordered Top-k (host)",
+         Request(query=Query(func="avg", metric="order"))),
     ]
-    for name, q in suite:
-        t0 = time.perf_counter()
-        tr = eng.execute(q)
-        dt = time.perf_counter() - t0
-        truth = eng.exact(q)
-        d = metric_value("l2" if q.metric == "order" else q.metric,
-                         tr.theta.ravel(), truth.ravel())
-        frac = tr.total_sample_size / data.sizes.sum()
-        print(f"\n[{name}] {tr.status} in {dt:.1f}s, {tr.iterations} iters")
-        print(f"  sampled {tr.total_sample_size:,} rows ({frac:.2%} of data)")
-        print(f"  answer   {np.round(tr.theta.ravel(), 2)}")
-        print(f"  exact    {np.round(truth.ravel(), 2)}")
-        if q.metric == "order":
-            ok = metric_value("order", tr.theta.ravel(), truth.ravel()) == 0
-            print(f"  ordering preserved: {ok}")
-        else:
-            print(f"  {q.metric} error {d:.4g}")
+
+    # --- async submit / poll loop: answers stream back as lanes retire ---
+    pending = {}
+    for name, req in suite:
+        ticket = sess.submit(req)
+        pending[ticket.rid] = (name, ticket, req)
+        print(f"submitted [{name}] rid={ticket.rid}")
+    while pending:
+        sess.pump()                      # one non-blocking scheduler round
+        for rid in list(pending):
+            name, ticket, req = pending[rid]
+            r = sess.poll(ticket)        # None while still in flight
+            if r is None:
+                continue
+            del pending[rid]
+            q = req.query
+            truth = eng.exact(q)
+            d = metric_value("l2" if q.metric == "order" else q.metric,
+                             r.theta.ravel(), truth.ravel())
+            slo = ("no deadline" if r.slo_met is None
+                   else f"SLO {'met' if r.slo_met else 'MISSED'}")
+            print(f"\n[{name}] via {r.route.value}: "
+                  f"{'ok' if r.success else 'failed'} "
+                  f"in {r.latency_s:.2f}s ({slo}, "
+                  f"queue {r.queue_wait_s * 1e3:.0f}ms)")
+            print(f"  answer {np.round(r.theta.ravel(), 2)}")
+            print(f"  exact  {np.round(truth.ravel(), 2)}")
+            if q.metric == "order":
+                ok = metric_value("order", r.theta.ravel(),
+                                  truth.ravel()) == 0
+                print(f"  ordering preserved: {ok}")
+            else:
+                print(f"  {q.metric} error {d:.4g}")
+        time.sleep(0.001)                # a real client would do other work
+
+    st = sess.stats()
+    print(f"\nsession: {st['completed']} served, "
+          f"{st['fused_dispatches']} fused dispatches, "
+          f"{st['rows_touched']:,} rows touched")
+
+    # --- the synchronous compat wrapper over the same machinery ---
+    svc = AQPService(data, B=300, n_min=1000, n_max=2000, seed=1)
+    batch = [Query(func="avg", epsilon=0.02 * avg_mag),
+             Query(func="var", epsilon=0.05 * avg_mag**2),
+             Query(func="sum", epsilon=0.02 * sum_mag)]
+    t0 = time.perf_counter()
+    rs = svc.answer(batch)
+    print(f"\nAQPService.answer (compat wrapper): {len(rs)} queries in "
+          f"{time.perf_counter() - t0:.2f}s, all "
+          f"{'ok' if all(r.success for r in rs) else 'FAILED'}; "
+          f"pool={'yes' if svc._lane_pool is not None else 'no'}")
 
 
 if __name__ == "__main__":

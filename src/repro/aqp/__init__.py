@@ -1,4 +1,4 @@
-from .query import Query
+from .query import Query, Request
 from .engine import AQPEngine
 
-__all__ = ["AQPEngine", "Query"]
+__all__ = ["AQPEngine", "Query", "Request"]

@@ -12,6 +12,7 @@ against a pilot estimate).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Callable, Optional
 
 METRICS = ("l2", "linf", "l1", "lp", "order", "diff")
@@ -41,3 +42,34 @@ class Query:
         if self.metric != "order" and (self.epsilon is None) == (
                 self.epsilon_rel is None):
             raise ValueError("exactly one of epsilon / epsilon_rel required")
+
+
+_RID = itertools.count(1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One serving request: a Listing-1 query plus its SLO envelope.
+
+    The MISS ERROR clause bounds the *answer* (epsilon, delta); a service
+    under load must also bound the *response time* (the BlinkDB contract).
+    ``deadline_s`` is the latency budget in seconds from submission --
+    advisory, not a hard kill: the scheduler uses it for admission ordering
+    (earliest deadline first within a priority class) and reports whether
+    it was met (``SessionResponse.slo_met``).  ``priority`` breaks ties
+    first: higher values are admitted ahead of lower ones.
+
+    ``rid`` is a stable process-unique id assigned at construction, so a
+    request can be correlated across submit / poll / logs even before the
+    session sees it.
+    """
+    query: Query
+    deadline_s: Optional[float] = None     # latency budget (s from submit)
+    priority: int = 0                      # higher = admitted first
+    rid: int = dataclasses.field(
+        default_factory=lambda: next(_RID))
+
+    def __post_init__(self):
+        if self.deadline_s is not None and not self.deadline_s > 0:
+            raise ValueError(
+                f"deadline_s must be positive; got {self.deadline_s!r}")

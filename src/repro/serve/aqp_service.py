@@ -1,66 +1,45 @@
-"""AQP-as-a-service: a multi-tenant query server over a resident dataset.
+"""AQP-as-a-service: the batch-synchronous compatibility wrapper.
 
-Queries arrive with per-request (func, epsilon, delta, metric); L2 moment
-queries are answered on the fused on-device path, everything else falls back
-to the host engine.  The fused path has three serving modes
-(``batch_fused``):
+The serving stack now lives in ``serve/session.py`` (the asynchronous
+:class:`~repro.serve.session.AQPSession`: submit / poll / pump / drain with
+per-request SLOs) and ``serve/planner.py`` (the explicit :class:`Route`
+planner that replaced the old ``batch_fused`` identity-dispatch tri-state).
+:class:`AQPService` keeps the original surface for every existing caller:
+``answer(List[Query])`` submits the whole batch into the session and drains
+it, returning :class:`AQPResponse` rows in query order.
 
-  * ``"pool"``  -- the continuous lane pool (DESIGN.md SS7 phase D,
-    serve/lane_pool.py): a fixed pool of lanes ticked via the resumable
-    ``fused_step``; converged lanes are retired and refilled from the
-    admission queue between ticks, and lanes are HETEROGENEOUS -- every
-    moment-family func (avg/proportion/var/std/sum/count) shares one
-    resident program, so a mixed-func batch needs no per-func grouping and
-    stragglers never hold freed capacity hostage.
-  * ``True``    -- phase-C closed-loop batching: ONE dispatch per func
-    group (``fused_l2miss_batch`` shared-operand lanes); converged lanes
-    stay resident until the group's slowest lane finishes.
-  * ``False``   -- the per-query dispatch loop (benchmark baseline).
-  * ``"auto"``  (default) -- the pool when a request batch has >= 2 fusable
-    queries (amortizes host ticking), the loop for singletons.
+``batch_fused`` maps onto the planner's route policy:
 
-Workload-tuned pool sizing: with ``pool_lanes=None`` / ``pool_ticks_per_
-sync=None`` (the defaults) the pool's lane count and sync cadence are
-chosen from the FIRST pooled batch -- lane count covers the batch in about
-two refill waves (capped so parked tails stay cheap under the phase-E
-gating), and a wide epsilon spread (straggler-prone traffic) picks
-per-tick syncs for fine-grained refill while uniform traffic amortizes
-host round-trips over multi-tick dispatches.  The chosen values are
-visible in ``LanePool.stats()`` (``lanes`` / ``tiers`` /
-``ticks_per_sync``).
+  * ``"auto"`` (default) -- the planner's heuristic: the pool whenever it
+    is already busy or >= 2 fusable requests arrive together, the
+    per-query loop for cold singletons.
+  * ``"pool"`` / ``True`` / ``False`` -- force Route.POOL / Route.BATCHED /
+    Route.LOOP for every fusable request.
 
-Sample reuse (DESIGN.md SS3.2): the service owns ONE resident SampleStore per
-dataset, shared by the host engine's pilot estimates and every tenant's
-queries, and pins a shared ``sample_key`` for the fused path -- so concurrent
-tenants extend the same permuted prefixes instead of each re-scanning rows.
-Because answers served from one prefix are correlated, an eviction/reshuffle
-policy redraws the permutations (and rotates the fused sample key -- the
-lane pool's binding rotates with it) every ``reshuffle_every`` queries;
-``refresh()`` does the same on data updates.
+Pool sizing and sync cadence are the planner's sliding-window policy; with
+``pool_lanes`` / ``pool_ticks_per_sync`` left None the first pooled wave
+seeds the window exactly like the old first-batch auto-tune, and the
+policy keeps adapting as traffic shifts (lane-count rebuilds at idle
+points only).
 
-Accounting: ``fused_dispatches`` counts XLA program launches on the fused
-path (pool step syncs in pool mode; one per func group when batched; one
-per query in the loop).  ``wall_time_s`` is per-query real latency in pool
-mode (submit -> harvest, including queue wait) and dispatch time / lane
-count (amortized) in batched mode.
+Sample reuse, the reshuffle epoch policy, and the accounting contract
+(``rows_touched``, ``fused_dispatches``, per-mode ``wall_time_s``
+semantics) are unchanged -- they live in the session now, with one fix:
+fused rows are counted at harvest, so responses dropped as residue from an
+interrupted ``answer()`` no longer under-count ``rows_touched``.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..aqp.engine import AQPEngine
-from ..aqp.query import Query
-from ..core import estimators
-from ..core.fused import fused_l2miss_batch
-from ..core.sampling import GroupedData, SampleStore
-from ..kernels import resolve_use_kernel
+from ..aqp.query import Query, Request
+from ..core.sampling import GroupedData
 from .lane_pool import LanePool
+from .planner import FUSABLE, Planner, Route
+from .session import AQPSession
 
 
 @dataclasses.dataclass
@@ -73,13 +52,26 @@ class AQPResponse:
     wall_time_s: float
 
 
+def _route_of(batch_fused) -> Optional[Route]:
+    """Translate the legacy ``batch_fused`` knob into a forced Route
+    (None = the planner's auto heuristic)."""
+    if batch_fused == "auto":
+        return None
+    if batch_fused == "pool":
+        return Route.POOL
+    if batch_fused in (True, False):
+        # Truthy equals (1, 0, np.True_) normalize to real bools here --
+        # no more identity dispatch downstream.
+        return Route.BATCHED if batch_fused else Route.LOOP
+    raise ValueError(
+        f"batch_fused must be True, False, 'auto' or 'pool'; "
+        f"got {batch_fused!r}")
+
+
 class AQPService:
     """Serve Listing-1 queries against one resident GroupedData."""
 
-    # The moment family shares one replicate computation (and hence one
-    # lane pool); SUM/COUNT ride with their population scale as their
-    # lanes' scale rows (paper SS2.2.1).
-    FUSABLE = ("avg", "proportion", "var", "std", "sum", "count")
+    FUSABLE = FUSABLE
 
     def __init__(self, data: GroupedData, *, B: int = 300, n_min: int = 1000,
                  n_max: int = 2000, max_iters: int = 24,
@@ -90,224 +82,79 @@ class AQPService:
                  pool_lanes: Optional[int] = None,
                  pool_ticks_per_sync: Optional[int] = None,
                  pool_tiers: "int | str" = "auto"):
-        self.data = data
-        self.store = SampleStore(data, seed=seed)
-        self.engine = AQPEngine(data, B=B, n_min=n_min, n_max=n_max,
-                                seed=seed, store=self.store,
-                                use_kernel=use_kernel)
-        self.B, self.n_min, self.n_max = B, n_min, n_max
-        self.max_iters, self.n_cap = max_iters, n_cap
-        self.seed = seed
-        self.use_kernel = resolve_use_kernel(use_kernel)
-        if batch_fused in (True, False):
-            # Normalize truthy/falsy equals (1, 0, np.True_) to real bools:
-            # answer() dispatches on identity (`mode is True`).
-            batch_fused = bool(batch_fused)
-        elif batch_fused not in ("auto", "pool"):
-            raise ValueError(
-                f"batch_fused must be True, False, 'auto' or 'pool'; "
-                f"got {batch_fused!r}")
-        self.batch_fused = batch_fused
-        self.pool_lanes = None if pool_lanes is None else int(pool_lanes)
-        self.pool_ticks_per_sync = (None if pool_ticks_per_sync is None
-                                    else int(pool_ticks_per_sync))
-        self.pool_tiers = pool_tiers
-        self._lane_pool: Optional[LanePool] = None
-        self.key = jax.random.PRNGKey(seed)
-        self._offsets = jnp.asarray(data.offsets)
-        self._m = data.num_groups
-        # Reuse/decorrelation policy: one sample epoch serves up to
-        # ``reshuffle_every`` queries, then prefixes are redrawn.
-        self.reshuffle_every = int(reshuffle_every)
-        self._queries_in_epoch = 0
-        self._epoch_counter = 0
-        self._fused_rows = 0
-        self.fused_dispatches = 0
-        self._sample_key = jax.random.fold_in(
-            jax.random.PRNGKey(seed ^ 0x5A17), 0)
+        mode = _route_of(batch_fused)
+        self.batch_fused = (batch_fused if isinstance(batch_fused, str)
+                            else bool(batch_fused))
+        self.session = AQPSession(
+            data, B=B, n_min=n_min, n_max=n_max, max_iters=max_iters,
+            n_cap=n_cap, seed=seed, reshuffle_every=reshuffle_every,
+            use_kernel=use_kernel, pool_tiers=pool_tiers,
+            planner=Planner(mode=mode, pool_lanes=pool_lanes,
+                            pool_ticks_per_sync=pool_ticks_per_sync))
+
+    # -- delegated surface (the attributes callers and benchmarks read) ----
+    @property
+    def data(self) -> GroupedData:
+        return self.session.data
+
+    @property
+    def store(self):
+        return self.session.store
+
+    @property
+    def engine(self):
+        return self.session.engine
+
+    @property
+    def use_kernel(self) -> bool:
+        return self.session.use_kernel
 
     @property
     def rows_touched(self) -> int:
-        """Cumulative rows sampled across ALL paths: host-engine store
-        gathers plus the fused programs' in-loop gathers (each fused lane
-        reports its filled watermark as ``FusedResult.rows_sampled``)."""
-        return self.store.rows_touched + self._fused_rows
+        return self.session.rows_touched
+
+    @property
+    def fused_dispatches(self) -> int:
+        return self.session.fused_dispatches
+
+    @fused_dispatches.setter
+    def fused_dispatches(self, value: int) -> None:
+        self.session.fused_dispatches = value
+
+    @property
+    def _sample_key(self):
+        return self.session._sample_key
+
+    @property
+    def _lane_pool(self) -> Optional[LanePool]:
+        return self.session._pool
 
     def refresh(self, data: Optional[GroupedData] = None) -> None:
         """Invalidate resident samples after a data update."""
-        if data is not None:
-            self.data = data
-            self.engine.data = data
-            self._offsets = jnp.asarray(data.offsets)
-            self._m = data.num_groups
-        self.store.refresh(self.data)
-        self._lane_pool = None          # resident prefixes follow the data
-        self._rotate_epoch()
-
-    def _rotate_epoch(self) -> None:
-        self._epoch_counter += 1
-        self._queries_in_epoch = 0
-        self._sample_key = jax.random.fold_in(
-            jax.random.PRNGKey(self.store.seed ^ 0x5A17), self._epoch_counter)
-        if self._lane_pool is not None:
-            # The pool is always drained between answer() calls, so the
-            # epoch rotation can rebind its slot table in place.
-            self._lane_pool.set_sample_key(self._sample_key)
-
-    def _account_queries(self, k: int) -> None:
-        self._queries_in_epoch += k
-        if self._queries_in_epoch >= self.reshuffle_every:
-            self.store.reshuffle()
-            self._rotate_epoch()
-
-    def _auto_pool_config(self, queries: List[Query]) -> "tuple[int, int]":
-        """(lanes, ticks_per_sync) from the first pooled batch's workload.
-
-        Lane count targets ~two refill waves over the batch (enough
-        concurrency to amortize per-tick fixed cost, few enough that the
-        convergence tail isn't a sea of parked lanes), rounded even so the
-        width tiers split cleanly and capped at 8.  A wide epsilon spread
-        signals straggler-prone traffic -> sync every tick so freed lanes
-        refill promptly; a narrow spread (lanes converge together) ->
-        fold two ticks per dispatch and halve the host round-trips.
-        """
-        k = max(len(queries), 1)
-        lanes = self.pool_lanes
-        if lanes is None:
-            lanes = max(2, min(8, (k + 1) // 2))
-            lanes += lanes % 2
-        tps = self.pool_ticks_per_sync
-        if tps is None:
-            eps = [float(q.epsilon) for q in queries
-                   if q.epsilon is not None]
-            spread = (max(eps) / max(min(eps), 1e-9)) if eps else 1.0
-            tps = 1 if spread > 1.5 else 2
-        return int(lanes), int(tps)
-
-    def _ensure_pool(self, queries: Optional[List[Query]] = None) -> LanePool:
-        if self._lane_pool is None:
-            lanes, tps = self._auto_pool_config(queries or [])
-            self._lane_pool = LanePool(
-                self.data, lanes=lanes, B=self.B,
-                n_min=self.n_min, n_max=self.n_max, max_iters=self.max_iters,
-                n_cap=self.n_cap, use_kernel=self.use_kernel, seed=self.seed,
-                sample_key=self._sample_key,
-                ticks_per_sync=tps, tiers=self.pool_tiers)
-        return self._lane_pool
-
-    def _group_scale(self, func: str, k: int):
-        """(k, m) per-lane scale rows for one func (SS2.2.1 transform)."""
-        row = jnp.asarray(
-            estimators.population_scale_row(func, self.data.scale))
-        return jnp.broadcast_to(row, (k, self._m))
-
-    def _dispatch_fused(self, func: str, queries: List[Query],
-                        keys) -> "list":
-        """One batched fused program for ``len(queries)`` same-func lanes."""
-        k = len(queries)
-        eps = jnp.asarray([q.epsilon for q in queries], jnp.float32)
-        deltas = jnp.asarray([q.delta for q in queries], jnp.float32)
-        res = fused_l2miss_batch(
-            self.data.values, self._offsets,
-            self._group_scale(func, k), jnp.stack(keys), eps,
-            deltas, sample_keys=self._sample_key,
-            est_name=func, B=self.B, n_min=self.n_min, n_max=self.n_max,
-            l=min(self._m + 2, 12), max_iters=self.max_iters,
-            n_cap=self.n_cap, use_kernel=self.use_kernel)
-        self.fused_dispatches += 1
-        return res
-
-    def _answer_pooled(self, queries: List[Query], fused_idx: List[int],
-                       out: dict) -> None:
-        """Mixed-func fused queries through ONE heterogeneous lane pool."""
-        pool = self._ensure_pool([queries[i] for i in fused_idx])
-        self.key, *keys = jax.random.split(self.key, len(fused_idx) + 1)
-        keys = np.asarray(jnp.stack(keys))        # one transfer for the batch
-        qid_to_i = {}
-        for i, k in zip(fused_idx, keys):
-            qid_to_i[pool.submit(queries[i], key=k)] = i
-        d0 = pool.dispatches
-        for r in pool.drain():
-            i = qid_to_i.get(r.qid)
-            if i is None:
-                # Residue from a previous interrupted answer() (drain pops
-                # every uncollected retiree): drop it, serve this batch.
-                continue
-            self._fused_rows += r.rows_sampled
-            out[i] = AQPResponse(
-                qid=i, theta=r.theta, error=r.error, success=r.success,
-                n=r.n, wall_time_s=r.wall_time_s)
-        self.fused_dispatches += pool.dispatches - d0
+        self.session.refresh(data)
 
     def answer(self, queries: List[Query]) -> List[AQPResponse]:
-        """Answer a batch of queries; fuse the L2 moment queries on device."""
-        out: dict[int, AQPResponse] = {}
-        fused_idx = [i for i, q in enumerate(queries)
-                     if (q.metric == "l2" and q.func in self.FUSABLE
-                         and q.epsilon is not None
-                         and q.predicate is None)]
-        rest = [i for i in range(len(queries)) if i not in fused_idx]
-        mode = self.batch_fused
-        if mode == "auto":
-            mode = "pool" if len(fused_idx) >= 2 else False
+        """Answer a batch of queries: submit them all into the session,
+        drain it, and return responses in query order.
 
-        # --- fused on-device pass ---
-        # All fused queries of an epoch share ``self._sample_key``: their
-        # slot->row bindings are identical, so every lane reads the SAME
-        # underlying rows (one hot working set for the storage / cache
-        # tiers beneath, and one slot table inside the program rather than
-        # one per lane).  Identical rows mean correlated answers; that is
-        # the deliberate trade the reshuffle_every policy bounds.
-        # Bootstrap keys stay per-query, so replicate noise is independent.
-        if mode == "pool" and fused_idx:
-            self._answer_pooled(queries, fused_idx, out)
-        else:
-            by_func: dict[str, List[int]] = {}
-            for i in fused_idx:
-                by_func.setdefault(queries[i].func, []).append(i)
-            for func, idxs in by_func.items():
-                self.key, *keys = jax.random.split(self.key, len(idxs) + 1)
-                if mode is True:
-                    t0 = time.perf_counter()
-                    res = self._dispatch_fused(
-                        func, [queries[i] for i in idxs], keys)
-                    theta = np.asarray(res.theta)      # forces the dispatch
-                    errs, succ = np.asarray(res.error), np.asarray(res.success)
-                    ns, rows = np.asarray(res.n), np.asarray(res.rows_sampled)
-                    # Honest per-query latency: the group cost is one
-                    # dispatch; each lane's share is dispatch time / lane
-                    # count (lanes run concurrently inside the one program,
-                    # so per-lane wall clock is not observable -- amortized
-                    # cost is).
-                    per_q = (time.perf_counter() - t0) / len(idxs)
-                    for lane, i in enumerate(idxs):
-                        self._fused_rows += int(rows[lane])
-                        out[i] = AQPResponse(
-                            qid=i, theta=theta[lane], error=float(errs[lane]),
-                            success=bool(succ[lane]), n=ns[lane],
-                            wall_time_s=per_q)
-                else:
-                    # Per-query loop (legacy): k dispatches, timed
-                    # individually.
-                    for i, key in zip(idxs, keys):
-                        t0 = time.perf_counter()
-                        res = self._dispatch_fused(func, [queries[i]], [key])
-                        theta = np.asarray(res.theta)
-                        self._fused_rows += int(
-                            np.asarray(res.rows_sampled)[0])
-                        out[i] = AQPResponse(
-                            qid=i, theta=theta[0],
-                            error=float(np.asarray(res.error)[0]),
-                            success=bool(np.asarray(res.success)[0]),
-                            n=np.asarray(res.n)[0],
-                            wall_time_s=time.perf_counter() - t0)
-
-        # --- host-engine fallback (order/diff/lp/linf/predicates/quantiles) ---
-        for i in rest:
-            t0 = time.perf_counter()
-            tr = self.engine.execute(queries[i])
-            out[i] = AQPResponse(
-                qid=i, theta=tr.theta, error=tr.error, success=tr.success,
-                n=tr.n, wall_time_s=time.perf_counter() - t0)
-        self._account_queries(len(queries))
-        return [out[i] for i in range(len(queries))]
+        All fused queries of an epoch share the session's ``sample_key``:
+        their slot->row bindings are identical, so every lane reads the
+        SAME underlying rows (one hot working set, one slot table per
+        program).  Identical rows mean correlated answers; that is the
+        deliberate trade the reshuffle_every policy bounds.  Bootstrap
+        keys stay per-query, so replicate noise is independent.
+        """
+        requests = [Request(query=q) for q in queries]
+        tickets = [self.session.submit(r) for r in requests]
+        del tickets     # drain() collects; rids key the mapping below
+        # drain() also pops residue responses from a previous interrupted
+        # answer(); their rows were already accounted at harvest, so they
+        # are simply dropped here.
+        by_rid = {r.rid: r for r in self.session.drain()}
+        out = []
+        for i, req in enumerate(requests):
+            r = by_rid[req.rid]
+            out.append(AQPResponse(
+                qid=i, theta=r.theta, error=r.error, success=r.success,
+                n=r.n, wall_time_s=r.wall_time_s))
+        return out

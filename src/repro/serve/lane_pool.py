@@ -106,9 +106,19 @@ class _Ticket:
     key: np.ndarray
     scale_row: np.ndarray
     submitted_s: float
+    priority: int = 0                       # higher = admitted first
+    deadline_at: Optional[float] = None     # absolute perf_counter deadline
     spliced_s: float = 0.0
     spliced_tick: int = 0
     spliced_width: int = 0
+
+    @property
+    def order(self):
+        """Admission order: priority class first, then earliest deadline,
+        then FIFO.  Ordering changes WHEN a query is spliced, never its
+        trajectory (a lane's draws depend only on its own key and age)."""
+        ddl = self.deadline_at if self.deadline_at is not None else np.inf
+        return (-self.priority, ddl, self.qid)
 
 
 @dataclasses.dataclass
@@ -243,6 +253,8 @@ class LanePool:
                 params=params, occupant=[None] * tl,
                 filled_host=np.zeros((tl, m), np.int64)))
         self._queue: Deque[_Ticket] = deque()
+        self._pending_sample_key: Optional[Array] = None
+        self.sample_epochs = 0    # applied slot-table rotations
         self._scale_rows: Dict[str, np.ndarray] = {}
         # Hand-off buffer: harvest fills it, drain() pops it.  Never grows
         # past the queries in flight plus uncollected retirees.
@@ -275,8 +287,15 @@ class LanePool:
                 and query.epsilon is not None
                 and query.predicate is None)
 
-    def submit(self, query: Query, key: Optional[Array] = None) -> int:
-        """Enqueue one query; returns its qid (results keyed on it)."""
+    def submit(self, query: Query, key: Optional[Array] = None, *,
+               priority: int = 0,
+               deadline_at: Optional[float] = None) -> int:
+        """Enqueue one query; returns its qid (results keyed on it).
+
+        ``priority`` / ``deadline_at`` (an absolute ``time.perf_counter``
+        timestamp) shape ADMISSION ordering only -- higher priority first,
+        then earliest deadline, then FIFO; see ``_Ticket.order``.
+        """
         if not self.supports(query):
             raise ValueError(
                 f"lane pool cannot serve func={query.func!r} "
@@ -297,7 +316,8 @@ class LanePool:
             qid=qid, func=query.func, fid=self._family[query.func],
             epsilon=float(query.epsilon), delta=float(query.delta),
             key=np.asarray(key), scale_row=scale_row,
-            submitted_s=time.perf_counter()))
+            submitted_s=time.perf_counter(),
+            priority=int(priority), deadline_at=deadline_at))
         self.peak_queue_depth = max(self.peak_queue_depth, len(self._queue))
         return qid
 
@@ -329,7 +349,10 @@ class LanePool:
                 break
             tier = self._tiers[ti]
             lane = next(i for i, t in enumerate(tier.occupant) if t is None)
-            tk = self._queue.popleft()
+            # SLO-aware admission: highest priority, then earliest
+            # deadline, then FIFO (queues are small; linear scan is fine).
+            tk = min(self._queue, key=lambda t: t.order)
+            self._queue.remove(tk)
             tk.spliced_s, tk.spliced_tick = now, self.ticks
             tk.spliced_width = tier.width
             tier.occupant[lane] = tk
@@ -400,6 +423,7 @@ class LanePool:
         """One scheduling round: refill, run ``ticks_per_sync`` loop ticks
         per busy tier (one dispatch each), harvest.  Returns the number of
         busy lanes left."""
+        self._maybe_rotate()
         self._refill()
         ran = False
         for tier in self._tiers:
@@ -438,11 +462,37 @@ class LanePool:
 
         Only legal while the pool is idle: a resident lane's filled prefix
         is defined by the OLD binding, so rotating under it would break the
-        nesting invariant.
+        nesting invariant.  For a live session that cannot guarantee
+        idleness, use :meth:`request_sample_key` instead.
         """
         if self.busy_lanes or self._queue:
             raise RuntimeError("cannot rotate sample_key with queries in "
-                               "flight; drain() first")
+                               "flight; drain() first or use "
+                               "request_sample_key()")
+        self._apply_sample_key(sample_key)
+
+    def request_sample_key(self, sample_key: Array) -> bool:
+        """Deferred epoch rotation for a LIVE pool: apply the new binding
+        now if no lane is busy, else park it and apply at the next idle
+        point (the start of the first tick with every lane free -- resident
+        prefixes are what the binding defines, so a rotation between
+        harvest and splice is exact; still-QUEUED tickets simply splice
+        under the new key).  Returns True when applied immediately.
+
+        A newer request supersedes an unapplied one -- the pool only ever
+        jumps to the latest epoch.
+        """
+        self._pending_sample_key = jnp.asarray(sample_key)
+        return self._maybe_rotate()
+
+    def _maybe_rotate(self) -> bool:
+        if self._pending_sample_key is None or self.busy_lanes:
+            return False
+        key, self._pending_sample_key = self._pending_sample_key, None
+        self._apply_sample_key(key)
+        return True
+
+    def _apply_sample_key(self, sample_key: Array) -> None:
         self._sample_key = jnp.asarray(sample_key)
         starts = self._offsets[:-1].astype(jnp.int32)
         sizes = (self._offsets[1:] - self._offsets[:-1]).astype(jnp.int32)
@@ -450,6 +500,7 @@ class LanePool:
             self._sample_key, starts, sizes, self._spec["n_cap"])
         for tier in self._tiers:
             tier.params = tier.params._replace(slot_idx=slot_idx)
+        self.sample_epochs += 1
 
     # -- accounting ---------------------------------------------------------
     def tier_watermarks(self) -> List[int]:
@@ -490,4 +541,6 @@ class LanePool:
                 self._active_frac_sum / max(self.dispatches, 1)),
             "rows_gathered": float(rows_gathered),
             "rows_per_tick": rows_gathered / max(self.ticks, 1),
+            "sample_epochs": self.sample_epochs,
+            "pending_rotation": self._pending_sample_key is not None,
         }

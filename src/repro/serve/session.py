@@ -1,0 +1,479 @@
+"""Asynchronous SLO-aware serving session (DESIGN.md SS7 phase F).
+
+The batch-synchronous ``AQPService.answer(List[Query])`` drains the lane
+pool completely between calls: a query arriving mid-flight waits for the
+whole previous batch.  :class:`AQPSession` replaces that contract with an
+open-loop one -- the shape a service under continuous traffic needs:
+
+* :meth:`submit` (``Request -> SessionTicket``) enqueues a request into the
+  live arrival queue and returns immediately; the request carries its SLO
+  envelope (``deadline_s``, ``priority``) alongside the MISS error clause.
+* :meth:`pump` runs ONE non-blocking scheduler round: admit arrivals
+  (routing each through the :class:`~repro.serve.planner.Planner`), tick
+  the busy pool tiers once, harvest retirees.  Crucially the lane pool
+  accepts admissions while in flight -- a request submitted between pumps
+  splices into a freed lane without waiting for the pool to drain.
+* :meth:`poll` (non-blocking) pops a finished response, or returns None
+  while the request is still queued / in flight.
+* :meth:`drain` pumps until idle -- the compatibility shape:
+  ``AQPService.answer`` is now a thin submit-all-then-drain wrapper.
+
+Routing is the planner's explicit :class:`Route` enum -- POOL (continuous
+lanes, real submit->harvest latency), BATCHED (phase-C closed-loop func
+groups, amortized dispatch/k latency), LOOP (one dispatch per query),
+HOST (everything the fused program can't run).  The planner also re-tunes
+the pool continuously from a sliding window of the live stream: sync
+cadence (``ticks_per_sync``) may change between any two dispatches, and
+lane-count rebuilds are requested by the planner and honored here at idle
+points only (no resident state to migrate).
+
+Sample reuse (SS3.2) carries over from the service: one resident
+SampleStore per dataset shared by the host engine and every request, one
+``sample_key`` per epoch pinning the fused slot->row binding.  The epoch
+policy is now completion-counted, and a reshuffle firing while pool
+tickets are in flight DEFERS the pool's rebind to an idle point
+(:meth:`LanePool.request_sample_key`) -- resident prefixes are defined by
+the old binding, so rotating under them would break the nesting invariant.
+
+Accounting matches the service it replaces (``fused_dispatches``,
+``rows_touched``), with one deliberate fix: fused rows are counted at
+HARVEST time, so a response nobody ever collects (a residue ticket of an
+abandoned caller) still lands in ``rows_touched``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..aqp.engine import AQPEngine
+from ..aqp.query import Query, Request
+from ..core import estimators
+from ..core.fused import fused_l2miss_batch
+from ..core.sampling import GroupedData, SampleStore
+from ..kernels import resolve_use_kernel
+from .lane_pool import LanePool
+from .planner import Planner, Route, fusable
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionTicket:
+    """Handle returned by :meth:`AQPSession.submit`; poll with it."""
+    rid: int                # the request's stable id
+    submitted_s: float      # perf_counter at submission (the SLO clock 0)
+
+
+@dataclasses.dataclass
+class SessionResponse:
+    """One finished request.
+
+    ``latency_s`` is the real submit -> completion time on every route --
+    the clock the SLO is judged against.  ``wall_time_s`` keeps the
+    route-specific compute-latency semantics of the synchronous service
+    (real latency on POOL/LOOP/HOST; amortized dispatch/k on BATCHED), so
+    the ``answer()`` compat wrapper reports exactly what it used to.
+    """
+    rid: int
+    theta: np.ndarray
+    error: float
+    success: bool
+    n: np.ndarray
+    wall_time_s: float
+    latency_s: float
+    queue_wait_s: float
+    route: Route
+    rows_sampled: int
+    deadline_s: Optional[float] = None
+    slo_met: Optional[bool] = None      # None when no deadline was set
+
+
+@dataclasses.dataclass
+class _InFlight:
+    ticket: SessionTicket
+    request: Request
+    key: Optional[np.ndarray]           # explicit bootstrap key, if any
+    route: Optional[Route] = None       # set at admission
+
+
+class AQPSession:
+    """Serve Listing-1 requests asynchronously against one resident
+    GroupedData."""
+
+    def __init__(self, data: GroupedData, *, B: int = 300,
+                 n_min: int = 1000, n_max: int = 2000, max_iters: int = 24,
+                 n_cap: int = 1 << 16, seed: int = 0,
+                 reshuffle_every: int = 256,
+                 use_kernel: "bool | str" = "auto",
+                 planner: Optional[Planner] = None,
+                 pool_tiers: "int | str" = "auto"):
+        self.data = data
+        self.store = SampleStore(data, seed=seed)
+        self.engine = AQPEngine(data, B=B, n_min=n_min, n_max=n_max,
+                                seed=seed, store=self.store,
+                                use_kernel=use_kernel)
+        self.B, self.n_min, self.n_max = B, n_min, n_max
+        self.max_iters, self.n_cap = max_iters, n_cap
+        self.seed = seed
+        self.use_kernel = resolve_use_kernel(use_kernel)
+        self.planner = planner if planner is not None else Planner()
+        self.pool_tiers = pool_tiers
+        self.key = jax.random.PRNGKey(seed)
+        self._offsets = jnp.asarray(data.offsets)
+        self._m = data.num_groups
+        # Reuse/decorrelation policy: one sample epoch serves up to
+        # ``reshuffle_every`` COMPLETED requests, then prefixes are redrawn
+        # (the pool's rebind deferred to its next idle point).
+        self.reshuffle_every = int(reshuffle_every)
+        self._queries_in_epoch = 0
+        self._epoch_counter = 0
+        self._sample_key = jax.random.fold_in(
+            jax.random.PRNGKey(seed ^ 0x5A17), 0)
+        # Live scheduling state.
+        self._arrivals: Deque[int] = deque()            # rids awaiting route
+        self._inflight: Dict[int, _InFlight] = {}       # rid -> entry
+        self._results: Dict[int, SessionResponse] = {}  # rid -> response
+        self._pool: Optional[LanePool] = None
+        self._pool_rids: Dict[int, int] = {}            # pool qid -> rid
+        # Accounting (the service contract).
+        self._fused_rows = 0
+        self.fused_dispatches = 0
+        self.submitted = 0
+        self.completed = 0
+        self.pool_rebuilds = 0
+
+    # -- public surface -----------------------------------------------------
+    @property
+    def rows_touched(self) -> int:
+        """Cumulative rows sampled across ALL paths: host-engine store
+        gathers plus every fused lane's filled watermark -- counted at
+        harvest, so uncollected residue responses are never lost."""
+        return self.store.rows_touched + self._fused_rows
+
+    @property
+    def in_flight(self) -> int:
+        """Requests submitted but not yet finished (queued or running)."""
+        return len(self._inflight)
+
+    def submit(self, request: Request,
+               key: Optional[Array] = None) -> SessionTicket:
+        """Enqueue one request into the live arrival queue (non-blocking;
+        the next :meth:`pump` admits it).  ``key`` optionally pins the
+        bootstrap key -- reproducibility hooks for tests and replay."""
+        if not isinstance(request, Request):
+            raise TypeError(
+                f"submit() takes a Request (got {type(request).__name__}); "
+                f"wrap the Query: Request(query=...)")
+        if request.rid in self._inflight or request.rid in self._results:
+            raise ValueError(f"request id {request.rid} already submitted")
+        ticket = SessionTicket(rid=request.rid,
+                               submitted_s=time.perf_counter())
+        self._inflight[request.rid] = _InFlight(
+            ticket=ticket, request=request,
+            key=None if key is None else np.asarray(key))
+        self._arrivals.append(request.rid)
+        self.submitted += 1
+        return ticket
+
+    def poll(self, ticket: Union[SessionTicket, int]
+             ) -> Optional[SessionResponse]:
+        """Pop the finished response for ``ticket``, or None while it is
+        still in flight.  Unknown (or already-collected) tickets raise."""
+        rid = ticket.rid if isinstance(ticket, SessionTicket) else int(ticket)
+        if rid in self._results:
+            return self._results.pop(rid)
+        if rid in self._inflight:
+            return None
+        raise KeyError(f"unknown or already-collected ticket: rid={rid}")
+
+    def pump(self) -> int:
+        """One non-blocking scheduler round: re-tune, admit arrivals, tick
+        busy tiers once, harvest retirees.  Returns requests in flight."""
+        self._retune()
+        self._admit()
+        pool = self._pool
+        if pool is not None and (pool.busy_lanes or pool.queue_depth):
+            d0 = pool.dispatches
+            pool.tick()
+            self.fused_dispatches += pool.dispatches - d0
+            self._harvest_pool()
+        return self.in_flight
+
+    def drain(self, max_pumps: int = 100_000) -> List[SessionResponse]:
+        """Pump until nothing is in flight; pop and return every finished
+        response not yet polled, in rid order.  Popping keeps an unbounded
+        stream at bounded memory -- ``drain`` and ``poll`` both consume."""
+        guard = 0
+        while self._inflight and guard < max_pumps:
+            self.pump()
+            guard += 1
+        return [self._results.pop(rid) for rid in sorted(self._results)]
+
+    def refresh(self, data: Optional[GroupedData] = None) -> None:
+        """Invalidate resident samples after a data update (idle only)."""
+        if self._inflight:
+            raise RuntimeError(
+                "cannot refresh() with requests in flight; drain() first")
+        if data is not None:
+            self.data = data
+            self.engine.data = data
+            self._offsets = jnp.asarray(data.offsets)
+            self._m = data.num_groups
+        self.store.refresh(self.data)
+        self._pool = None               # resident prefixes follow the data
+        self._rotate_epoch()
+
+    def stats(self) -> Dict[str, float]:
+        out = {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "in_flight": self.in_flight,
+            "fused_dispatches": self.fused_dispatches,
+            "rows_touched": self.rows_touched,
+            "pool_rebuilds": self.pool_rebuilds,
+            "sample_epoch": self._epoch_counter,
+        }
+        if self._pool is not None:
+            out["pool"] = self._pool.stats()
+        return out
+
+    # -- epoch policy -------------------------------------------------------
+    def _rotate_epoch(self) -> None:
+        self._epoch_counter += 1
+        self._queries_in_epoch = 0
+        self._sample_key = jax.random.fold_in(
+            jax.random.PRNGKey(self.store.seed ^ 0x5A17), self._epoch_counter)
+        if self._pool is not None:
+            # Deferred: applied immediately if the pool is idle, else at
+            # its next idle point -- never under a resident prefix.
+            self._pool.request_sample_key(self._sample_key)
+
+    def _account_completion(self) -> None:
+        self.completed += 1
+        self.planner.observe_completion()
+        self._queries_in_epoch += 1
+        if self._queries_in_epoch >= self.reshuffle_every:
+            self.store.reshuffle()
+            self._rotate_epoch()
+
+    def _complete(self, entry: _InFlight, *, theta, error, success, n,
+                  wall_time_s: float, queue_wait_s: float, route: Route,
+                  rows_sampled: int, now: Optional[float] = None) -> None:
+        now = time.perf_counter() if now is None else now
+        latency = now - entry.ticket.submitted_s
+        ddl = entry.request.deadline_s
+        self._results[entry.request.rid] = SessionResponse(
+            rid=entry.request.rid, theta=theta, error=error, success=success,
+            n=n, wall_time_s=wall_time_s, latency_s=latency,
+            queue_wait_s=queue_wait_s, route=route,
+            rows_sampled=rows_sampled, deadline_s=ddl,
+            slo_met=None if ddl is None else latency <= ddl)
+        del self._inflight[entry.request.rid]
+        self._account_completion()
+
+    # -- pool management ----------------------------------------------------
+    def _build_pool(self, lanes: int, ticks_per_sync: int) -> LanePool:
+        pool = LanePool(
+            self.data, lanes=lanes, B=self.B, n_min=self.n_min,
+            n_max=self.n_max, max_iters=self.max_iters, n_cap=self.n_cap,
+            use_kernel=self.use_kernel, seed=self.seed,
+            sample_key=self._sample_key, ticks_per_sync=ticks_per_sync,
+            tiers=self.pool_tiers)
+        self.planner.built_pool(lanes)
+        return pool
+
+    def _ensure_pool(self) -> LanePool:
+        if self._pool is None:
+            plan = self.planner.pool_plan()
+            self._pool = self._build_pool(plan.lanes, plan.ticks_per_sync)
+        return self._pool
+
+    def _retune(self) -> None:
+        """Apply the planner's sliding-window policy to the live pool:
+        ``ticks_per_sync`` between any two dispatches (shapes only future
+        dispatches -- trajectory-invariant), lane-count rebuilds at idle
+        points only."""
+        pool = self._pool
+        if pool is None:
+            return
+        plan = self.planner.pool_plan(current_lanes=pool.lanes)
+        if plan.ticks_per_sync != pool.ticks_per_sync:
+            pool.ticks_per_sync = plan.ticks_per_sync
+            self.planner.retunes += 1
+        if (plan.rebuild and not pool.busy_lanes and not pool.queue_depth
+                and not pool.results):
+            # Idle: no resident state, no uncollected retirees.  The new
+            # pool starts at the CURRENT epoch key, so a rotation the old
+            # pool had parked is applied by construction.
+            self._pool = self._build_pool(plan.lanes, plan.ticks_per_sync)
+            self.pool_rebuilds += 1
+
+    # -- admission ----------------------------------------------------------
+    def _admit(self) -> None:
+        """Route every queued arrival; synchronous routes (BATCHED / LOOP /
+        HOST) complete inside this call, POOL submissions ride subsequent
+        pumps."""
+        if not self._arrivals:
+            return
+        wave = [self._inflight[rid] for rid in self._arrivals]
+        self._arrivals.clear()
+        pool = self._pool
+        pool_busy = pool is not None and bool(
+            pool.busy_lanes or pool.queue_depth)
+        n_fus = 0
+        for e in wave:
+            if fusable(e.request):
+                n_fus += 1
+                self.planner.observe_request(e.request)
+        self.planner.observe_backlog(
+            n_fus + ((pool.busy_lanes + pool.queue_depth) if pool else 0))
+        groups: Dict[Route, List[_InFlight]] = {}
+        for e in wave:
+            e.route = self.planner.route(
+                e.request, pending_fusable=n_fus, pool_busy=pool_busy)
+            groups.setdefault(e.route, []).append(e)
+        try:
+            if Route.POOL in groups:
+                self._admit_pool(groups[Route.POOL])
+            if Route.BATCHED in groups:
+                self._run_batched(groups[Route.BATCHED])
+            if Route.LOOP in groups:
+                self._run_loop(groups[Route.LOOP])
+            for e in groups.get(Route.HOST, ()):
+                self._run_host(e)
+        except BaseException:
+            # A synchronous route died mid-wave (engine error, interrupt).
+            # Entries not yet completed and not handed to the pool would
+            # otherwise be stranded in _inflight with no way back to the
+            # scheduler -- re-queue them so the next pump() retries (the
+            # failing request included; a poisoned query keeps raising to
+            # its caller rather than silently vanishing).
+            pooled = set(self._pool_rids.values())
+            stranded = [e.request.rid for e in wave
+                        if e.request.rid in self._inflight
+                        and e.request.rid not in pooled]
+            self._arrivals.extendleft(reversed(stranded))
+            raise
+
+    def _lane_keys(self, entries: List[_InFlight]) -> List[Array]:
+        """Per-entry bootstrap keys: ONE split covers the group (one host
+        round-trip), with explicitly pinned keys taking their slot."""
+        self.key, *ks = jax.random.split(self.key, len(entries) + 1)
+        return [k if e.key is None else jnp.asarray(e.key)
+                for e, k in zip(entries, ks)]
+
+    def _admit_pool(self, entries: List[_InFlight]) -> None:
+        pool = self._ensure_pool()
+        for e, key in zip(entries, self._lane_keys(entries)):
+            req = e.request
+            deadline_at = (None if req.deadline_s is None
+                           else e.ticket.submitted_s + req.deadline_s)
+            qid = pool.submit(req.query, key=key, priority=req.priority,
+                              deadline_at=deadline_at)
+            self._pool_rids[qid] = req.rid
+
+    def _harvest_pool(self) -> None:
+        pool = self._pool
+        if pool is None or not pool.results:
+            return
+        now = time.perf_counter()
+        for qid in sorted(pool.results):
+            r = pool.results.pop(qid)
+            # Harvest-time accounting: the rows were gathered whether or
+            # not anyone ever polls this response.
+            self._fused_rows += r.rows_sampled
+            rid = self._pool_rids.pop(qid, None)
+            if rid is None:
+                continue        # foreign ticket (pool shared out-of-band)
+            entry = self._inflight[rid]
+            wall = now - entry.ticket.submitted_s
+            resident = r.wall_time_s - r.queue_wait_s
+            self._complete(
+                entry, theta=r.theta, error=r.error, success=r.success,
+                n=r.n, wall_time_s=wall,
+                queue_wait_s=max(wall - resident, 0.0),
+                route=Route.POOL, rows_sampled=r.rows_sampled, now=now)
+
+    # -- synchronous routes -------------------------------------------------
+    def _group_scale(self, func: str, k: int):
+        """(k, m) per-lane scale rows for one func (SS2.2.1 transform)."""
+        row = jnp.asarray(
+            estimators.population_scale_row(func, self.data.scale))
+        return jnp.broadcast_to(row, (k, self._m))
+
+    def _dispatch_fused(self, func: str, queries: List[Query], keys):
+        """One batched fused program for ``len(queries)`` same-func lanes."""
+        k = len(queries)
+        eps = jnp.asarray([q.epsilon for q in queries], jnp.float32)
+        deltas = jnp.asarray([q.delta for q in queries], jnp.float32)
+        res = fused_l2miss_batch(
+            self.data.values, self._offsets,
+            self._group_scale(func, k), jnp.stack(keys), eps,
+            deltas, sample_keys=self._sample_key,
+            est_name=func, B=self.B, n_min=self.n_min, n_max=self.n_max,
+            l=min(self._m + 2, 12), max_iters=self.max_iters,
+            n_cap=self.n_cap, use_kernel=self.use_kernel)
+        self.fused_dispatches += 1
+        return res
+
+    def _by_func(self, entries: List[_InFlight]
+                 ) -> List[Tuple[str, List[_InFlight]]]:
+        by_func: Dict[str, List[_InFlight]] = {}
+        for e in entries:
+            by_func.setdefault(e.request.query.func, []).append(e)
+        return list(by_func.items())
+
+    def _run_batched(self, entries: List[_InFlight]) -> None:
+        """Phase-C closed-loop batching: ONE dispatch per func group;
+        amortized per-query wall time (dispatch / lane count -- per-lane
+        wall clock inside one program is not observable)."""
+        for func, group in self._by_func(entries):
+            keys = self._lane_keys(group)
+            t0 = time.perf_counter()
+            res = self._dispatch_fused(
+                func, [e.request.query for e in group], keys)
+            theta = np.asarray(res.theta)          # forces the dispatch
+            errs, succ = np.asarray(res.error), np.asarray(res.success)
+            ns, rows = np.asarray(res.n), np.asarray(res.rows_sampled)
+            per_q = (time.perf_counter() - t0) / len(group)
+            for lane, e in enumerate(group):
+                self._fused_rows += int(rows[lane])
+                self._complete(
+                    e, theta=theta[lane], error=float(errs[lane]),
+                    success=bool(succ[lane]), n=ns[lane],
+                    wall_time_s=per_q, queue_wait_s=0.0,
+                    route=Route.BATCHED, rows_sampled=int(rows[lane]))
+
+    def _run_loop(self, entries: List[_InFlight]) -> None:
+        """Per-query dispatch loop: k dispatches, timed individually."""
+        for func, group in self._by_func(entries):
+            keys = self._lane_keys(group)
+            for e, key in zip(group, keys):
+                t0 = time.perf_counter()
+                res = self._dispatch_fused(func, [e.request.query], [key])
+                theta = np.asarray(res.theta)
+                rows = int(np.asarray(res.rows_sampled)[0])
+                self._fused_rows += rows
+                self._complete(
+                    e, theta=theta[0],
+                    error=float(np.asarray(res.error)[0]),
+                    success=bool(np.asarray(res.success)[0]),
+                    n=np.asarray(res.n)[0],
+                    wall_time_s=time.perf_counter() - t0, queue_wait_s=0.0,
+                    route=Route.LOOP, rows_sampled=rows)
+
+    def _run_host(self, entry: _InFlight) -> None:
+        """Host-engine fallback (order/diff/lp/linf/predicates/relative
+        bounds/quantiles)."""
+        t0 = time.perf_counter()
+        tr = self.engine.execute(entry.request.query)
+        self._complete(
+            entry, theta=tr.theta, error=tr.error, success=tr.success,
+            n=tr.n, wall_time_s=time.perf_counter() - t0, queue_wait_s=0.0,
+            route=Route.HOST, rows_sampled=0)
