@@ -4,93 +4,173 @@
     PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sizes
     PYTHONPATH=src python -m benchmarks.run --only fig3
     PYTHONPATH=src python -m benchmarks.run --only fused --json
+    PYTHONPATH=src python -m benchmarks.run --only serve,distributed \
+        --devices 4 --json
 
 Prints ``name,us_per_call,derived`` CSV rows (skeleton contract); ``--json``
-additionally writes ``BENCH_fused.json`` with machine-readable
-``{bench, us_per_call, rows_touched}`` rows for the fused section, so the
+additionally writes ``BENCH_fused.json`` / ``BENCH_serve.json`` with
+machine-readable rows for the fused / serve+distributed sections, so the
 perf trajectory stays comparable across PRs.
+
+``--devices N`` simulates an N-device host mesh
+(``--xla_force_host_platform_device_count``) for the distributed section;
+it must take effect before jax is imported, which is why every section
+import in this module is lazy.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 
-from .common import CsvEmitter
+SERVE_JSON_KEYS = (
+    "bench", "us_per_call", "rows_touched", "dispatches", "speedup_vs_loop",
+    "active_frac", "rows_per_tick", "p50_ms", "p95_ms", "p99_ms", "slo_miss",
+    "queries", "lanes", "data_shards", "qps", "speedup_vs_1dev",
+    "shard_rows", "parity_bitwise_vs_1dev", "parity_solo_fused_l2miss")
+
+
+def _run_fig1(emit, args):
+    from . import bench_applicability
+    bench_applicability.run(emit, full=args.full, trials=args.trials)
+
+
+def _run_fig2(emit, args):
+    from . import bench_applicability
+    bench_applicability.run_multigroup(emit, full=args.full,
+                                       trials=args.trials)
+
+
+def _run_fig3(emit, args):
+    from . import bench_efficiency
+    bench_efficiency.run(emit, full=args.full, trials=args.trials)
+
+
+def _run_fig4(emit, args):
+    from . import bench_ordering
+    bench_ordering.run(emit, full=args.full, trials=args.trials)
+
+
+def _run_kern(emit, args):
+    from . import bench_kernels
+    bench_kernels.run(emit, full=args.full)
+
+
+def _run_roofline(emit, args):
+    from . import bench_roofline
+    bench_roofline.run(emit)
+
+
+def _run_store(emit, args):
+    from . import bench_sample_store
+    bench_sample_store.run(emit, full=args.full)
+
+
+def _run_fused(emit, args):
+    from . import bench_fused
+    bench_fused.run(emit, full=args.full)
+
+
+def _run_serve(emit, args):
+    from . import bench_serve_pool
+    bench_serve_pool.run(emit, full=args.full, smoke=args.smoke,
+                         arrivals=args.arrivals)
+
+
+def _run_distributed(emit, args):
+    from . import bench_serve_pool
+    bench_serve_pool.run_sharded(emit, full=args.full, smoke=args.smoke,
+                                 devices=args.devices)
+
+
+# The full section registry; --only names are validated against it.
+SECTIONS = {
+    "fig1": _run_fig1,
+    "fig2": _run_fig2,
+    "fig3": _run_fig3,
+    "fig4": _run_fig4,
+    "kern": _run_kern,
+    "roofline": _run_roofline,
+    "store": _run_store,
+    "fused": _run_fused,
+    "serve": _run_serve,
+    "distributed": _run_distributed,
+}
+
+
+def parse_sections(only: "str | None") -> "list[str]":
+    """``--only`` value -> validated section list (None -> all sections)."""
+    if only is None:
+        return list(SECTIONS)
+    names = [s.strip() for s in only.split(",") if s.strip()]
+    unknown = [s for s in names if s not in SECTIONS]
+    if unknown or not names:
+        raise SystemExit(
+            f"unknown section(s) {unknown or [only]!r}; "
+            f"registry: {', '.join(SECTIONS)}")
+    return names
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale data sizes (slow on CPU)")
-    ap.add_argument("--only", default=None,
-                    choices=("fig1", "fig2", "fig3", "fig4", "kern",
-                             "roofline", "store", "fused", "serve"),
-                    help="run a single section (default: all)")
+    ap.add_argument("--only", default=None, metavar="SECTION[,SECTION...]",
+                    help=f"run selected sections (default: all); "
+                         f"registry: {', '.join(SECTIONS)}")
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_<section>.json "
-                         "(fused / serve sections)")
+                         "(fused / serve / distributed sections)")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny sizes for CI smoke runs (serve section)")
+                    help="tiny sizes for CI smoke runs "
+                         "(serve / distributed sections)")
     ap.add_argument("--arrivals", default=None, choices=("poisson",),
                     help="also run the open-loop serve benchmark with this "
                          "arrival process (serve section: seeded Poisson "
                          "arrivals, p50/p95/p99 latency, SLO-miss rate)")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="simulate an N-device host mesh for the "
+                         "distributed section (sets XLA_FLAGS before jax "
+                         "loads; ignored if jax is already imported)")
     ap.add_argument("--trials", type=int, default=40,
                     help="simulated-confidence trials")
     args = ap.parse_args()
+    sections = parse_sections(args.only)
+    if args.devices:
+        import sys
+        flag = f"--xla_force_host_platform_device_count={int(args.devices)}"
+        if "jax" in sys.modules:
+            print(f"warning: --devices ignored (jax already imported; "
+                  f"set XLA_FLAGS={flag} in the environment)", flush=True)
+        else:
+            prev = os.environ.get("XLA_FLAGS", "")
+            os.environ["XLA_FLAGS"] = f"{prev} {flag}".strip()
+
+    from .common import CsvEmitter
     emit = CsvEmitter()
     emit.header()
-    only = args.only
     wrote_json = False
-
-    if only in (None, "fig1"):
-        from . import bench_applicability
-        bench_applicability.run(emit, full=args.full, trials=args.trials)
-    if only in (None, "fig2"):
-        from . import bench_applicability
-        bench_applicability.run_multigroup(emit, full=args.full,
-                                           trials=args.trials)
-    if only in (None, "fig3"):
-        from . import bench_efficiency
-        bench_efficiency.run(emit, full=args.full, trials=args.trials)
-    if only in (None, "fig4"):
-        from . import bench_ordering
-        bench_ordering.run(emit, full=args.full, trials=args.trials)
-    if only in (None, "kern"):
-        from . import bench_kernels
-        bench_kernels.run(emit, full=args.full)
-    if only in (None, "roofline"):
-        from . import bench_roofline
-        bench_roofline.run(emit)
-    if only in (None, "store"):
-        from . import bench_sample_store
-        bench_sample_store.run(emit, full=args.full)
-    if only in (None, "fused"):
-        from . import bench_fused
-        bench_fused.run(emit, full=args.full)
-        if args.json:
+    for name in sections:
+        SECTIONS[name](emit, args)
+        if not args.json:
+            continue
+        if name == "fused":
             with open("BENCH_fused.json", "w") as fh:
                 json.dump(emit.json_rows("fused/"), fh, indent=2)
             print("wrote BENCH_fused.json", flush=True)
             wrote_json = True
-    if only in (None, "serve"):
-        from . import bench_serve_pool
-        bench_serve_pool.run(emit, full=args.full, smoke=args.smoke,
-                             arrivals=args.arrivals)
-        if args.json:
-            with open("BENCH_serve.json", "w") as fh:
-                json.dump(emit.json_rows(
-                    "serve/",
-                    keys=("bench", "us_per_call", "rows_touched",
-                          "dispatches", "speedup_vs_loop", "active_frac",
-                          "rows_per_tick", "p50_ms", "p95_ms", "p99_ms",
-                          "slo_miss")), fh, indent=2)
-            print("wrote BENCH_serve.json", flush=True)
-            wrote_json = True
+    if args.json and any(s in sections for s in ("serve", "distributed")):
+        # serve + distributed share one artifact (both emit serve/ rows);
+        # written once, after every selected section has run.
+        with open("BENCH_serve.json", "w") as fh:
+            json.dump(emit.json_rows("serve/", keys=SERVE_JSON_KEYS),
+                      fh, indent=2)
+        print("wrote BENCH_serve.json", flush=True)
+        wrote_json = True
     if args.json and not wrote_json:
-        print("warning: --json only applies to the fused/serve sections "
-              "(use --only fused / --only serve or run all sections)",
-              flush=True)
+        print("warning: --json only applies to the fused/serve/distributed "
+              "sections (use --only fused / --only serve,distributed or "
+              "run all sections)", flush=True)
 
 
 if __name__ == "__main__":

@@ -13,42 +13,20 @@ Also provides the exact distributed GROUP BY (segment_agg partials + psum).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..core import estimators
+# Mesh construction and row-sharding live in core/mesh.py (shared with the
+# sharded lane pool); re-exported here for compatibility.
+from ..core.mesh import make_data_mesh, shard_dataset  # noqa: F401
 from ..kernels import prng
 
 Array = jax.Array
-
-
-def make_data_mesh():
-    n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",))
-
-
-def shard_dataset(mesh, gid: np.ndarray, x: np.ndarray):
-    """Places (gid, x) row-sharded over the mesh's data axis."""
-    sh = NamedSharding(mesh, P("data"))
-    n = len(gid)
-    per = -(-n // mesh.devices.size)
-    pad = per * mesh.devices.size - n
-    gid_p = np.pad(gid, (0, pad), constant_values=-1)   # -1 = invalid row
-    x_p = np.pad(x, (0, pad))
-    return (jax.device_put(jnp.asarray(gid_p, jnp.int32), sh),
-            jax.device_put(jnp.asarray(x_p, jnp.float32), sh))
-
-
-@partial(jax.jit, static_argnames=("m", "mesh_in"))
-def _noop(*a, **k):  # pragma: no cover
-    raise RuntimeError
 
 
 def sharded_group_stats(mesh, gid: Array, x: Array, m: int):

@@ -186,9 +186,10 @@ def _joint_metric(per_group_err: Array, metric: str, axis: int = 0) -> Array:
     raise ValueError(f"unknown metric {metric!r}")  # pragma: no cover
 
 
-def _lane_moment_sums(v, mf, seeds, B, use_kernel, interpret,
-                      lane_active=None):
-    """Replicate moment sums shared by every moments-fast-path estimator.
+def lane_moment_sums(v, mf, seeds, B, *, use_kernel=False, interpret=None,
+                     lane_active=None):
+    """RAW (unguarded) replicate moment sums shared by every moments-fast-path
+    estimator -- and, per shard segment, by the sharded fused step.
 
     ``(M (q, m, B, 3), M_plain (q, m, 3))`` where row b of M is
     ``[sum w, sum w x, sum w x^2]`` under the counter-PRNG Poisson weights
@@ -196,6 +197,11 @@ def _lane_moment_sums(v, mf, seeds, B, use_kernel, interpret,
     (``estimate_error_lanes_het``) and homogeneous lanes
     (``estimate_error_lanes``) both come through here, so a lane's replicate
     sums are identical whichever entry point served it.
+
+    Sums are returned RAW so they can be summed across shard segments (the
+    Poisson bootstrap composes over row shards, DESIGN.md SS3/phase G) --
+    the dead-replicate guard only makes sense on the COMBINED sums and lives
+    in :func:`guard_dead_replicates` / :func:`finish_lanes_moments`.
 
     ``lane_active`` (optional, (q,) bool): lanes marked inactive SKIP the
     weight generation + contraction entirely and report zero sums.  Callers
@@ -244,10 +250,156 @@ def _lane_moment_sums(v, mf, seeds, B, use_kernel, interpret,
                     a[2], lambda t: lane_M(t[0], t[1]),
                     lambda t: jnp.zeros((m, B, 3), jnp.float32), a[:2]),
                 (feats, seeds, lane_active))                   # (q, m, B, 3)
-    # Guard dead replicates (sum w == 0): substitute the plain sample.
-    dead = M[..., 0:1] <= 0
-    M = jnp.where(dead, M_plain[:, :, None, :], M)
     return M, M_plain
+
+
+def windowed_lane_moment_sums(vals, lo, hi, seeds, B, widths, *,
+                              lane_active, chunk=4):
+    """RAW replicate moment sums over per-lane WINDOWS, rungs per CHUNK.
+
+    The sharded fused step's ESTIMATE (DESIGN.md phase G): ``vals (q, m,
+    cap)`` is one shard segment's value column, ``lo``/``hi (q, m)`` each
+    (lane, group)'s live window in segment-local slots, ``widths`` a static
+    ascending rung ladder topped by ``cap``.  Differences from
+    :func:`lane_moment_sums` that pay on a segment:
+
+    - WINDOWED, not prefix: a lane gathers ``[lo, lo+w)`` at its own rung
+      ``w`` -- the init design parks windows several multiples of n_max up
+      the buffer, and prefix semantics would price every lane by its high
+      watermark instead of its window width (~n/S local rows).
+    - Rungs per CHUNK of ``chunk`` lanes, not one global rung: a wide lane
+      (a straggler mid-jump) drags only its chunk-mates onto its rung, and
+      an all-parked chunk skips weights and contraction entirely.  Chunks
+      balance two fixed costs a big pool multiplies: per-lane ``lax.map``
+      iteration overhead (why not per-lane rungs) and the transient
+      ``(chunk, m, w, B)`` weight tensor (why not one vectorized shot --
+      though windowed rungs are what make even chunked tensors small).
+      Inactive lanes inside a live chunk contribute exact zeros via the
+      mask, matching the skipped-chunk zeros bitwise.
+
+    Weights hash on ABSOLUTE segment-local slot positions: a slot's Poisson
+    replicate stream is a pure function of (lane, group, shard, slot), so
+    where the window lands in the gathered slice never reweights a row.
+    Sums are RAW for the same reason as :func:`lane_moment_sums`: the
+    cross-shard combine (psum / sequential fold) and the dead-replicate
+    guard run on the combined result.
+    """
+    q, m, cap = vals.shape
+    if widths[-1] != cap:
+        raise ValueError(f"width ladder {widths} must top out at cap={cap}")
+    c = max(1, min(int(chunk), q))
+    qp = -(-q // c) * c
+    if qp != q:
+        def pad(a, fill):
+            tail = jnp.full((qp - q,) + a.shape[1:], fill, a.dtype)
+            return jnp.concatenate([a, tail], axis=0)
+        vals, lo, hi = pad(vals, 0), pad(lo, 0), pad(hi, 0)
+        seeds, lane_active = pad(seeds, 0), pad(lane_active, False)
+    w_arr = jnp.asarray(widths[:-1], jnp.int32)
+    cols = jnp.arange(B, dtype=jnp.uint32)
+
+    def chunk_sums(args):
+        vals_c, lo_c, hi_c, seeds_c, act_c = args              # (c, m, ...)
+        actf = act_c.astype(jnp.float32)[:, None, None]
+        need = jnp.max(jnp.where(act_c[:, None], hi_c - lo_c, 0))
+        b = jnp.sum(need > w_arr).astype(jnp.int32)
+
+        def mk(width):
+            def branch(_):
+                lo_w = jnp.clip(lo_c, 0, cap - width)          # (c, m)
+                pos = (lo_w[:, :, None] +
+                       jnp.arange(width, dtype=jnp.int32))     # (c, m, w)
+                vv = jnp.take_along_axis(
+                    vals_c, pos, axis=2).astype(jnp.float32)
+                mf = ((pos >= lo_c[..., None]) &
+                      (pos < hi_c[..., None])).astype(jnp.float32) * actf
+                feats = jnp.stack(
+                    [mf, mf * vv, mf * vv * vv], axis=-1)      # (c, m, w, 3)
+                W = prng.poisson1_weights_at(
+                    seeds_c[:, :, None, None].astype(jnp.uint32),
+                    pos[..., None].astype(jnp.uint32),
+                    cols[None, None, None, :])                 # (c, m, w, B)
+                return (jnp.einsum("cmnb,cmnp->cmbp", W, feats),
+                        jnp.sum(feats, axis=2))
+            return branch
+
+        return jax.lax.cond(
+            jnp.any(act_c),
+            lambda _: jax.lax.switch(b, [mk(w) for w in widths], 0),
+            lambda _: (jnp.zeros((c, m, B, 3), jnp.float32),
+                       jnp.zeros((c, m, 3), jnp.float32)),
+            0)
+
+    grp = lambda a: a.reshape((qp // c, c) + a.shape[1:])
+    M, M_plain = jax.lax.map(
+        chunk_sums, (grp(vals), grp(lo), grp(hi), grp(seeds),
+                     grp(lane_active)))
+    return (M.reshape(qp, m, B, 3)[:q],
+            M_plain.reshape(qp, m, 3)[:q])
+
+
+def guard_dead_replicates(M: Array, M_plain: Array) -> Array:
+    """Substitute the plain sample for dead replicates (``sum w == 0``).
+
+    Applied to COMBINED moment sums: under sharding a replicate is dead only
+    if its weights vanished on every shard, so the guard must run after the
+    cross-shard psum, never per segment.
+    """
+    dead = M[..., 0:1] <= 0
+    return jnp.where(dead, M_plain[:, :, None, :], M)
+
+
+def _lane_moment_sums(v, mf, seeds, B, use_kernel, interpret,
+                      lane_active=None):
+    """Guarded moment sums (compat shim: raw sums + dead-replicate guard)."""
+    M, M_plain = lane_moment_sums(v, mf, seeds, B, use_kernel=use_kernel,
+                                  interpret=interpret, lane_active=lane_active)
+    return guard_dead_replicates(M, M_plain), M_plain
+
+
+def finish_lanes_moments(
+    M: Array,        # (q, m, B, 3) RAW combined replicate moment sums
+    M_plain: Array,  # (q, m, 3) combined plain (mask-only) sums
+    scale: Array,    # (q, m)
+    deltas: Array,   # (q,)
+    est: "Estimator | None" = None,
+    est_fids: Optional[Array] = None,
+    metric: str = "l2",
+) -> Tuple[Array, Array]:
+    """(e, theta) from combined replicate moment sums -- the post-psum
+    epilogue of the moments fast path.
+
+    Exactly the op sequence the moments branches of
+    :func:`estimate_error_lanes` (pass ``est``) and
+    :func:`estimate_error_lanes_het` (pass ``est_fids``) run after their
+    moment pass, factored out so the sharded fused step can run it on
+    psum-combined sums: guard dead replicates, finish to replicates/theta,
+    deviations -> per-group errors -> joint metric -> per-lane quantile.
+    """
+    M = guard_dead_replicates(M, M_plain)
+    if est is not None:
+        reps = est.moments_finish(M)                           # (q, m, B, 1)
+        theta = est.moments_finish(M_plain[:, :, None, :])[:, :, 0, :]
+    else:
+        fam = moment_family()
+        branches = tuple(e.moments_finish for e in fam)
+
+        def finish_lane(fid, M_l, Mp_l):
+            # Under vmap the switch lowers to compute-all-and-select; the
+            # finish epilogues are elementwise on (m, B, 3) sums, so that is
+            # noise next to the moment matmul -- and select keeps the chosen
+            # branch's values bitwise intact.
+            reps_l = jax.lax.switch(fid, branches, M_l)        # (m, B, 1)
+            th_l = jax.lax.switch(fid, branches, Mp_l[:, None, :])[:, 0, :]
+            return reps_l, th_l
+
+        reps, theta = jax.vmap(finish_lane)(
+            est_fids.astype(jnp.int32), M, M_plain)
+    dev = reps - theta[:, :, None, :]                          # (q, m, B, p)
+    per_group_err = jnp.sqrt(jnp.sum(dev**2, axis=-1)) * scale[..., None]
+    joint = _joint_metric(per_group_err, metric, axis=1)       # (q, B)
+    e = jax.vmap(lambda j, d: jnp.quantile(j, 1.0 - d))(joint, deltas)
+    return e, theta * scale[..., None]
 
 
 def estimate_error_lanes(
@@ -286,10 +438,11 @@ def estimate_error_lanes(
     v = (sample[..., 0] if sample.ndim == 4 else sample).astype(jnp.float32)
     mf = mask.astype(jnp.float32)
     if est.moments_finish is not None:
-        M, M_plain = _lane_moment_sums(v, mf, seeds, B, use_kernel, interpret,
-                                       lane_active)
-        reps = est.moments_finish(M)                           # (q, m, B, 1)
-        theta = est.moments_finish(M_plain[:, :, None, :])[:, :, 0, :]
+        M, M_plain = lane_moment_sums(v, mf, seeds, B, use_kernel=use_kernel,
+                                      interpret=interpret,
+                                      lane_active=lane_active)
+        return finish_lanes_moments(M, M_plain, scale, deltas, est=est,
+                                    metric=metric)
     else:
         rows = jnp.arange(w, dtype=jnp.uint32)
         cols = jnp.arange(B, dtype=jnp.uint32)
@@ -342,29 +495,12 @@ def estimate_error_lanes_het(
     lanes carry their population scale in their ``scale`` row (the paper
     SS2.2.1 transformation), exactly as the homogeneous path does.
     """
-    fam = moment_family()
     v = (sample[..., 0] if sample.ndim == 4 else sample).astype(jnp.float32)
     mf = mask.astype(jnp.float32)
-    M, M_plain = _lane_moment_sums(v, mf, seeds, B, use_kernel, interpret,
-                                   lane_active)
-    branches = tuple(e.moments_finish for e in fam)
-
-    def finish_lane(fid, M_l, Mp_l):
-        # Under vmap the switch lowers to compute-all-and-select; the finish
-        # epilogues are elementwise on (m, B, 3) sums, so that is noise next
-        # to the moment matmul -- and select keeps the chosen branch's values
-        # bitwise intact.
-        reps_l = jax.lax.switch(fid, branches, M_l)            # (m, B, 1)
-        th_l = jax.lax.switch(fid, branches, Mp_l[:, None, :])[:, 0, :]
-        return reps_l, th_l
-
-    reps, theta = jax.vmap(finish_lane)(
-        est_fids.astype(jnp.int32), M, M_plain)
-    dev = reps - theta[:, :, None, :]                          # (q, m, B, 1)
-    per_group_err = jnp.sqrt(jnp.sum(dev**2, axis=-1)) * scale[..., None]
-    joint = _joint_metric(per_group_err, metric, axis=1)       # (q, B)
-    e = jax.vmap(lambda j, d: jnp.quantile(j, 1.0 - d))(joint, deltas)
-    return e, theta * scale[..., None]
+    M, M_plain = lane_moment_sums(v, mf, seeds, B, use_kernel=use_kernel,
+                                  interpret=interpret, lane_active=lane_active)
+    return finish_lanes_moments(M, M_plain, scale, deltas, est_fids=est_fids,
+                                metric=metric)
 
 
 def per_group_errors(

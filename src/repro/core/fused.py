@@ -59,11 +59,13 @@ of *different* same-shape datasets.
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import bootstrap, error_model, sampling
 from .estimators import get as get_estimator
@@ -76,6 +78,7 @@ LOG_FLOOR = -60.0
 _SALT_SAMPLE = sampling.SLOT_SALT   # slot -> row binding (sampling.py owns it)
 _SALT_BOOT = 0xB007        # per-lane bootstrap seed base
 _SALT_GROUP = 0x7F4A7C15   # per-(iteration, group) bootstrap stream split
+_SALT_SHARD = sampling.SHARD_SALT   # per-shard bootstrap stream split
 
 
 class FusedResult(NamedTuple):
@@ -149,6 +152,26 @@ def _bucket_widths(n_cap: int, base: int) -> Tuple[int, ...]:
         w *= 2
     widths.append(n_cap)
     return tuple(widths)
+
+
+def _window_ladder(cap: int, base: int) -> Tuple[int, ...]:
+    """Doubling ladder with midpoints (base, 1.5b, 2b, 3b, 4b, ...) to cap.
+
+    The sharded step's per-lane window rungs: midpoints cap the padding
+    waste at 50% where a pure doubling ladder allows 100%, at the cost of
+    roughly twice the compiled switch branches.
+    """
+    base = min(max(int(base), 1), cap)
+    rungs = set()
+    w = base
+    while w < cap:
+        rungs.add(w)
+        mid = w + w // 2
+        if mid < cap:
+            rungs.add(mid)
+        w *= 2
+    rungs.add(cap)
+    return tuple(sorted(rungs))
 
 
 def bucket_ladder(n_cap: int, n_max: int) -> Tuple[int, ...]:
@@ -266,6 +289,66 @@ def lane_active(state: LaneState, max_iters: int) -> Array:
     return ~state.done & ~state.failed & (state.k < max_iters)
 
 
+def _fit_predict(s: LaneState, p: LaneParams, *, tau: float,
+                 growth_cap: float, max_iters: int):
+    """FIT + PREDICT for every lane (shared by the solo and sharded bodies).
+
+    Returns ``(n_pred (q, m), beta (q, m+1), r2 (q,), failed_fit (q,))``.
+    """
+    log_eps = jnp.log(p.epsilons.astype(jnp.float32))
+    row_valid = (jnp.arange(max_iters)[None, :]
+                 < s.k[:, None]).astype(jnp.float32)           # (q, max_iters)
+
+    def lane_predict(prof_n, prof_loge, rv, e_lane, n_cur, le, eps_lane):
+        n_hat, fit = error_model.fit_and_predict(
+            prof_n, prof_loge, rv, le, tau)
+        n_next = jnp.ceil(n_hat).astype(jnp.int32)
+        # Local-model correction from the last iterate (see l2miss).
+        slope = jnp.maximum(jnp.sum(fit.beta[1:]), 1e-3)
+        ratio = jnp.maximum(e_lane / eps_lane, 1.0)
+        local = jnp.ceil(
+            n_cur.astype(jnp.float32) * ratio ** (1.0 / slope)
+        ).astype(jnp.int32)
+        n_next = jnp.maximum(n_next, local)
+        # Trust region + growth guard (see l2miss.MissConfig.growth_cap).
+        cap = (n_cur.astype(jnp.float32) * growth_cap).astype(
+            jnp.int32) + 1
+        n_next = jnp.minimum(n_next, cap)
+        n_next = jnp.maximum(n_next, n_cur + 1)
+        failed = fit.status == error_model.DIAG_FAILURE
+        return n_next, fit.beta, fit.r2, failed
+
+    return jax.vmap(lane_predict)(
+        s.prof_n, s.prof_loge, row_valid, s.e, s.n_cur, log_eps, p.epsilons)
+
+
+def _lane_epilogue(s: LaneState, p: LaneParams, *, max_iters, active,
+                   init_phase, new_keys, e_b, theta_b, n_eff, filled, buf,
+                   beta, r2, failed_fit) -> LaneState:
+    """TEST + the predicated state merge (shared by solo and sharded bodies)."""
+    q = p.epsilons.shape[0]
+    loge = jnp.maximum(jnp.log(jnp.maximum(e_b, 1e-30)), LOG_FLOOR)
+    qi = jnp.arange(q)
+    kq = jnp.minimum(s.k, max_iters - 1)     # frozen lanes: no-op rewrite
+    prof_n = s.prof_n.at[qi, kq].set(
+        jnp.where(active[:, None], n_eff.astype(jnp.float32),
+                  s.prof_n[qi, kq]))
+    prof_loge = s.prof_loge.at[qi, kq].set(
+        jnp.where(active, loge, s.prof_loge[qi, kq]))
+    done = s.done | (active & (e_b <= p.epsilons))
+    failed = s.failed | (active & ~init_phase & failed_fit)
+    return LaneState(
+        keys=new_keys, k=s.k + 1, iters=s.iters + active.astype(jnp.int32),
+        n_cur=jnp.where(active[:, None], n_eff, s.n_cur),
+        filled=filled, buf=buf, prof_n=prof_n, prof_loge=prof_loge,
+        e=jnp.where(active, e_b, s.e),
+        theta=jnp.where(active[:, None, None], theta_b, s.theta),
+        done=done, failed=failed,
+        beta=jnp.where((active & ~init_phase)[:, None], beta, s.beta),
+        r2=jnp.where(active & ~init_phase, r2, s.r2),
+    )
+
+
 def _step_body(
     values: Array,
     offsets: Array,
@@ -301,9 +384,7 @@ def _step_body(
     """
     est = get_estimator(est_name) if est_name is not None else None
     m = offsets.shape[0] - 1
-    q = p.epsilons.shape[0]
     sizes = (offsets[1:] - offsets[:-1]).astype(jnp.int32)
-    log_eps = jnp.log(p.epsilons.astype(jnp.float32))
     # Deterministic balanced two-point design (Eq. 15/16): cyclic shifts give
     # every group both levels, keeping all slopes identifiable.
     l_min = min(max(int(round(l * n_max / (n_min + n_max))), 1), l - 1)
@@ -316,30 +397,8 @@ def _step_body(
     # ---- generate this iteration's n (per lane) ----
     phase = (s.k[:, None] + jnp.arange(m)[None, :]) % l        # (q, m)
     n_init = jnp.where(phase < l_min, n_min, n_max).astype(jnp.int32)
-    row_valid = (jnp.arange(max_iters)[None, :]
-                 < s.k[:, None]).astype(jnp.float32)           # (q, max_iters)
-
-    def lane_predict(prof_n, prof_loge, rv, e_lane, n_cur, le, eps_lane):
-        n_hat, fit = error_model.fit_and_predict(
-            prof_n, prof_loge, rv, le, tau)
-        n_next = jnp.ceil(n_hat).astype(jnp.int32)
-        # Local-model correction from the last iterate (see l2miss).
-        slope = jnp.maximum(jnp.sum(fit.beta[1:]), 1e-3)
-        ratio = jnp.maximum(e_lane / eps_lane, 1.0)
-        local = jnp.ceil(
-            n_cur.astype(jnp.float32) * ratio ** (1.0 / slope)
-        ).astype(jnp.int32)
-        n_next = jnp.maximum(n_next, local)
-        # Trust region + growth guard (see l2miss.MissConfig.growth_cap).
-        cap = (n_cur.astype(jnp.float32) * growth_cap).astype(
-            jnp.int32) + 1
-        n_next = jnp.minimum(n_next, cap)
-        n_next = jnp.maximum(n_next, n_cur + 1)
-        failed = fit.status == error_model.DIAG_FAILURE
-        return n_next, fit.beta, fit.r2, failed
-
-    n_pred, beta, r2, failed_fit = jax.vmap(lane_predict)(
-        s.prof_n, s.prof_loge, row_valid, s.e, s.n_cur, log_eps, p.epsilons)
+    n_pred, beta, r2, failed_fit = _fit_predict(
+        s, p, tau=tau, growth_cap=growth_cap, max_iters=max_iters)
     init_phase = s.k < l                                       # (q,)
     n_vec = jnp.where(init_phase[:, None], n_init, n_pred)
     n_vec = jnp.clip(n_vec, 1, jnp.minimum(sizes, n_cap)[None, :])
@@ -454,26 +513,368 @@ def _step_body(
     e_b, theta_b = jax.lax.switch(
         b_idx, [make_branch(w) for w in widths],
         buf, win_lo, win_hi, seeds, kest)
-    loge = jnp.maximum(jnp.log(jnp.maximum(e_b, 1e-30)), LOG_FLOOR)
-    qi = jnp.arange(q)
-    kq = jnp.minimum(s.k, max_iters - 1)     # frozen lanes: no-op rewrite
-    prof_n = s.prof_n.at[qi, kq].set(
-        jnp.where(active[:, None], n_eff.astype(jnp.float32),
-                  s.prof_n[qi, kq]))
-    prof_loge = s.prof_loge.at[qi, kq].set(
-        jnp.where(active, loge, s.prof_loge[qi, kq]))
-    done = s.done | (active & (e_b <= p.epsilons))
-    failed = s.failed | (active & ~init_phase & failed_fit)
-    return LaneState(
-        keys=new_keys, k=s.k + 1, iters=s.iters + active.astype(jnp.int32),
-        n_cur=jnp.where(active[:, None], n_eff, s.n_cur),
-        filled=filled, buf=buf, prof_n=prof_n, prof_loge=prof_loge,
-        e=jnp.where(active, e_b, s.e),
-        theta=jnp.where(active[:, None, None], theta_b, s.theta),
-        done=done, failed=failed,
-        beta=jnp.where((active & ~init_phase)[:, None], beta, s.beta),
-        r2=jnp.where(active & ~init_phase, r2, s.r2),
-    )
+    return _lane_epilogue(
+        s, p, max_iters=max_iters, active=active, init_phase=init_phase,
+        new_keys=new_keys, e_b=e_b, theta_b=theta_b, n_eff=n_eff,
+        filled=filled, buf=buf, beta=beta, r2=r2, failed_fit=failed_fit)
+
+
+# ---------------------------------------------------------------------------
+# Sharded step (DESIGN.md phase G): the same tick over S row shards
+# ---------------------------------------------------------------------------
+
+class ShardSpec(NamedTuple):
+    """Device-side shard layout tables for the sharded step.
+
+    ``alloc[s, i, n]`` counts how many of the first ``n`` logical sample
+    slots of group i live in shard s's buffer segment (the cumulative
+    ownership table of :class:`~.sampling.ShardLayout`); ``cap_groups[i]``
+    is group i's total logical slot capacity.  Under the mesh step the
+    leading axis is sharded -- each device sees its own ``(1, m, n_cap+1)``
+    alloc slice -- while the solo-emulation path keeps all S tables
+    resident.
+    """
+    alloc: Array        # (S, m, n_cap + 1) int32
+    cap_groups: Array   # (m,) int32
+
+
+def make_shard_spec(layout: "sampling.ShardLayout") -> ShardSpec:
+    """Lift a host :class:`~.sampling.ShardLayout` onto the device."""
+    return ShardSpec(alloc=jnp.asarray(layout.alloc, jnp.int32),
+                     cap_groups=jnp.asarray(layout.cap_groups, jnp.int32))
+
+
+def resolve_seg_window(n_cap: int, n_max: int, data_shards: int,
+                       ext_cap: Optional[int] = None) -> int:
+    """Per-SEGMENT extension window of the sharded step.
+
+    The sharded analogue of :func:`resolve_ext_cap`: ``ext_cap`` keeps its
+    GLOBAL meaning (the most logical slots one lane-tick may grow), and
+    each shard's segment gets its proportional SHARE of that window plus
+    an imbalance slack -- NOT the full global window per segment, which
+    would multiply one tick's gather traffic by the shard count.  The
+    growth clamp in the step body makes any window size safe: it advances
+    the logical watermark only as far as every segment's local share fits
+    its window, so an unusually skewed stretch of the alloc tables costs
+    extra refinement ticks, never missing rows.
+    """
+    if n_cap % data_shards:
+        raise ValueError(
+            f"n_cap={n_cap} must divide by data_shards={data_shards}")
+    cap_s = n_cap // data_shards
+    if n_max > cap_s:
+        raise ValueError(
+            f"n_max={n_max} exceeds one shard segment ({cap_s} slots); "
+            f"raise n_cap or lower data_shards")
+    ext_global = resolve_ext_cap(n_cap, n_max, ext_cap)
+    share = -(-ext_global // data_shards)
+    return min(cap_s, share + max(share // 4, 32))
+
+
+def _sharded_step_body(
+    values: Array,      # (N, c) global | (R, c) per-device slice (mesh)
+    s: LaneState,
+    p: LaneParams,      # slot_idx (S, m, cap_s) | (1, m, cap_s) local slice
+    spec: ShardSpec,
+    *,
+    est_name: Optional[str],
+    B: int,
+    n_min: int,
+    n_max: int,
+    l: int,
+    tau: float,
+    max_iters: int,
+    n_cap: int,
+    metric: str,
+    growth_cap: float,
+    seg_window: int,
+    use_kernel: bool,
+    data_shards: int,
+    axis_name: Optional[str],
+) -> LaneState:
+    """One tick with the buffer slot axis segmented over S row shards.
+
+    Identical decision structure to :func:`_step_body`, with SAMPLE and the
+    bootstrap moment pass running per shard segment: each segment gathers
+    its own extension window from its own rows (its slice of the 1-Lipschitz
+    ``alloc`` tables says how many slots it owns), computes RAW replicate
+    moment sums with per-(lane, group, shard) counter streams, and the sums
+    are combined -- ``lax.psum`` under the mesh (``axis_name="data"``), a
+    sequential left fold in shard order on the solo-emulation path
+    (``axis_name=None``).  A CPU host mesh's psum reduces in exactly that
+    device order, which is the determinism anchor making the two paths
+    bit-equal at the same static ``data_shards`` (DESIGN.md phase G).  Only
+    ONE collective crosses the interconnect per tick -- the ``(q, m, B,
+    3)``/``(q, m, 3)`` moment psum: the growth clamp folds the replicated
+    alloc stack locally on every device, and everything else -- FIT,
+    PREDICT, TEST, the whole LaneState except ``buf`` -- is replicated.
+    """
+    est = get_estimator(est_name) if est_name is not None else None
+    cap_s = n_cap // data_shards
+    m = spec.cap_groups.shape[0]
+    gi = jnp.arange(m)[None, :]
+    l_min = min(max(int(round(l * n_max / (n_min + n_max))), 1), l - 1)
+    # Per-SEGMENT width ladder: a segment window holds ~1/S of a lane's
+    # rows, so the bottom rung is the segment's SHARE of n_max, not n_max
+    # itself -- otherwise the ladder degenerates to [cap_s] and every
+    # segment pays its full capacity in ESTIMATE.  Rungs are raw shares
+    # with midpoints, not pow2 buckets: the ladder is static per (n_cap,
+    # n_max, S) config, so there is no signature blowup to guard against,
+    # and the tight rungs are where sharding beats the 1-device pool's
+    # coarse pow2 buckets on padding waste.
+    # Ladder floor: the n_MIN share, not the n_max share.  The bootstrap is
+    # hash-throughput-bound (~B Poisson draws per gathered slot), so a lane
+    # probing at n_min must not pay n_max-share rungs across all S segments
+    # -- that alone prices a 300-row window at 600 slots of hashing.
+    seg_share = -(-n_max // data_shards)
+    seg_base = max(min(seg_share, -(-n_min // data_shards)), 32)
+    seg_widths = _window_ladder(cap_s, min(seg_base, cap_s))
+    w_arr = jnp.asarray(seg_widths[:-1], jnp.int32)
+
+    keys2 = jax.vmap(jax.random.split)(s.keys)                 # (q, 2, 2)
+    new_keys = keys2[:, 0]
+    active = lane_active(s, max_iters)                         # (q,)
+    phase = (s.k[:, None] + jnp.arange(m)[None, :]) % l        # (q, m)
+    n_init = jnp.where(phase < l_min, n_min, n_max).astype(jnp.int32)
+    n_pred, beta, r2, failed_fit = _fit_predict(
+        s, p, tau=tau, growth_cap=growth_cap, max_iters=max_iters)
+    init_phase = s.k < l                                       # (q,)
+    n_vec = jnp.where(init_phase[:, None], n_init, n_pred)
+    n_vec = jnp.clip(n_vec, 1, spec.cap_groups[None, :])
+
+    # ---- cross-shard growth clamp ----
+    # One tick extends each segment by at most ``seg_window`` LOCAL slots;
+    # the logical watermark may only grow while every segment's share of
+    # the growth fits its window.  seg_window is the proportional share of
+    # the global extension window plus slack (resolve_seg_window), so the
+    # clamp normally grants the full init design in one tick; a skewed
+    # alloc stretch just spreads the growth over extra ticks.
+    def seg_headroom(alloc_sm):                                # (m, n_cap+1)
+        lfill = alloc_sm[gi, s.filled]                         # (q, m)
+        hi = jax.vmap(
+            lambda a, v: jnp.searchsorted(a, v, side="right"),
+            in_axes=(0, 1), out_axes=1)(alloc_sm, lfill + seg_window)
+        return hi.astype(jnp.int32) - 1 - s.filled             # (q, m)
+
+    # alloc is replicated (a few KB per shard), so EVERY device folds the
+    # full (S, m, n_cap+1) stack locally -- no pmin collective; the psum
+    # on the moment sums is the single barrier a tick crosses.
+    allowed = jnp.min(jax.vmap(seg_headroom)(spec.alloc), axis=0)
+    n_vec = jnp.minimum(n_vec, allowed)
+    n_vec = jnp.where(active[:, None], n_vec, s.n_cur)
+    win_lo = jnp.where(init_phase[:, None],
+                       jnp.minimum(s.filled, spec.cap_groups[None, :] - n_vec),
+                       0)
+    win_lo = jnp.where(active[:, None], win_lo, 0)
+    win_hi = jnp.where(active[:, None], win_lo + n_vec,
+                       jnp.minimum(s.n_cur, s.filled))
+    n_eff = n_vec
+    filled = jnp.maximum(s.filled, win_hi)
+
+    seeds = prng.hash3(
+        prng.hash3(p.boot_base, s.k.astype(jnp.uint32),
+                   jnp.uint32(_SALT_GROUP))[:, None],
+        jnp.arange(m, dtype=jnp.uint32)[None, :],
+        jnp.uint32(_SALT_GROUP))                               # (q, m)
+
+    def seg_tick(buf_seg, alloc_sm, table_sm, seg_id):
+        """Gather + RAW moment sums for ONE shard segment.
+
+        ``buf_seg (q, m, cap_s, c)`` the segment's slice of the carried
+        buffer, ``alloc_sm (m, n_cap+1)`` its ownership table, ``table_sm
+        (m, cap_s)`` its slot->row binding, ``seg_id`` uint32 shard index.
+        """
+        lfill = alloc_sm[gi, s.filled]                         # (q, m)
+        llo = alloc_sm[gi, win_lo]
+        lhi = alloc_sm[gi, win_hi]
+
+        gather_widths = _window_ladder(seg_window,
+                                       max(seg_window // 4, 32))
+        gw_arr = jnp.asarray(gather_widths[:-1], jnp.int32)
+
+        def lane_gather(args):
+            buf_l, f_l, h_l, act_l = args
+
+            def mk_grow(W):
+                # Gather width is laddered like the ESTIMATE rungs: an
+                # extension tick usually grows a segment by far less than
+                # the full seg_window (the init jump's worst case), and the
+                # values gather + buf scatter price the full W regardless
+                # of how many slots land (invalid rows drop).  The buffer
+                # contents are identical at any W >= the lane's need.
+                def grow(_):
+                    slots = f_l[:, None] + jnp.arange(
+                        W, dtype=jnp.int32)[None, :]           # (m, W)
+                    valid = slots < h_l[:, None]
+                    clipped = jnp.minimum(slots, cap_s - 1)
+                    gidx = jnp.take_along_axis(table_sm, clipped, axis=1)
+                    new_rows = values[gidx]                    # (m, W, c)
+                    tgt = jnp.where(valid, slots, cap_s)       # OOB -> drop
+                    return buf_l.at[jnp.arange(m)[:, None], tgt].set(
+                        new_rows, mode="drop")
+                return grow
+
+            def grow_any(_):
+                need_l = jnp.max(jnp.maximum(h_l - f_l, 0))
+                gb = jnp.sum(need_l > gw_arr).astype(jnp.int32)
+                return jax.lax.switch(
+                    gb, [mk_grow(w) for w in gather_widths], 0)
+
+            return jax.lax.cond(act_l, grow_any, lambda _: buf_l, 0)
+
+        buf_new = jax.lax.map(lane_gather, (buf_seg, lfill, lhi, active))
+        seeds_s = prng.hash3(seeds, seg_id, jnp.uint32(_SALT_SHARD))
+        if use_kernel:
+            # Kernel path: prefix semantics, one shared rung -- the tile
+            # grid is what gates per-lane cost there.
+            needed = jnp.maximum(
+                jnp.max(jnp.where(active[:, None], lhi, 0)), 1)
+            b_idx = jnp.sum(needed > w_arr).astype(jnp.int32)
+
+            def make_branch(width):
+                def branch(buf_b, lo_b, hi_b, seeds_b):
+                    bw = jax.lax.slice_in_dim(buf_b, 0, width, axis=2)
+                    pos = jnp.arange(width, dtype=jnp.int32)[None, None, :]
+                    msk = ((pos >= lo_b[:, :, None]) &
+                           (pos < hi_b[:, :, None])).astype(jnp.float32)
+                    return bootstrap.lane_moment_sums(
+                        bw[..., 0].astype(jnp.float32), msk, seeds_b, B,
+                        use_kernel=True, lane_active=active)
+                return branch
+
+            M_s, Mp_s = jax.lax.switch(
+                b_idx, [make_branch(w) for w in seg_widths],
+                buf_new, llo, lhi, seeds_s)
+        else:
+            # jnp path: windowed gather at per-lane rungs -- see
+            # bootstrap.windowed_lane_moment_sums for why both matter.
+            M_s, Mp_s = bootstrap.windowed_lane_moment_sums(
+                buf_new[..., 0], llo, lhi, seeds_s, B, seg_widths,
+                lane_active=active)
+        return buf_new, M_s, Mp_s
+
+    if axis_name is None:
+        segs = [
+            seg_tick(
+                jax.lax.slice_in_dim(
+                    s.buf, si * cap_s, (si + 1) * cap_s, axis=2),
+                spec.alloc[si], p.slot_idx[si], jnp.uint32(si))
+            for si in range(data_shards)
+        ]
+        buf = jnp.concatenate([t[0] for t in segs], axis=2)
+        # Sequential left fold in shard order: the reduction order a host
+        # mesh's psum executes, which is what makes the mesh step bit-equal
+        # to this solo reference (DESIGN.md phase G).
+        M, Mp = segs[0][1], segs[0][2]
+        for t in segs[1:]:
+            M = M + t[1]
+            Mp = Mp + t[2]
+    else:
+        sid = jax.lax.axis_index(axis_name)
+        buf, M_s, Mp_s = seg_tick(s.buf, spec.alloc[sid], p.slot_idx[0],
+                                  sid.astype(jnp.uint32))
+        M = jax.lax.psum(M_s, axis_name)
+        Mp = jax.lax.psum(Mp_s, axis_name)
+
+    e_b, theta_b = bootstrap.finish_lanes_moments(
+        M, Mp, p.scale, p.deltas, est=est, est_fids=p.est_fids, metric=metric)
+    return _lane_epilogue(
+        s, p, max_iters=max_iters, active=active, init_phase=init_phase,
+        new_keys=new_keys, e_b=e_b, theta_b=theta_b, n_eff=n_eff,
+        filled=filled, buf=buf, beta=beta, r2=r2, failed_fit=failed_fit)
+
+
+def make_sharded_lane_params(
+    layout: "sampling.ShardLayout",
+    scale: Array,
+    keys: Array,
+    epsilons: Array,
+    deltas: Array,
+    sample_key: Array,
+    est_fids: Optional[Array] = None,
+    *,
+    local_rows: bool,
+) -> LaneParams:
+    """Per-lane parameters for the sharded step: stacked per-shard tables.
+
+    All lanes share ONE ``(2,)`` sample key (the server epoch policy) --
+    per-lane bindings are not supported on the sharded path.  With
+    ``local_rows=True`` slot tables index each device's values slice (the
+    mesh path); ``False`` yields global rows into the unsharded/padded
+    table (the solo-emulation path).  Bootstrap seed bases are derived
+    exactly as :func:`make_lane_params` does, so a lane's streams match its
+    solo run.
+    """
+    if sample_key.ndim != 1:
+        raise ValueError("sharded lanes require one shared (2,) sample key")
+    q = epsilons.shape[0]
+    slot_idx = sampling.sharded_slot_tables(
+        sample_key, layout, local_rows=local_rows)
+    boot_base = jax.vmap(lane_boot_seed)(keys)
+    if est_fids is None:
+        est_fids = jnp.zeros((q,), jnp.int32)
+    return LaneParams(
+        scale=jnp.asarray(scale), epsilons=jnp.asarray(epsilons, jnp.float32),
+        deltas=jnp.asarray(deltas, jnp.float32),
+        est_fids=jnp.asarray(est_fids, jnp.int32), boot_base=boot_base,
+        slot_idx=slot_idx)
+
+
+_SHARD_STEP_STATICS = (
+    "est_name", "B", "n_min", "n_max", "l", "tau", "max_iters", "n_cap",
+    "metric", "growth_cap", "seg_window", "use_kernel", "data_shards",
+)
+
+
+def make_sharded_step(mesh, *, num_ticks: int = 1, **statics):
+    """Compile the mesh-native multi-tick step: ``shard_map`` over "data".
+
+    ``statics`` are the :data:`_SHARD_STEP_STATICS` (``seg_window`` already
+    resolved via :func:`resolve_seg_window`).  Per device and tick: its
+    values slice, its buffer segment, its slot table, and ONE collective
+    (the moment-sums ``psum``; the growth clamp is local).  Returns
+    ``step(values, state, params, shard_spec) -> state`` preserving input
+    shardings; every LaneState leaf except ``buf`` stays replicated.
+
+    Memoized on ``(mesh, num_ticks, statics)``: callers that rebuild pools
+    (benchmarks, serving rebuilds) share ONE jitted program instead of
+    recompiling per instance -- a mesh step compile is seconds, a pool
+    lifetime often is not.
+    """
+    return _make_sharded_step(mesh, num_ticks,
+                              tuple(sorted(statics.items())))
+
+
+@functools.lru_cache(maxsize=None)
+def _make_sharded_step(mesh, num_ticks, statics_items):
+    statics = dict(statics_items)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as PS
+
+    spec = dict(statics, axis_name="data")
+    st_specs = LaneState(
+        keys=PS(), k=PS(), iters=PS(), n_cur=PS(), filled=PS(),
+        buf=PS(None, None, "data", None), prof_n=PS(), prof_loge=PS(),
+        e=PS(), theta=PS(), done=PS(), failed=PS(), beta=PS(), r2=PS())
+    pr_specs = LaneParams(
+        scale=PS(), epsilons=PS(), deltas=PS(), est_fids=PS(),
+        boot_base=PS(), slot_idx=PS("data", None, None))
+    # alloc replicated: every device needs the full stack for the local
+    # growth clamp (and its own shard's table via axis_index).
+    sp_specs = ShardSpec(alloc=PS(), cap_groups=PS())
+
+    def body(values, state, params, sspec):
+        def one(st):
+            return _sharded_step_body(values, st, params, sspec, **spec)
+        if num_ticks == 1:
+            return one(state)
+        return jax.lax.fori_loop(0, num_ticks, lambda _, st: one(st), state)
+
+    sm = shard_map(
+        body, mesh=mesh,
+        in_specs=(PS("data", None), st_specs, pr_specs, sp_specs),
+        out_specs=st_specs, check_rep=False)
+    return jax.jit(sm)
 
 
 _STEP_STATICS = (
@@ -483,12 +884,15 @@ _STEP_STATICS = (
 )
 
 
-@partial(jax.jit, static_argnames=_STEP_STATICS + ("num_ticks",))
+@partial(jax.jit,
+         static_argnames=_STEP_STATICS + ("num_ticks", "data_shards",
+                                          "seg_window"))
 def fused_step(
     values: Array,
     offsets: Array,
     state: LaneState,
     params: LaneParams,
+    shard_spec: Optional[ShardSpec] = None,
     *,
     est_name: Optional[str] = None,
     B: int = 500,
@@ -505,6 +909,8 @@ def fused_step(
     adaptive: bool = True,
     use_kernel: bool = False,
     gate_gather: bool = True,
+    data_shards: int = 1,
+    seg_window: Optional[int] = None,
     num_ticks: int = 1,
 ) -> LaneState:
     """Host-callable resumable step: ``num_ticks`` iterations, one dispatch.
@@ -514,7 +920,45 @@ def fused_step(
     harmless (its state no longer changes) and a multi-tick dispatch never
     needs a mid-window host check.  ``est_name=None`` selects each lane's
     estimator from ``params.est_fids`` (moment family only).
+
+    ``data_shards > 1`` runs the SHARDED body (phase G) on one device --
+    the solo-emulation reference whose answers the mesh step
+    (:func:`make_sharded_step`) reproduces bit-equal.  It requires a
+    ``shard_spec`` (:func:`make_shard_spec`), stacked sharded slot tables
+    (:func:`make_sharded_lane_params` with ``local_rows=False``), and the
+    poisson backend.  ``ext_cap`` keeps its global meaning and is resolved
+    to a per-segment window via :func:`resolve_seg_window`; ``seg_window``
+    bypasses the resolution with an exact per-segment value (how the pool's
+    ``mesh=False`` path reuses the spec its mesh twin compiled with).
     """
+    if seg_window is not None and data_shards == 1:
+        raise ValueError("seg_window applies to the sharded step only")
+    if data_shards > 1:
+        if shard_spec is None:
+            raise ValueError("data_shards > 1 requires a shard_spec")
+        if backend != "poisson" or not adaptive:
+            raise ValueError(
+                "the sharded step supports the adaptive poisson path only")
+        if params.slot_idx.ndim != 3 or params.slot_idx.shape[0] != data_shards:
+            raise ValueError(
+                "sharded lanes need stacked (S, m, seg_cap) slot tables "
+                "(make_sharded_lane_params)")
+        sspec = dict(
+            est_name=est_name, B=B, n_min=n_min, n_max=n_max, l=l, tau=tau,
+            max_iters=max_iters, n_cap=n_cap, metric=metric,
+            growth_cap=growth_cap,
+            seg_window=(seg_window if seg_window is not None else
+                        resolve_seg_window(n_cap, n_max, data_shards,
+                                           ext_cap)),
+            use_kernel=use_kernel, data_shards=data_shards, axis_name=None)
+        if num_ticks == 1:
+            return _sharded_step_body(values, state, params, shard_spec,
+                                      **sspec)
+        return jax.lax.fori_loop(
+            0, num_ticks,
+            lambda _, st: _sharded_step_body(values, st, params, shard_spec,
+                                             **sspec),
+            state)
     ext_cap = resolve_ext_cap(n_cap, n_max, ext_cap)
     spec = dict(
         est_name=est_name, B=B, n_min=n_min, n_max=n_max, l=l, tau=tau,
@@ -542,8 +986,130 @@ def lanes_result(state: LaneState) -> FusedResult:
     )
 
 
-@partial(jax.jit, static_argnames=_STEP_STATICS)
+@partial(jax.jit, static_argnames=_SHARD_STEP_STATICS)
+def _sharded_lanes_closed(
+    values: Array,
+    shard_spec: ShardSpec,
+    slot_tables: Array,   # (S, m, seg_cap) global-row tables
+    scale: Array,
+    keys: Array,
+    epsilons: Array,
+    deltas: Array,
+    est_fids: Array,
+    *,
+    est_name: Optional[str],
+    B: int,
+    n_min: int,
+    n_max: int,
+    l: int,
+    tau: float,
+    max_iters: int,
+    n_cap: int,
+    metric: str,
+    growth_cap: float,
+    seg_window: int,
+    use_kernel: bool,
+    data_shards: int,
+) -> FusedResult:
+    """Closed-loop driver over :func:`_sharded_step_body` (solo emulation)."""
+    m = shard_spec.cap_groups.shape[0]
+    boot_base = jax.vmap(lane_boot_seed)(keys)
+    params = LaneParams(
+        scale=jnp.asarray(scale), epsilons=jnp.asarray(epsilons, jnp.float32),
+        deltas=jnp.asarray(deltas, jnp.float32),
+        est_fids=jnp.asarray(est_fids, jnp.int32), boot_base=boot_base,
+        slot_idx=slot_tables)
+    p_dim = (get_estimator(est_name).out_dim(values.shape[1])
+             if est_name is not None else 1)
+    state0 = init_lane_state(
+        keys, m, n_cap=n_cap, c_dim=values.shape[1], p_dim=p_dim,
+        n_min=n_min, max_iters=max_iters, dtype=values.dtype)
+    spec = dict(
+        est_name=est_name, B=B, n_min=n_min, n_max=n_max, l=l, tau=tau,
+        max_iters=max_iters, n_cap=n_cap, metric=metric,
+        growth_cap=growth_cap, seg_window=seg_window, use_kernel=use_kernel,
+        data_shards=data_shards, axis_name=None)
+    state = jax.lax.while_loop(
+        lambda st: jnp.any(lane_active(st, max_iters)),
+        lambda st: _sharded_step_body(values, st, params, shard_spec, **spec),
+        state0)
+    return lanes_result(state)
+
+
 def fused_l2miss_lanes(
+    values: Array,        # (N, c) group-sorted rows -- SHARED across lanes
+    offsets: Array,       # (m + 1,) -- shared
+    scale: Array,         # (q, m)
+    keys: Array,          # (q, 2) per-lane bootstrap keys
+    epsilons: Array,      # (q,)
+    deltas: Array,        # (q,)
+    sample_keys: Optional[Array] = None,  # None | (2,) shared | (q, 2)
+    est_fids: Optional[Array] = None,     # (q,) when est_name is None
+    *,
+    data_shards: int = 1,
+    shard_layout: Optional["sampling.ShardLayout"] = None,
+    est_name: Optional[str] = "avg",
+    B: int = 500,
+    n_min: int = 100,
+    n_max: int = 200,
+    l: int = 10,
+    tau: float = 1e-3,
+    max_iters: int = 32,
+    n_cap: int = 1 << 16,
+    backend: str = "poisson",
+    metric: str = "l2",
+    growth_cap: float = 8.0,
+    ext_cap: Optional[int] = None,
+    adaptive: bool = True,
+    use_kernel: bool = False,
+    gate_gather: bool = True,
+) -> FusedResult:
+    """q query lanes, one resident table, one while_loop (SS7 phase C/D).
+
+    ``data_shards > 1`` selects the SHARDED step body (phase G) run on one
+    device -- the solo reference for mesh parity.  It needs a shared
+    ``(2,)`` sample key (defaults to ``keys[0]`` when q == 1) and the
+    adaptive poisson path; ``shard_layout`` (optional) skips rebuilding the
+    host layout tables, and ``ext_cap`` becomes the per-segment window.
+    """
+    if data_shards > 1:
+        if backend != "poisson" or not adaptive:
+            raise ValueError(
+                "the sharded loop supports the adaptive poisson path only")
+        if sample_keys is None:
+            if keys.shape[0] != 1:
+                raise ValueError(
+                    "sharded lanes require one shared (2,) sample key")
+            sample_keys = keys[0]
+        if sample_keys.ndim != 1:
+            raise ValueError(
+                "sharded lanes require one shared (2,) sample key")
+        layout = shard_layout if shard_layout is not None else (
+            sampling.ShardLayout.build(
+                np.asarray(offsets), n_cap=n_cap, num_shards=data_shards))
+        tables = sampling.sharded_slot_tables(
+            sample_keys, layout, local_rows=False)
+        q = epsilons.shape[0]
+        if est_fids is None:
+            est_fids = jnp.zeros((q,), jnp.int32)
+        return _sharded_lanes_closed(
+            values, make_shard_spec(layout), tables, scale, keys, epsilons,
+            deltas, est_fids,
+            est_name=est_name, B=B, n_min=n_min, n_max=n_max, l=l, tau=tau,
+            max_iters=max_iters, n_cap=n_cap, metric=metric,
+            growth_cap=growth_cap,
+            seg_window=resolve_seg_window(n_cap, n_max, data_shards, ext_cap),
+            use_kernel=use_kernel, data_shards=data_shards)
+    return _fused_l2miss_lanes1(
+        values, offsets, scale, keys, epsilons, deltas, sample_keys, est_fids,
+        est_name=est_name, B=B, n_min=n_min, n_max=n_max, l=l, tau=tau,
+        max_iters=max_iters, n_cap=n_cap, backend=backend, metric=metric,
+        growth_cap=growth_cap, ext_cap=ext_cap, adaptive=adaptive,
+        use_kernel=use_kernel, gate_gather=gate_gather)
+
+
+@partial(jax.jit, static_argnames=_STEP_STATICS)
+def _fused_l2miss_lanes1(
     values: Array,        # (N, c) group-sorted rows -- SHARED across lanes
     offsets: Array,       # (m + 1,) -- shared
     scale: Array,         # (q, m)
@@ -569,7 +1135,7 @@ def fused_l2miss_lanes(
     use_kernel: bool = False,
     gate_gather: bool = True,
 ) -> FusedResult:
-    """q query lanes, one resident table, one while_loop (SS7 phase C/D).
+    """The unsharded (data_shards == 1) closed loop (SS7 phase C/D).
 
     A thin closed-loop wrapper over :func:`fused_step`'s body: init the
     carry, tick until every lane is done/failed/out of ticks, project the

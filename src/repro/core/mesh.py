@@ -1,0 +1,87 @@
+"""Shared mesh utilities for data-parallel execution (DESIGN.md phase G).
+
+Hoisted from ``aqp/distributed.py`` so the distributed ESTIMATE path and
+the sharded lane pool (core/fused.py + serve/lane_pool.py) agree on ONE
+mesh construction and ONE row-sharding convention: a 1-D ``("data",)``
+mesh, rows padded to a multiple of the device count, ``gid == -1`` (or a
+row index past the last group offset) marking padding.
+
+On CPU containers a multi-device mesh is simulated with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` -- which must be in
+the environment BEFORE jax is imported (:func:`host_device_flag` builds
+the flag string; benchmarks/run.py ``--devices`` and the CI multi-device
+job both use it).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+# The one data-parallel axis name every sharded component agrees on.
+DATA_AXIS = "data"
+
+
+def host_device_flag(n: int) -> str:
+    """The XLA flag forcing ``n`` simulated host devices.
+
+    Must be placed in ``XLA_FLAGS`` BEFORE the first ``import jax`` --
+    appending after jax initialized its backend has no effect.
+    """
+    return f"--xla_force_host_platform_device_count={int(n)}"
+
+
+def make_data_mesh(num_devices: Optional[int] = None) -> Mesh:
+    """1-D ``("data",)`` mesh over ``num_devices`` devices (default: all)."""
+    devs = jax.devices()
+    if num_devices is None or int(num_devices) == len(devs):
+        return jax.make_mesh((len(devs),), (DATA_AXIS,))
+    n = int(num_devices)
+    if n > len(devs):
+        raise ValueError(
+            f"requested a {n}-device data mesh but only {len(devs)} "
+            f"device(s) are visible; set XLA_FLAGS="
+            f"{host_device_flag(n)!r} before importing jax")
+    return Mesh(np.asarray(devs[:n]), (DATA_AXIS,))
+
+
+def data_sharding(mesh: Mesh, ndim: int = 1, axis: int = 0) -> NamedSharding:
+    """Sharding with dimension ``axis`` split over the data axis, the rest
+    replicated."""
+    spec = [None] * int(ndim)
+    spec[axis] = DATA_AXIS
+    return NamedSharding(mesh, P(*spec))
+
+
+def put_sharded(mesh: Mesh, x, axis: int = 0) -> Array:
+    """``device_put`` with dimension ``axis`` sharded over the data axis."""
+    x = jnp.asarray(x)
+    return jax.device_put(x, data_sharding(mesh, x.ndim, axis))
+
+
+def put_replicated(mesh: Mesh, x) -> Array:
+    """``device_put`` fully replicated over the mesh."""
+    return jax.device_put(jnp.asarray(x), NamedSharding(mesh, P()))
+
+
+def shard_dataset(mesh: Mesh, gid: np.ndarray, x: np.ndarray):
+    """Places ``(gid, x)`` row-sharded over the mesh's data axis.
+
+    Rows are padded to a multiple of the device count with ``gid == -1``
+    marking invalid (padding) rows -- the convention every sharded consumer
+    (aqp/distributed.py, the sharded ESTIMATE masking tests) relies on.
+    """
+    sh = NamedSharding(mesh, P(DATA_AXIS))
+    n = len(gid)
+    per = -(-n // mesh.devices.size)
+    pad = per * mesh.devices.size - n
+    gid_p = np.pad(gid, (0, pad), constant_values=-1)   # -1 = invalid row
+    x_p = np.pad(x, (0, pad))
+    return (jax.device_put(jnp.asarray(gid_p, jnp.int32), sh),
+            jax.device_put(jnp.asarray(x_p, jnp.float32), sh))

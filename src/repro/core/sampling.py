@@ -231,6 +231,187 @@ def bucket_cap(n: int, *, base: int = 256) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Sharded slot binding: the counter-PRNG binding split over row shards
+# (DESIGN.md phase G)
+# ---------------------------------------------------------------------------
+
+# Domain-separation salt folding the shard index into the per-segment
+# bootstrap seed stream (core/fused.py `_sharded_step_body`).
+SHARD_SALT = 0x5DA7
+
+
+def _shard_alloc_tables(lsizes: np.ndarray, n_cap: int,
+                        cap_s: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Cumulative slot-ownership tables for a sharded group layout.
+
+    ``lsizes[s, i]`` is how many rows of group i live on shard s.  Logical
+    sample slots of group i are assigned to shards by a deterministic
+    proportional-emission merge: shard s emits candidate "times"
+    ``k * (Z_i / z_si)`` for ``k = 1..cap_s`` (``Z_i`` the group's total
+    rows), candidates are merged by ``(time, shard)`` lexsort, and the first
+    ``n_cap`` merged candidates are the group's logical slot order.  The
+    returned ``alloc[s, i, n]`` counts how many of the first ``n`` logical
+    slots shard s owns.
+
+    Properties the fused step relies on:
+
+    * *identity at S=1*: one shard emits times ``k * 1`` so
+      ``alloc[0, i, n] == min(n, cap_groups[i])``.
+    * *1-Lipschitz*: ``alloc[s, i, n+1] - alloc[s, i, n] in {0, 1}``, so
+      ``inv_alloc(alloc(f) + W) >= f + W`` -- one tick's growth clamp
+      (core/fused.py) always grants at least the static per-segment gather
+      window.
+    * *proportional*: shard s owns ~``z_si / Z_i`` of the slots, matching
+      the stratified-over-shards semantics of
+      ``aqp.distributed.sharded_bootstrap_estimate``.
+    """
+    S, m = lsizes.shape
+    alloc = np.zeros((S, m, n_cap + 1), np.int64)
+    cap_groups = np.zeros((m,), np.int64)
+    for i in range(m):
+        z = lsizes[:, i].astype(np.float64)
+        total = z.sum()
+        if total <= 0:
+            continue
+        times: List[np.ndarray] = []
+        sids: List[np.ndarray] = []
+        k = np.arange(1, cap_s + 1, dtype=np.float64)
+        for s in range(S):
+            if z[s] <= 0:
+                continue
+            times.append(k * (total / z[s]))
+            sids.append(np.full(cap_s, s, np.int64))
+        t = np.concatenate(times)
+        sid = np.concatenate(sids)
+        order = np.lexsort((sid, t))          # stable: ties break by shard id
+        sid = sid[order][:n_cap]
+        cap_groups[i] = len(sid)
+        for s in range(S):
+            owned = np.cumsum(sid == s)
+            alloc[s, i, 1:1 + len(sid)] = owned
+            alloc[s, i, 1 + len(sid):] = owned[-1] if len(sid) else 0
+    return alloc, cap_groups
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardLayout:
+    """Host-side description of a grouped table split into S row blocks.
+
+    Rows are block-partitioned: shard s owns rows ``[s*R, (s+1)*R)`` of the
+    (padded) table, ``R = rows_per_shard``.  Each group's contiguous extent
+    intersects each block in at most one sub-extent (``lstarts``/``lsizes``,
+    shard-local offsets).  The fused lane buffer's slot axis is likewise
+    segmented into S contiguous segments of ``seg_cap = n_cap // S`` slots,
+    and ``alloc`` maps logical sample-prefix lengths to per-segment fills
+    (see :func:`_shard_alloc_tables`).  ``cap_groups[i]`` is group i's total
+    logical slot capacity (<= n_cap; also clamped to the group size to match
+    the solo step's ``n <= size`` clip).
+    """
+    num_shards: int
+    rows_per_shard: int
+    n_cap: int
+    lstarts: np.ndarray     # (S, m) int32, shard-local row starts
+    lsizes: np.ndarray      # (S, m) int32
+    alloc: np.ndarray       # (S, m, n_cap + 1) int32, cumulative ownership
+    cap_groups: np.ndarray  # (m,) int32
+
+    @property
+    def seg_cap(self) -> int:
+        return self.n_cap // self.num_shards
+
+    @staticmethod
+    def build(offsets, *, n_cap: int, num_shards: int) -> "ShardLayout":
+        offsets = np.asarray(offsets, np.int64)
+        S = int(num_shards)
+        if S < 1:
+            raise ValueError(f"num_shards must be >= 1; got {S}")
+        if n_cap % S:
+            raise ValueError(f"n_cap={n_cap} must divide by num_shards={S}")
+        n_rows = int(offsets[-1])
+        rows_per_shard = -(-max(n_rows, 1) // S)
+        m = len(offsets) - 1
+        lstarts = np.zeros((S, m), np.int64)
+        lsizes = np.zeros((S, m), np.int64)
+        for s in range(S):
+            blo = s * rows_per_shard
+            bhi = blo + rows_per_shard
+            lo = np.clip(offsets[:-1], blo, bhi)
+            hi = np.clip(offsets[1:], blo, bhi)
+            lsizes[s] = np.maximum(hi - lo, 0)
+            # Clamp empty sub-extents to a valid local row so slot tables
+            # stay in-bounds (their slots are never gathered: alloc owns 0).
+            lstarts[s] = np.where(lsizes[s] > 0, lo - blo, 0)
+        alloc, cap_groups = _shard_alloc_tables(lsizes, n_cap, n_cap // S)
+        cap_groups = np.minimum(cap_groups, np.diff(offsets))
+        cap_groups = np.maximum(cap_groups, 1)      # keep n >= 1 clips valid
+        return ShardLayout(
+            num_shards=S, rows_per_shard=int(rows_per_shard), n_cap=int(n_cap),
+            lstarts=lstarts.astype(np.int32), lsizes=lsizes.astype(np.int32),
+            alloc=alloc.astype(np.int32), cap_groups=cap_groups.astype(np.int32))
+
+    # -- host-side helpers ---------------------------------------------------
+    def pad_values(self, values) -> np.ndarray:
+        """Values padded with zero rows to ``S * rows_per_shard`` (2-D)."""
+        v = np.asarray(values)
+        if v.ndim == 1:
+            v = v[:, None]
+        total = self.num_shards * self.rows_per_shard
+        if len(v) < total:
+            v = np.pad(v, ((0, total - len(v)), (0, 0)))
+        return v
+
+    def shard_rows(self, filled) -> np.ndarray:
+        """(S,) resident slots per shard at per-group watermarks ``filled``
+        (m,) -- the per-shard dispatch accounting the pool's stats report."""
+        f = np.minimum(np.asarray(filled, np.int64).reshape(-1), self.n_cap)
+        gi = np.arange(self.alloc.shape[1])
+        return np.stack([self.alloc[s, gi, f].sum()
+                         for s in range(self.num_shards)])
+
+    def max_shard_frac(self) -> float:
+        """Largest per-shard share of any group's rows (cost-model scalar:
+        translates a global watermark into a worst-case segment fill)."""
+        z = self.lsizes.astype(np.float64)
+        tot = np.maximum(z.sum(axis=0), 1.0)
+        return float((z / tot[None, :]).max()) if z.size else 1.0
+
+
+def sharded_slot_tables(sample_key, layout: ShardLayout, *,
+                        local_rows: bool):
+    """(S, m, seg_cap) stacked slot->row tables for the sharded fused step.
+
+    Segment slot j of shard s for group i draws
+    ``u = uniform01(hash3(seed, i, s*seg_cap + j))`` -- the same stream
+    family as :func:`counter_slot_table`, indexed by the buffer-global slot
+    id -- and maps it into shard s's local sub-extent of group i.  With
+    ``local_rows=True`` rows index the shard's own values slice (the mesh
+    path); with ``local_rows=False`` the shard's row-block offset is added,
+    yielding global rows into the unsharded (or padded) table: the
+    solo-emulation view of the *identical* binding.
+    """
+    from ..kernels import prng
+
+    S, m = layout.lsizes.shape
+    seg_cap = layout.seg_cap
+    seed = jax.random.bits(
+        jax.random.fold_in(sample_key, SLOT_SALT), (), jnp.uint32)
+    lstarts = jnp.asarray(layout.lstarts, jnp.int32)
+    lsizes = jnp.asarray(layout.lsizes, jnp.int32)
+    gids = jnp.arange(m, dtype=jnp.uint32)[None, :, None]
+    slots = (jnp.arange(S, dtype=jnp.uint32)[:, None, None]
+             * jnp.uint32(seg_cap)
+             + jnp.arange(seg_cap, dtype=jnp.uint32)[None, None, :])
+    u = prng.uniform01(prng.hash3(seed, gids, slots))   # (S, m, seg_cap)
+    draw = jnp.minimum((u * lsizes[..., None]).astype(jnp.int32),
+                       jnp.maximum(lsizes[..., None] - 1, 0))
+    rows = lstarts[..., None] + draw
+    if not local_rows:
+        rows = rows + (jnp.arange(S, dtype=jnp.int32)
+                       * jnp.int32(layout.rows_per_shard))[:, None, None]
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # SampleStore: incremental permuted-prefix sampling (DESIGN.md SS3.2)
 # ---------------------------------------------------------------------------
 

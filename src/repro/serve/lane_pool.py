@@ -67,11 +67,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..aqp.query import Query
+from ..core import mesh as core_mesh
+from ..core.fused import (LaneParams, LaneState, ShardSpec, bucket_ladder,
+                          fused_step, init_lane_state, lane_boot_seed,
+                          make_lane_params, make_shard_spec,
+                          make_sharded_lane_params, make_sharded_step,
+                          resolve_ext_cap, resolve_seg_window)
 from ..core import estimators
-from ..core.fused import (LaneParams, LaneState, bucket_ladder, fused_step,
-                          init_lane_state, lane_boot_seed, make_lane_params,
-                          resolve_ext_cap)
-from ..core.sampling import GroupedData, counter_slot_table
+from ..core.sampling import GroupedData, ShardLayout, counter_slot_table
 
 Array = jax.Array
 
@@ -143,6 +146,7 @@ class _Tier:
 
 
 @partial(jax.jit, static_argnames=("n_min",))
+@partial(jax.jit, static_argnames=("n_min",))
 def _splice(state: LaneState, params: LaneParams, lanes, keys, scale_rows,
             eps, deltas, fids, *, n_min: int):
     """Reset lanes ``lanes`` to tick 0, swapping in their new queries.
@@ -151,9 +155,13 @@ def _splice(state: LaneState, params: LaneParams, lanes, keys, scale_rows,
     tier width with out-of-range lane indices, which ``mode="drop"``
     discards -- so every round shares ONE compiled splice regardless of how
     many lanes freed up (tiers have equal lane counts, so all tiers share
-    it too).  Must reproduce ``init_lane_state`` / ``make_lane_params``
-    row-for-row so a refilled lane is indistinguishable from lane i of a
-    fresh pool -- the refill invariant the parity tests assert.
+    it too).  The jit matters doubly under a mesh: un-jitted, each of the
+    ~19 leaf updates is its own SPMD launch across every device; jitted,
+    the whole splice is one program and sharding propagation keeps ``buf``
+    resident where it was (the slot axis never moves).  Must reproduce
+    ``init_lane_state`` / ``make_lane_params`` row-for-row so a refilled
+    lane is indistinguishable from lane i of a fresh pool -- the refill
+    invariant the parity tests assert.
     """
     drop = dict(mode="drop")
     st = state._replace(
@@ -203,7 +211,8 @@ class LanePool:
                  ext_cap: Optional[int] = None, use_kernel: bool = False,
                  gate_gather: bool = True, seed: int = 0,
                  sample_key: Optional[Array] = None,
-                 ticks_per_sync: int = 1, tiers: "int | str" = "auto"):
+                 ticks_per_sync: int = 1, tiers: "int | str" = "auto",
+                 data_shards: int = 1, mesh=None):
         self.data = data
         self.lanes = int(lanes)
         if tiers == "auto":
@@ -215,17 +224,58 @@ class LanePool:
                 f"({self.tiers})")
         self.tier_lanes = self.lanes // self.tiers
         m = data.num_groups
-        self._values = data.values
+        self.data_shards = int(data_shards)
         self._offsets = jnp.asarray(data.offsets)
         self._family = {e.name: i
                         for i, e in enumerate(estimators.moment_family())}
-        self._spec = dict(
-            est_name=None, B=B, n_min=n_min, n_max=n_max,
-            l=int(l if l is not None else min(m + 2, 12)), tau=1e-3,
-            max_iters=max_iters, n_cap=n_cap, backend="poisson",
-            metric=metric, growth_cap=growth_cap,
-            ext_cap=resolve_ext_cap(n_cap, n_max, ext_cap), adaptive=True,
-            use_kernel=use_kernel, gate_gather=gate_gather)
+        if self.data_shards > 1:
+            # Phase G: values row-sharded over the mesh, buffers segmented
+            # over the slot axis, one compiled shard_map step per num_ticks.
+            # ``mesh=False`` keeps the SAME shard layout on one device (the
+            # solo-emulation ``fused_step`` path) -- the bitwise reference a
+            # mesh pool's answers are checked against.
+            self._layout = ShardLayout.build(
+                np.asarray(data.offsets), n_cap=n_cap,
+                num_shards=self.data_shards)
+            if mesh is False:
+                self._mesh = None
+            else:
+                self._mesh = mesh if mesh is not None else (
+                    core_mesh.make_data_mesh(self.data_shards))
+                if self._mesh.devices.size != self.data_shards:
+                    raise ValueError(
+                        f"mesh has {self._mesh.devices.size} devices; pool "
+                        f"wants data_shards={self.data_shards}")
+            padded = self._layout.pad_values(np.asarray(data.values))
+            self._values = (jnp.asarray(padded) if self._mesh is None else
+                            core_mesh.put_sharded(self._mesh, padded))
+            sspec = make_shard_spec(self._layout)
+            if self._mesh is not None:
+                sspec = ShardSpec(
+                    alloc=core_mesh.put_replicated(self._mesh, sspec.alloc),
+                    cap_groups=core_mesh.put_replicated(
+                        self._mesh, sspec.cap_groups))
+            self._shard_spec = sspec
+            self._spec = dict(
+                est_name=None, B=B, n_min=n_min, n_max=n_max,
+                l=int(l if l is not None else min(m + 2, 12)), tau=1e-3,
+                max_iters=max_iters, n_cap=n_cap, metric=metric,
+                growth_cap=growth_cap,
+                seg_window=resolve_seg_window(n_cap, n_max, self.data_shards,
+                                              ext_cap),
+                use_kernel=use_kernel, data_shards=self.data_shards)
+            self._step_cache: Dict[int, object] = {}
+        else:
+            self._layout = None
+            self._mesh = None
+            self._values = data.values
+            self._spec = dict(
+                est_name=None, B=B, n_min=n_min, n_max=n_max,
+                l=int(l if l is not None else min(m + 2, 12)), tau=1e-3,
+                max_iters=max_iters, n_cap=n_cap, backend="poisson",
+                metric=metric, growth_cap=growth_cap,
+                ext_cap=resolve_ext_cap(n_cap, n_max, ext_cap), adaptive=True,
+                use_kernel=use_kernel, gate_gather=gate_gather)
         self.ticks_per_sync = int(ticks_per_sync)
         self.key = jax.random.PRNGKey(seed)
         if sample_key is None:
@@ -236,15 +286,31 @@ class LanePool:
         self._tiers: List[_Tier] = []
         for ti in range(self.tiers):
             tkeys = keys0[ti * tl:(ti + 1) * tl]
-            params = make_lane_params(
-                self._offsets, jnp.ones((tl, m), jnp.float32), tkeys,
-                jnp.ones((tl,), jnp.float32),
-                jnp.full((tl,), 0.05, jnp.float32),
-                self._sample_key, jnp.zeros((tl,), jnp.int32),
-                n_cap=n_cap)
+            if self.data_shards > 1:
+                params = make_sharded_lane_params(
+                    self._layout, jnp.ones((tl, m), jnp.float32), tkeys,
+                    jnp.ones((tl,), jnp.float32),
+                    jnp.full((tl,), 0.05, jnp.float32),
+                    self._sample_key, jnp.zeros((tl,), jnp.int32),
+                    local_rows=self._mesh is not None)
+                if self._mesh is not None:
+                    params = params._replace(slot_idx=core_mesh.put_sharded(
+                        self._mesh, params.slot_idx))
+            else:
+                params = make_lane_params(
+                    self._offsets, jnp.ones((tl, m), jnp.float32), tkeys,
+                    jnp.ones((tl,), jnp.float32),
+                    jnp.full((tl,), 0.05, jnp.float32),
+                    self._sample_key, jnp.zeros((tl,), jnp.int32),
+                    n_cap=n_cap)
             state = init_lane_state(
                 tkeys, m, n_cap=n_cap, c_dim=data.values.shape[1], p_dim=1,
                 n_min=n_min, max_iters=max_iters, dtype=data.values.dtype)
+            if self.data_shards > 1 and self._mesh is not None:
+                state = jax.tree_util.tree_map(
+                    lambda x: core_mesh.put_replicated(self._mesh, x), state)
+                state = state._replace(buf=jax.device_put(
+                    state.buf, core_mesh.data_sharding(self._mesh, 4, 2)))
             # Empty lanes are parked as ``done``: the step freezes them
             # (gated bootstrap AND gated gather -- phase E) until a splice
             # brings them live.
@@ -269,6 +335,10 @@ class LanePool:
         self.peak_queue_depth = 0
         self._active_frac_sum = 0.0   # sum over dispatches of busy/tier_lanes
         self._retired_rows = 0        # rows_sampled of retired queries
+        # Per-shard slot residency of retired queries (phase G dispatch
+        # accounting; a single-device pool reports one shard).
+        self._shard_rows_retired = np.zeros(
+            (max(self.data_shards, 1),), np.int64)
 
     # -- admission ----------------------------------------------------------
     @property
@@ -416,6 +486,11 @@ class LanePool:
                 tier.occupant[lane] = None
                 self.retired += 1
                 self._retired_rows += rows
+                if self._layout is not None:
+                    self._shard_rows_retired += self._layout.shard_rows(
+                        filled[lane])
+                else:
+                    self._shard_rows_retired[0] += rows
                 n_retired += 1
         return n_retired
 
@@ -430,9 +505,28 @@ class LanePool:
             busy = tier.busy
             if not busy:
                 continue
-            tier.state = fused_step(
-                self._values, self._offsets, tier.state, tier.params,
-                num_ticks=self.ticks_per_sync, **self._spec)
+            if self._mesh is not None:
+                step = self._step_cache.get(self.ticks_per_sync)
+                if step is None:
+                    step = make_sharded_step(
+                        self._mesh, num_ticks=self.ticks_per_sync,
+                        **self._spec)
+                    self._step_cache[self.ticks_per_sync] = step
+                tier.state = step(self._values, tier.state, tier.params,
+                                  self._shard_spec)
+            elif self._layout is not None:
+                # Single-device run of the SAME shard layout (mesh=False):
+                # the sequential segment fold the mesh psum reproduces.
+                # seg_window passes through exactly as compiled for the
+                # mesh spec -- no ext_cap re-resolution in between.
+                tier.state = fused_step(
+                    self._values, self._offsets, tier.state, tier.params,
+                    self._shard_spec, num_ticks=self.ticks_per_sync,
+                    **self._spec)
+            else:
+                tier.state = fused_step(
+                    self._values, self._offsets, tier.state, tier.params,
+                    num_ticks=self.ticks_per_sync, **self._spec)
             self.dispatches += 1
             self.lane_ticks_busy += busy * self.ticks_per_sync
             self._active_frac_sum += busy / self.tier_lanes
@@ -494,10 +588,18 @@ class LanePool:
 
     def _apply_sample_key(self, sample_key: Array) -> None:
         self._sample_key = jnp.asarray(sample_key)
-        starts = self._offsets[:-1].astype(jnp.int32)
-        sizes = (self._offsets[1:] - self._offsets[:-1]).astype(jnp.int32)
-        slot_idx = counter_slot_table(
-            self._sample_key, starts, sizes, self._spec["n_cap"])
+        if self._layout is not None:
+            from ..core.sampling import sharded_slot_tables
+            slot_idx = sharded_slot_tables(
+                self._sample_key, self._layout,
+                local_rows=self._mesh is not None)
+            if self._mesh is not None:
+                slot_idx = core_mesh.put_sharded(self._mesh, slot_idx)
+        else:
+            starts = self._offsets[:-1].astype(jnp.int32)
+            sizes = (self._offsets[1:] - self._offsets[:-1]).astype(jnp.int32)
+            slot_idx = counter_slot_table(
+                self._sample_key, starts, sizes, self._spec["n_cap"])
         for tier in self._tiers:
             tier.params = tier.params._replace(slot_idx=slot_idx)
         self.sample_epochs += 1
@@ -509,12 +611,40 @@ class LanePool:
 
     def bucket_of(self, watermark: int) -> int:
         """The ESTIMATE bucket width a lane with ``watermark`` filled rows
-        rides at (the step's static ladder) -- what admission minimizes."""
-        widths = bucket_ladder(self._spec["n_cap"], self._spec["n_max"])
+        rides at (the step's static ladder) -- what admission minimizes.
+
+        A sharded pool's buckets cover SEGMENT fills, so the global
+        watermark is first translated through the layout's worst-case
+        per-shard share (a placement cost model only -- tiering changes
+        cost, never answers)."""
+        n_cap, n_max = self._spec["n_cap"], self._spec["n_max"]
+        if self._layout is not None:
+            seg_cap = self._layout.seg_cap
+            widths = bucket_ladder(seg_cap, min(n_max, seg_cap))
+            watermark = int(np.ceil(
+                watermark * self._layout.max_shard_frac()))
+        else:
+            widths = bucket_ladder(n_cap, n_max)
         for w in widths:
             if watermark <= w:
                 return w
         return widths[-1]
+
+    def shard_dispatch_rows(self) -> np.ndarray:
+        """(S,) per-shard slot residency: retired queries' shares plus the
+        currently-resident lanes' watermarks pushed through the layout's
+        ownership tables -- how the pool's gather/bootstrap work actually
+        split across devices (phase G accounting)."""
+        out = self._shard_rows_retired.copy()
+        for t in self._tiers:
+            for i, tk in enumerate(t.occupant):
+                if tk is None:
+                    continue
+                if self._layout is not None:
+                    out += self._layout.shard_rows(t.filled_host[i])
+                else:
+                    out[0] += int(t.filled_host[i].sum())
+        return out
 
     def stats(self) -> Dict[str, float]:
         cap = max(self.ticks * self.lanes, 1)
@@ -526,6 +656,8 @@ class LanePool:
         return {
             "lanes": self.lanes,
             "tiers": self.tiers,
+            "data_shards": self.data_shards,
+            "shard_rows": [int(x) for x in self.shard_dispatch_rows()],
             "ticks_per_sync": self.ticks_per_sync,
             "ticks": self.ticks,
             "dispatches": self.dispatches,

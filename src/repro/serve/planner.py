@@ -93,12 +93,18 @@ class Planner:
 
     def __init__(self, *, mode: Optional[Route] = None, window: int = 32,
                  cooldown: int = 32, pool_lanes: Optional[int] = None,
-                 pool_ticks_per_sync: Optional[int] = None):
+                 pool_ticks_per_sync: Optional[int] = None,
+                 data_shards: int = 1):
         if mode is not None and not isinstance(mode, Route):
             raise TypeError(f"mode must be a Route or None; got {mode!r}")
         self.mode = mode
         self.window = int(window)
         self.cooldown = int(cooldown)
+        # Mesh-aware tier sizing (phase G): a sharded pool's per-tick
+        # dispatch cost is near-constant in lane count at serving sample
+        # sizes, so the lane ceiling scales with the mesh -- capacity
+        # (lanes x resident rows) is what a data mesh buys.
+        self.data_shards = max(int(data_shards), 1)
         self.pool_lanes = None if pool_lanes is None else int(pool_lanes)
         self.pool_ticks_per_sync = (
             None if pool_ticks_per_sync is None else int(pool_ticks_per_sync))
@@ -150,7 +156,8 @@ class Planner:
         if self.pool_lanes is not None:
             return self.pool_lanes
         k = max(self._backlog, default=1)
-        lanes = max(2, min(self.MAX_LANES, (k + 1) // 2))
+        max_lanes = self.MAX_LANES * self.data_shards
+        lanes = max(2, min(max_lanes, (k + 1) // 2))
         lanes += lanes % 2          # even, so width tiers split cleanly
         return lanes
 

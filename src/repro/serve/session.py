@@ -112,7 +112,8 @@ class AQPSession:
                  reshuffle_every: int = 256,
                  use_kernel: "bool | str" = "auto",
                  planner: Optional[Planner] = None,
-                 pool_tiers: "int | str" = "auto"):
+                 pool_tiers: "int | str" = "auto",
+                 data_shards: int = 1, mesh=None):
         self.data = data
         self.store = SampleStore(data, seed=seed)
         self.engine = AQPEngine(data, B=B, n_min=n_min, n_max=n_max,
@@ -122,7 +123,12 @@ class AQPSession:
         self.max_iters, self.n_cap = max_iters, n_cap
         self.seed = seed
         self.use_kernel = resolve_use_kernel(use_kernel)
-        self.planner = planner if planner is not None else Planner()
+        # Phase G: a data mesh multiplies pool capacity; the planner's lane
+        # ceiling scales with it, the rest of the host scheduler is unaware.
+        self.data_shards = max(int(data_shards), 1)
+        self.mesh = mesh
+        self.planner = (planner if planner is not None
+                        else Planner(data_shards=self.data_shards))
         self.pool_tiers = pool_tiers
         self.key = jax.random.PRNGKey(seed)
         self._offsets = jnp.asarray(data.offsets)
@@ -284,7 +290,8 @@ class AQPSession:
             n_max=self.n_max, max_iters=self.max_iters, n_cap=self.n_cap,
             use_kernel=self.use_kernel, seed=self.seed,
             sample_key=self._sample_key, ticks_per_sync=ticks_per_sync,
-            tiers=self.pool_tiers)
+            tiers=self.pool_tiers, data_shards=self.data_shards,
+            mesh=self.mesh)
         self.planner.built_pool(lanes)
         return pool
 
