@@ -99,6 +99,31 @@ def _serve_all(services, queries, repeats: int, on_warm=None):
     return out
 
 
+def _open_loop(sess: AQPSession, specs, gaps, deadline_s: float):
+    """Drive one open-loop pass: submit ``specs[i]`` at ``cumsum(gaps)[i]``
+    (seeded offered load, wall-clock submit times), pump until drained.
+    Returns (responses in submit order, wall seconds)."""
+    q = len(specs)
+    start = time.perf_counter()
+    arrivals = start + np.cumsum(gaps)
+    tickets = []
+    i = 0
+    while i < q or sess.in_flight:
+        now = time.perf_counter()
+        while i < q and now >= arrivals[i]:
+            f, e = specs[i]
+            tickets.append(sess.submit(
+                Request(query=Query(func=f, epsilon=e),
+                        deadline_s=deadline_s)))
+            i += 1
+        if i < q and not sess.in_flight and now < arrivals[i]:
+            time.sleep(arrivals[i] - now)   # idle until the next arrival
+            continue
+        sess.pump()
+    wall = time.perf_counter() - start
+    return [sess.poll(t) for t in tickets], wall
+
+
 def run_open_loop(emit: CsvEmitter, *, full: bool = False,
                   smoke: bool = False, seed: int = 7):
     """Open-loop serving: seeded Poisson arrivals into the AQPSession.
@@ -152,24 +177,7 @@ def run_open_loop(emit: CsvEmitter, *, full: bool = False,
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(scale=1.0 / rate_qps, size=q)
     rows0, disp0 = sess.rows_touched, sess.fused_dispatches
-    start = time.perf_counter()
-    arrivals = start + np.cumsum(gaps)
-    tickets = []
-    i = 0
-    while i < q or sess.in_flight:
-        now = time.perf_counter()
-        while i < q and now >= arrivals[i]:
-            f, e = specs[i]
-            tickets.append(sess.submit(
-                Request(query=Query(func=f, epsilon=e),
-                        deadline_s=deadline_s)))
-            i += 1
-        if i < q and not sess.in_flight and now < arrivals[i]:
-            time.sleep(arrivals[i] - now)   # idle until the next arrival
-            continue
-        sess.pump()
-    wall = time.perf_counter() - start
-    rs = [sess.poll(t) for t in tickets]
+    rs, wall = _open_loop(sess, specs, gaps, deadline_s)
 
     lat = np.asarray([r.latency_s for r in rs])
     p50, p95, p99 = np.percentile(lat, [50, 95, 99])
@@ -192,6 +200,107 @@ def run_open_loop(emit: CsvEmitter, *, full: bool = False,
         "active_frac": round(pool_stats["active_lane_fraction"], 3),
         "rows_per_tick": int(pool_stats["rows_per_tick"]),
         "all_success": ok})
+
+
+def run_cache(emit: CsvEmitter, *, full: bool = False, smoke: bool = False,
+              seed: int = 13):
+    """Phase-H warm-cache benchmark: repeat-heavy open-loop traffic.
+
+    Real dashboards re-issue a small set of query templates with Zipfian
+    popularity; the MISS pilot ramp is pure re-learning on every repeat.
+    This section drives the SAME seeded Zipfian arrival sequence (Poisson
+    gaps at ~60% of the cold pool's saturated capacity) into two sessions
+    -- ``warm_cache=False`` and ``warm_cache=True`` -- and reports what the
+    cache buys at equal offered load:
+
+      * ``hit_rate``            -- cache hits / lookups over the pass,
+      * ``p50_ms`` / ``p99_ms`` -- real submit->completion latency (exact
+        repeats are replayed at submit with zero dispatches, so the warm
+        p50 collapses once repeats dominate),
+      * ``dispatches_per_query`` -- the O(k_iters) -> O(1) story,
+      * ``warm_speedup_p50``    -- cold p50 / warm p50 (the acceptance
+        number: >= 3x on this repeat-heavy mix).
+    """
+    q = 24 if smoke else 96
+    rows = 40_000 if smoke else 120_000
+    n_cap = 1 << 12 if smoke else (1 << 14 if full else 1 << 13)
+    lanes = 2 if smoke else 8
+    n_templates = 6 if smoke else 12
+    data = make_grouped(["normal", "exp"], rows, seed=5, biases=[4.0, 2.0])
+    scale_max = float(np.max(data.scale))
+    templates = []
+    for i in range(n_templates):
+        f = ("avg", "var", "avg", "sum")[i % 4]
+        e = 0.12 + 0.02 * (i % 5)
+        templates.append((f, e * scale_max if f == "sum" else e))
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n_templates + 1, dtype=np.float64)
+    pop = ranks ** -1.1                     # Zipf(1.1) template popularity
+    specs = [templates[i] for i in
+             rng.choice(n_templates, size=q, p=pop / pop.sum())]
+
+    def make_sess(warm: bool) -> AQPSession:
+        return AQPSession(
+            data, n_cap=n_cap, warm_cache=warm,
+            planner=Planner(mode=Route.POOL, pool_lanes=lanes), **SKW)
+
+    # Calibrate offered load on the COLD path (both sessions then see the
+    # identical arrival sequence; the cache must win at equal load, not by
+    # shrinking its own queue).
+    cal = make_sess(False)
+    for f, e in templates:                  # compile pass: every template
+        cal.submit(Request(query=Query(func=f, epsilon=e)))
+    cal.drain()
+    t0 = time.perf_counter()
+    for f, e in specs:
+        cal.submit(Request(query=Query(func=f, epsilon=e)))
+    cal.drain()
+    per_q = (time.perf_counter() - t0) / q
+    gaps = np.random.default_rng(seed + 1).exponential(
+        scale=per_q / 0.6, size=q)
+    deadline_s = 8.0 * per_q
+
+    out = {}
+    for label, warm in (("cold", False), ("warm", True)):
+        sess = make_sess(warm)
+        for f, e in templates[:2]:          # compile pass
+            sess.submit(Request(query=Query(func=f, epsilon=e)))
+        sess.drain()
+        if warm:
+            sess.cache.rotate_epoch()       # timed pass starts empty
+        d0, rows0 = sess.fused_dispatches, sess.rows_touched
+        rs, _ = _open_loop(sess, specs, gaps, deadline_s)
+        lat = np.asarray([r.latency_s for r in rs])
+        ok = all(r.success for r in rs)
+        if not ok:
+            print(f"warning: cache/{label} missed an error bound",
+                  flush=True)
+        out[label] = dict(
+            lat=lat, disp=sess.fused_dispatches - d0,
+            rows=sess.rows_touched - rows0, ok=ok, sess=sess)
+
+    cold, warm = out["cold"], out["warm"]
+    cstats = warm["sess"].cache.stats()
+    lookups = max(cstats["hits"] + cstats["misses"], 1)
+    for label, d in out.items():
+        p50, p99 = np.percentile(d["lat"], [50, 99])
+        derived = {
+            "rows_touched": d["rows"], "dispatches": d["disp"],
+            "queries": q, "lanes": lanes, "templates": n_templates,
+            "p50_ms": round(p50 * 1e3, 3), "p99_ms": round(p99 * 1e3, 3),
+            "dispatches_per_query": round(d["disp"] / q, 3),
+            "all_success": d["ok"]}
+        if label == "warm":
+            derived.update({
+                "hit_rate": round(cstats["hits"] / lookups, 3),
+                "exact_hits": cstats["exact_hits"],
+                "warm_hits": cstats["warm_hits"],
+                "cache_served": warm["sess"].cache_served,
+                "warm_verify_failures": warm["sess"].warm_verify_failures,
+                "warm_speedup_p50": round(
+                    float(np.percentile(cold["lat"], 50))
+                    / max(float(p50), 1e-9), 2)})
+        emit.add(f"serve/cache-{label}", float(d["lat"].mean()), derived)
 
 
 def run_sharded(emit: CsvEmitter, *, full: bool = False, smoke: bool = False,

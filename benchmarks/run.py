@@ -27,7 +27,9 @@ SERVE_JSON_KEYS = (
     "bench", "us_per_call", "rows_touched", "dispatches", "speedup_vs_loop",
     "active_frac", "rows_per_tick", "p50_ms", "p95_ms", "p99_ms", "slo_miss",
     "queries", "lanes", "data_shards", "qps", "speedup_vs_1dev",
-    "shard_rows", "parity_bitwise_vs_1dev", "parity_solo_fused_l2miss")
+    "shard_rows", "parity_bitwise_vs_1dev", "parity_solo_fused_l2miss",
+    "hit_rate", "dispatches_per_query", "warm_speedup_p50", "cache_served",
+    "warm_verify_failures")
 
 
 def _run_fig1(emit, args):
@@ -83,6 +85,11 @@ def _run_distributed(emit, args):
                                  devices=args.devices)
 
 
+def _run_cache(emit, args):
+    from . import bench_serve_pool
+    bench_serve_pool.run_cache(emit, full=args.full, smoke=args.smoke)
+
+
 # The full section registry; --only names are validated against it.
 SECTIONS = {
     "fig1": _run_fig1,
@@ -95,6 +102,7 @@ SECTIONS = {
     "fused": _run_fused,
     "serve": _run_serve,
     "distributed": _run_distributed,
+    "cache": _run_cache,
 }
 
 
@@ -159,9 +167,10 @@ def main() -> None:
                 json.dump(emit.json_rows("fused/"), fh, indent=2)
             print("wrote BENCH_fused.json", flush=True)
             wrote_json = True
-    if args.json and any(s in sections for s in ("serve", "distributed")):
-        # serve + distributed share one artifact (both emit serve/ rows);
-        # written once, after every selected section has run.
+    if args.json and any(s in sections
+                         for s in ("serve", "distributed", "cache")):
+        # serve + distributed + cache share one artifact (all emit serve/
+        # rows); written once, after every selected section has run.
         with open("BENCH_serve.json", "w") as fh:
             json.dump(emit.json_rows("serve/", keys=SERVE_JSON_KEYS),
                       fh, indent=2)

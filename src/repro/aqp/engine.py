@@ -25,7 +25,12 @@ from ..core import estimators, extensions
 from ..core.framework import MissTrace
 from ..core.l2miss import MissConfig, run_l2miss
 from ..core.sampling import GroupedData, SampleStore
-from .query import Query
+from .query import Query, compile_predicate
+
+
+def _predicate_fn(pred):
+    """Opaque callables run as-is; structured ASTs compile to a row filter."""
+    return compile_predicate(pred) if isinstance(pred, tuple) else pred
 
 
 @dataclasses.dataclass
@@ -81,7 +86,7 @@ class AQPEngine:
         store = self.store
         if q.predicate is not None:
             vals = np.asarray(data.values)
-            ind = q.predicate(vals).astype(np.float32)
+            ind = _predicate_fn(q.predicate)(vals).astype(np.float32)
             data = GroupedData(ind, data.offsets.copy(), data.scale.copy())
             # Same permutations, different column: the predicate query reuses
             # the store's row choices (and keeps its nested-prefix guarantee).
@@ -111,6 +116,6 @@ class AQPEngine:
         data = self.data
         if q.predicate is not None:
             vals = np.asarray(data.values)
-            ind = q.predicate(vals).astype(np.float32)
+            ind = _predicate_fn(q.predicate)(vals).astype(np.float32)
             data = GroupedData(ind, data.offsets.copy(), data.scale.copy())
         return exact_answer(data, estimators.get(q.func))

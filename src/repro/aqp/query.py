@@ -8,14 +8,206 @@ measure column to an indicator before estimation (paper SS2.1).
 ``epsilon_rel`` expresses the bound relative to the true result magnitude
 (the paper's experiments use relative bounds; resolved by the engine
 against a pilot estimate).
+
+Predicates come in two forms: an opaque ``Callable`` over the ``(N, c)``
+values array (the original surface), or a structured AST of nested tuples
+-- ``("col", j)`` / ``("lit", x)`` leaves under comparison and boolean
+nodes (see :func:`canonicalize_predicate`).  The AST form is what makes a
+predicate *cacheable*: two semantically identical predicates (operand
+order, int vs float literals, nested conjunctions) canonicalize to the
+same signature, so the serving layer's warm-start cache (DESIGN.md SS7
+phase H) can recognize a repeat.  Opaque callables still execute but have
+no stable signature (``predicate_signature`` returns None) and therefore
+never hit the cache.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Callable, Optional
+import math
+from typing import Callable, Optional, Tuple, Union
+
+import numpy as np
 
 METRICS = ("l2", "linf", "l1", "lp", "order", "diff")
+
+# -- structured predicates ---------------------------------------------------
+# Grammar (nested tuples; a bare int/float is shorthand for ("lit", x)):
+#   expr := ("col", j) | ("lit", x)
+#         | (cmp, expr, expr)          cmp in {"<", "<=", ">", ">=", "==", "!="}
+#         | ("and"|"or", expr, ...)    n-ary, n >= 1
+#         | ("not", expr)
+_CMP_OPS = ("<", "<=", ">", ">=", "==", "!=")
+# Orientation normal form: a > b == b < a, so only "<"/"<=" survive
+# canonicalization and the operand order carries the direction.
+_FLIP = {">": "<", ">=": "<="}
+# Unordered comparisons: operand order is semantically free, so it is
+# sorted away.
+_SYMMETRIC = ("==", "!=")
+_BOOL_OPS = ("and", "or")
+
+PredicateAST = Tuple
+Predicate = Union[Callable, PredicateAST]
+
+
+def canonicalize_predicate(pred) -> PredicateAST:
+    """Reduce a predicate AST to its canonical form (raises on malformed).
+
+    Normalizations (each removes one source of signature instability):
+      * numeric literals coerce to float (``("lit", 5)`` == ``("lit", 5.0)``),
+      * ``>`` / ``>=`` flip into ``<`` / ``<=`` with swapped operands,
+      * ``==`` / ``!=`` operands sort (operand order is semantically free),
+      * ``and`` / ``or`` flatten nested same-op children, dedupe, and sort;
+        single-child nodes collapse to the child,
+      * ``not not x`` collapses to ``x``.
+    The result is a hashable nested tuple -- the predicate's signature.
+    """
+    if isinstance(pred, bool):
+        raise ValueError(f"bare bool {pred!r} is not a predicate expression")
+    if isinstance(pred, (int, float, np.integer, np.floating)):
+        return ("lit", float(pred))
+    if not isinstance(pred, tuple) or not pred or not isinstance(pred[0], str):
+        raise ValueError(f"malformed predicate node: {pred!r}")
+    op = pred[0]
+    if op == "lit":
+        if len(pred) != 2 or not isinstance(
+                pred[1], (int, float, np.integer, np.floating)) or isinstance(
+                pred[1], bool):
+            raise ValueError(f"malformed lit node: {pred!r}")
+        return ("lit", float(pred[1]))
+    if op == "col":
+        if len(pred) != 2 or not isinstance(
+                pred[1], (int, np.integer)) or isinstance(pred[1], bool):
+            raise ValueError(f"malformed col node: {pred!r}")
+        if pred[1] < 0:
+            raise ValueError(f"col index must be >= 0: {pred!r}")
+        return ("col", int(pred[1]))
+    if op == "not":
+        if len(pred) != 2:
+            raise ValueError(f"'not' takes one operand: {pred!r}")
+        inner = canonicalize_predicate(pred[1])
+        if inner[0] in ("lit", "col"):
+            raise ValueError(f"'not' needs a boolean operand: {pred!r}")
+        if inner[0] == "not":
+            return inner[1]
+        return ("not", inner)
+    if op in _CMP_OPS:
+        if len(pred) != 3:
+            raise ValueError(f"comparison takes two operands: {pred!r}")
+        a, b = (canonicalize_predicate(x) for x in pred[1:])
+        for side in (a, b):
+            if side[0] not in ("lit", "col"):
+                raise ValueError(
+                    f"comparison operands must be col/lit: {pred!r}")
+        if op in _FLIP:
+            op, a, b = _FLIP[op], b, a
+        elif op in _SYMMETRIC and repr(b) < repr(a):
+            a, b = b, a
+        return (op, a, b)
+    if op in _BOOL_OPS:
+        if len(pred) < 2:
+            raise ValueError(f"{op!r} takes at least one operand: {pred!r}")
+        terms = []
+        for t in pred[1:]:
+            c = canonicalize_predicate(t)
+            if c[0] in ("lit", "col"):
+                raise ValueError(f"{op!r} needs boolean operands: {pred!r}")
+            # Flatten nested same-op nodes: and(and(a, b), c) == and(a, b, c).
+            terms.extend(c[1:] if c[0] == op else (c,))
+        uniq = sorted(set(terms), key=repr)
+        if len(uniq) == 1:
+            return uniq[0]
+        return (op,) + tuple(uniq)
+    raise ValueError(f"unknown predicate op {op!r} in {pred!r}")
+
+
+def predicate_signature(pred) -> Optional[PredicateAST]:
+    """Stable signature of a predicate: ``()`` for none, the canonical AST
+    for a structured predicate, None for an opaque callable (uncacheable)."""
+    if pred is None:
+        return ()
+    if isinstance(pred, tuple):
+        return canonicalize_predicate(pred)
+    return None
+
+
+def compile_predicate(ast: PredicateAST) -> Callable:
+    """Compile a (canonical or raw) predicate AST to a numpy row filter:
+    ``f(values (N, c)) -> bool (N,)`` -- the callable contract the engine's
+    indicator transform expects."""
+    ast = canonicalize_predicate(ast)
+
+    def ev(node, vals):
+        op = node[0]
+        if op == "lit":
+            return node[1]
+        if op == "col":
+            return vals[:, node[1]]
+        if op == "not":
+            return ~ev(node[1], vals)
+        if op in _CMP_OPS:
+            a, b = ev(node[1], vals), ev(node[2], vals)
+            return {"<": np.less, "<=": np.less_equal, "==": np.equal,
+                    "!=": np.not_equal}[op](a, b)
+        terms = [ev(t, vals) for t in node[1:]]
+        fold = np.logical_and if op == "and" else np.logical_or
+        out = terms[0]
+        for t in terms[1:]:
+            out = fold(out, t)
+        return out
+
+    def run(vals):
+        vals = np.asarray(vals)
+        out = ev(ast, vals)
+        return np.broadcast_to(np.asarray(out, bool), (vals.shape[0],))
+
+    return run
+
+
+# -- cache signature ---------------------------------------------------------
+EPS_BUCKET_RATIO = 1.25
+
+
+def epsilon_bucket(eps: float, ratio: float = EPS_BUCKET_RATIO) -> int:
+    """Geometric bucket index of an error bound: eps in [r^k, r^(k+1)).
+
+    Bucketing is what lets *near*-repeats share a warm-start entry: the
+    fitted log-log coefficients are epsilon-independent (the model predicts
+    n* for ANY bound), so any entry of the same query shape is a usable
+    prior -- the bucket just bounds how far the lookup generalizes before
+    it prefers a miss.  The small epsilon nudge stabilizes values sitting
+    exactly on a bucket edge (e.g. 0.25 with ratio 1.25).
+    """
+    if not eps > 0:
+        raise ValueError(f"epsilon must be positive; got {eps!r}")
+    return int(math.floor(math.log(eps) / math.log(ratio) + 1e-9))
+
+
+def cache_signature(query: "Query", *, dataset_epoch: int = 0
+                    ) -> Optional[Tuple[Tuple, int]]:
+    """``(shape, epsilon_bucket)`` identity of a query for the warm cache.
+
+    ``shape`` is the epsilon-free part -- (dataset epoch, func, predicate
+    signature, delta, metric, lp, bound kind) -- so the cache can fall back
+    to a *different* bucket of the same shape for coefficient-only hits.
+    (The issue's "column" slot is the predicate signature here: GroupedData
+    carries a single measure column, so the column references live inside
+    the predicate AST.)  Returns None when the query has no stable identity
+    (opaque callable predicate) -- such queries never hit the cache.
+    """
+    pred_sig = predicate_signature(query.predicate)
+    if pred_sig is None:
+        return None
+    if query.metric == "order":
+        eps, kind = 1.0, "order"
+    elif query.epsilon is not None:
+        eps, kind = float(query.epsilon), "abs"
+    else:
+        eps, kind = float(query.epsilon_rel), "rel"
+    shape = (int(dataset_epoch), query.func, pred_sig, float(query.delta),
+             query.metric, None if query.lp is None else float(query.lp),
+             kind)
+    return shape, epsilon_bucket(eps)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,12 +217,14 @@ class Query:
     epsilon_rel: Optional[float] = None    # relative bound (vs pilot |theta|)
     delta: float = 0.05
     metric: str = "l2"
-    predicate: Optional[Callable] = None   # row predicate for COUNT queries
+    predicate: Optional[Predicate] = None  # row predicate: callable | AST
     lp: Optional[float] = None             # the p of metric="lp" (p >= 1)
 
     def __post_init__(self):
         if self.metric not in METRICS:
             raise ValueError(f"metric {self.metric!r} not in {METRICS}")
+        if isinstance(self.predicate, tuple):
+            canonicalize_predicate(self.predicate)   # validate eagerly
         if self.metric == "lp":
             if self.lp is None or self.lp < 1:
                 raise ValueError(

@@ -133,6 +133,16 @@ class LaneParams(NamedTuple):
     ``slot_idx`` is the counter-PRNG slot->row binding -- shape ``(m,
     n_cap)`` when all lanes share one sample key (the server epoch policy)
     or ``(q, m, n_cap)`` for per-lane bindings.
+
+    Warm start (DESIGN.md SS7 phase H): a lane with ``warm[i]`` set skips
+    the two-point init design entirely -- its first tick jumps straight to
+    the cached prediction ``warm_n0[i]`` and its FIT carry is seeded with
+    the prior coefficients ``warm_beta[i]``.  The normal TEST/extend logic
+    is the verification: if the one-tick ESTIMATE confirms the bound the
+    lane retires in a single sync; a stale prediction refines via the
+    cached-coefficient local model until the lane has accumulated its own
+    ``l``-deep profile, after which the ordinary WLS fit takes over.  Cold
+    lanes carry all-False / zero rows here and behave exactly as before.
     """
     scale: Array        # (q, m) per-group |D|_i scale (1.0 for consistent f)
     epsilons: Array     # (q,)
@@ -140,6 +150,9 @@ class LaneParams(NamedTuple):
     est_fids: Array     # (q,) int32 moment-family indices (est_name=None)
     boot_base: Array    # (q,) uint32 per-lane bootstrap seed base
     slot_idx: Array     # (m, n_cap) shared | (q, m, n_cap) per lane
+    warm: Array         # (q,) bool: lane starts from a cached prediction
+    warm_n0: Array      # (q, m) int32 predicted n* (the tick-0 jump target)
+    warm_beta: Array    # (q, m+1) f32 cached error-model coefficients
 
 
 def _bucket_widths(n_cap: int, base: int) -> Tuple[int, ...]:
@@ -212,6 +225,31 @@ def lane_boot_seed(key: Array) -> Array:
                            jnp.uint32)
 
 
+def resolve_warm_rows(
+    q: int,
+    m: int,
+    warm: Optional[Array] = None,
+    warm_n0: Optional[Array] = None,
+    warm_beta: Optional[Array] = None,
+) -> Tuple[Array, Array, Array]:
+    """Concrete warm-start leaves for :class:`LaneParams` (cold when unset).
+
+    ``warm=None`` infers the mask: all-True when a prediction was supplied,
+    all-False otherwise.  The leaves are always materialized (never None)
+    so cold and warm pools share one pytree structure -- and therefore one
+    compiled step/splice program.
+    """
+    if warm is None:
+        warm = jnp.full((q,), warm_n0 is not None, bool)
+    else:
+        warm = jnp.asarray(warm, bool)
+    warm_n0 = (jnp.zeros((q, m), jnp.int32) if warm_n0 is None
+               else jnp.asarray(warm_n0, jnp.int32))
+    warm_beta = (jnp.zeros((q, m + 1), jnp.float32) if warm_beta is None
+                 else jnp.asarray(warm_beta, jnp.float32))
+    return warm, warm_n0, warm_beta
+
+
 def make_lane_params(
     offsets: Array,
     scale: Array,
@@ -222,13 +260,17 @@ def make_lane_params(
     est_fids: Optional[Array] = None,
     *,
     n_cap: int,
+    warm: Optional[Array] = None,
+    warm_n0: Optional[Array] = None,
+    warm_beta: Optional[Array] = None,
 ) -> LaneParams:
     """Build the per-lane query parameters (slot tables + seed bases).
 
     ``sample_keys``: ``None`` derives one slot->row binding per lane from
     ``keys``; shape ``(2,)`` shares ONE binding (and slot table) across all
     lanes -- the server's shared-prefix epoch policy; shape ``(q, 2)`` pins
-    one per lane.
+    one per lane.  ``warm``/``warm_n0``/``warm_beta`` seed warm-started
+    lanes (:func:`resolve_warm_rows`); omitted = every lane cold.
     """
     starts = offsets[:-1].astype(jnp.int32)
     sizes = (offsets[1:] - offsets[:-1]).astype(jnp.int32)
@@ -246,11 +288,12 @@ def make_lane_params(
     boot_base = jax.vmap(lane_boot_seed)(keys)                 # (q,)
     if est_fids is None:
         est_fids = jnp.zeros((q,), jnp.int32)
+    w, wn0, wb = resolve_warm_rows(q, sizes.shape[0], warm, warm_n0, warm_beta)
     return LaneParams(
         scale=jnp.asarray(scale), epsilons=jnp.asarray(epsilons, jnp.float32),
         deltas=jnp.asarray(deltas, jnp.float32),
         est_fids=jnp.asarray(est_fids, jnp.int32), boot_base=boot_base,
-        slot_idx=slot_idx)
+        slot_idx=slot_idx, warm=w, warm_n0=wn0, warm_beta=wb)
 
 
 def init_lane_state(
@@ -290,16 +333,27 @@ def lane_active(state: LaneState, max_iters: int) -> Array:
 
 
 def _fit_predict(s: LaneState, p: LaneParams, *, tau: float,
-                 growth_cap: float, max_iters: int):
+                 growth_cap: float, max_iters: int, l: int):
     """FIT + PREDICT for every lane (shared by the solo and sharded bodies).
 
     Returns ``(n_pred (q, m), beta (q, m+1), r2 (q,), failed_fit (q,))``.
+
+    Warm lanes (phase H) override the first ``l`` ticks: tick 0 jumps to
+    the cached ``warm_n0`` prediction, and if that one-tick verification
+    misses the bound, later warm ticks refine through the cached
+    coefficients' local model (same ratio**(1/slope) correction as the cold
+    loop) -- the WLS fit over a 0..l-1-row profile is meaningless, and a
+    fit "failure" there must not kill the lane (``failed_fit`` is shielded
+    while warm).  From tick ``l`` the lane has a full profile of its own
+    warm trajectory and the ordinary fit takes over.
     """
     log_eps = jnp.log(p.epsilons.astype(jnp.float32))
     row_valid = (jnp.arange(max_iters)[None, :]
                  < s.k[:, None]).astype(jnp.float32)           # (q, max_iters)
+    use_warm = p.warm & (s.k < l)                              # (q,)
 
-    def lane_predict(prof_n, prof_loge, rv, e_lane, n_cur, le, eps_lane):
+    def lane_predict(prof_n, prof_loge, rv, e_lane, n_cur, le, eps_lane,
+                     uw, k_lane, wn0, wbeta):
         n_hat, fit = error_model.fit_and_predict(
             prof_n, prof_loge, rv, le, tau)
         n_next = jnp.ceil(n_hat).astype(jnp.int32)
@@ -316,10 +370,25 @@ def _fit_predict(s: LaneState, p: LaneParams, *, tau: float,
         n_next = jnp.minimum(n_next, cap)
         n_next = jnp.maximum(n_next, n_cur + 1)
         failed = fit.status == error_model.DIAG_FAILURE
-        return n_next, fit.beta, fit.r2, failed
+        # Warm override: tick 0 takes the cached prediction wholesale; a
+        # stale prediction extends via the cached slope (e_lane is the
+        # measured error AT the cached n, so the ratio correction is exact
+        # under the model).  The growth guard still applies.
+        wslope = jnp.maximum(jnp.sum(wbeta[1:]), 1e-3)
+        wlocal = jnp.ceil(
+            n_cur.astype(jnp.float32) * ratio ** (1.0 / wslope)
+        ).astype(jnp.int32)
+        wnext = jnp.where(
+            k_lane == 0, wn0,
+            jnp.minimum(jnp.maximum(wlocal, n_cur + 1), cap))
+        n_out = jnp.where(uw, wnext, n_next)
+        beta_out = jnp.where(uw, wbeta, fit.beta)
+        r2_out = jnp.where(uw, 0.0, fit.r2)
+        return n_out, beta_out, r2_out, failed & ~uw
 
     return jax.vmap(lane_predict)(
-        s.prof_n, s.prof_loge, row_valid, s.e, s.n_cur, log_eps, p.epsilons)
+        s.prof_n, s.prof_loge, row_valid, s.e, s.n_cur, log_eps, p.epsilons,
+        use_warm, s.k, p.warm_n0, p.warm_beta)
 
 
 def _lane_epilogue(s: LaneState, p: LaneParams, *, max_iters, active,
@@ -398,8 +467,11 @@ def _step_body(
     phase = (s.k[:, None] + jnp.arange(m)[None, :]) % l        # (q, m)
     n_init = jnp.where(phase < l_min, n_min, n_max).astype(jnp.int32)
     n_pred, beta, r2, failed_fit = _fit_predict(
-        s, p, tau=tau, growth_cap=growth_cap, max_iters=max_iters)
-    init_phase = s.k < l                                       # (q,)
+        s, p, tau=tau, growth_cap=growth_cap, max_iters=max_iters, l=l)
+    # Warm lanes (phase H) skip the init design: every tick -- the first
+    # included -- takes the prediction branch, whose first-l-ticks values
+    # _fit_predict already overrode with the cached-coefficient schedule.
+    init_phase = (s.k < l) & ~p.warm                           # (q,)
     n_vec = jnp.where(init_phase[:, None], n_init, n_pred)
     n_vec = jnp.clip(n_vec, 1, jnp.minimum(sizes, n_cap)[None, :])
     # Complete-sample clamp: one iteration can extend the resident prefix
@@ -637,8 +709,11 @@ def _sharded_step_body(
     phase = (s.k[:, None] + jnp.arange(m)[None, :]) % l        # (q, m)
     n_init = jnp.where(phase < l_min, n_min, n_max).astype(jnp.int32)
     n_pred, beta, r2, failed_fit = _fit_predict(
-        s, p, tau=tau, growth_cap=growth_cap, max_iters=max_iters)
-    init_phase = s.k < l                                       # (q,)
+        s, p, tau=tau, growth_cap=growth_cap, max_iters=max_iters, l=l)
+    # Phase H: warm lanes ride the prediction branch from tick 0 (see the
+    # solo body); the cross-shard growth clamp below spreads an oversized
+    # cached jump over extra ticks exactly as it does a cold PREDICT jump.
+    init_phase = (s.k < l) & ~p.warm                           # (q,)
     n_vec = jnp.where(init_phase[:, None], n_init, n_pred)
     n_vec = jnp.clip(n_vec, 1, spec.cap_groups[None, :])
 
@@ -794,6 +869,9 @@ def make_sharded_lane_params(
     est_fids: Optional[Array] = None,
     *,
     local_rows: bool,
+    warm: Optional[Array] = None,
+    warm_n0: Optional[Array] = None,
+    warm_beta: Optional[Array] = None,
 ) -> LaneParams:
     """Per-lane parameters for the sharded step: stacked per-shard tables.
 
@@ -813,11 +891,13 @@ def make_sharded_lane_params(
     boot_base = jax.vmap(lane_boot_seed)(keys)
     if est_fids is None:
         est_fids = jnp.zeros((q,), jnp.int32)
+    m = layout.cap_groups.shape[0]
+    w, wn0, wb = resolve_warm_rows(q, m, warm, warm_n0, warm_beta)
     return LaneParams(
         scale=jnp.asarray(scale), epsilons=jnp.asarray(epsilons, jnp.float32),
         deltas=jnp.asarray(deltas, jnp.float32),
         est_fids=jnp.asarray(est_fids, jnp.int32), boot_base=boot_base,
-        slot_idx=slot_idx)
+        slot_idx=slot_idx, warm=w, warm_n0=wn0, warm_beta=wb)
 
 
 _SHARD_STEP_STATICS = (
@@ -839,13 +919,24 @@ def make_sharded_step(mesh, *, num_ticks: int = 1, **statics):
     Memoized on ``(mesh, num_ticks, statics)``: callers that rebuild pools
     (benchmarks, serving rebuilds) share ONE jitted program instead of
     recompiling per instance -- a mesh step compile is seconds, a pool
-    lifetime often is not.
+    lifetime often is not.  The memo is a small LRU (a long-lived server
+    cycling many pool configurations must not pin every program it ever
+    compiled); its occupancy is observable via
+    :func:`sharded_step_cache_size` (surfaced in ``LanePool.stats()``).
     """
     return _make_sharded_step(mesh, num_ticks,
                               tuple(sorted(statics.items())))
 
 
-@functools.lru_cache(maxsize=None)
+def sharded_step_cache_size() -> int:
+    """Entries resident in the :func:`make_sharded_step` memo LRU."""
+    return _make_sharded_step.cache_info().currsize
+
+
+_SHARDED_STEP_CACHE_MAX = 16
+
+
+@functools.lru_cache(maxsize=_SHARDED_STEP_CACHE_MAX)
 def _make_sharded_step(mesh, num_ticks, statics_items):
     statics = dict(statics_items)
     from jax.experimental.shard_map import shard_map
@@ -858,7 +949,8 @@ def _make_sharded_step(mesh, num_ticks, statics_items):
         e=PS(), theta=PS(), done=PS(), failed=PS(), beta=PS(), r2=PS())
     pr_specs = LaneParams(
         scale=PS(), epsilons=PS(), deltas=PS(), est_fids=PS(),
-        boot_base=PS(), slot_idx=PS("data", None, None))
+        boot_base=PS(), slot_idx=PS("data", None, None),
+        warm=PS(), warm_n0=PS(), warm_beta=PS())
     # alloc replicated: every device needs the full stack for the local
     # growth clamp (and its own shard's table via axis_index).
     sp_specs = ShardSpec(alloc=PS(), cap_groups=PS())
@@ -1014,11 +1106,13 @@ def _sharded_lanes_closed(
     """Closed-loop driver over :func:`_sharded_step_body` (solo emulation)."""
     m = shard_spec.cap_groups.shape[0]
     boot_base = jax.vmap(lane_boot_seed)(keys)
+    q = epsilons.shape[0]
+    w, wn0, wb = resolve_warm_rows(q, m, None, None, None)
     params = LaneParams(
         scale=jnp.asarray(scale), epsilons=jnp.asarray(epsilons, jnp.float32),
         deltas=jnp.asarray(deltas, jnp.float32),
         est_fids=jnp.asarray(est_fids, jnp.int32), boot_base=boot_base,
-        slot_idx=slot_tables)
+        slot_idx=slot_tables, warm=w, warm_n0=wn0, warm_beta=wb)
     p_dim = (get_estimator(est_name).out_dim(values.shape[1])
              if est_name is not None else 1)
     state0 = init_lane_state(
@@ -1045,6 +1139,8 @@ def fused_l2miss_lanes(
     deltas: Array,        # (q,)
     sample_keys: Optional[Array] = None,  # None | (2,) shared | (q, 2)
     est_fids: Optional[Array] = None,     # (q,) when est_name is None
+    warm_n0: Optional[Array] = None,      # (q, m) warm-start predictions
+    warm_beta: Optional[Array] = None,    # (q, m+1) cached coefficients
     *,
     data_shards: int = 1,
     shard_layout: Optional["sampling.ShardLayout"] = None,
@@ -1071,7 +1167,19 @@ def fused_l2miss_lanes(
     ``(2,)`` sample key (defaults to ``keys[0]`` when q == 1) and the
     adaptive poisson path; ``shard_layout`` (optional) skips rebuilding the
     host layout tables, and ``ext_cap`` becomes the per-segment window.
+
+    ``warm_n0``/``warm_beta`` (phase H) start every lane from a cached
+    prediction instead of the init design -- the closed-loop twin of a
+    pool's warm splice, used by the warm-parity tests.  Unsharded path
+    only; a sharded pool takes warm rows through its splice instead.
     """
+    if warm_n0 is not None or warm_beta is not None:
+        if (warm_n0 is None) != (warm_beta is None):
+            raise ValueError("warm_n0 and warm_beta come together")
+        if data_shards > 1:
+            raise ValueError(
+                "warm start on the closed sharded loop is not supported; "
+                "use a sharded LanePool splice instead")
     if data_shards > 1:
         if backend != "poisson" or not adaptive:
             raise ValueError(
@@ -1102,6 +1210,7 @@ def fused_l2miss_lanes(
             use_kernel=use_kernel, data_shards=data_shards)
     return _fused_l2miss_lanes1(
         values, offsets, scale, keys, epsilons, deltas, sample_keys, est_fids,
+        warm_n0, warm_beta,
         est_name=est_name, B=B, n_min=n_min, n_max=n_max, l=l, tau=tau,
         max_iters=max_iters, n_cap=n_cap, backend=backend, metric=metric,
         growth_cap=growth_cap, ext_cap=ext_cap, adaptive=adaptive,
@@ -1118,6 +1227,8 @@ def _fused_l2miss_lanes1(
     deltas: Array,        # (q,)
     sample_keys: Optional[Array] = None,  # None | (2,) shared | (q, 2)
     est_fids: Optional[Array] = None,     # (q,) when est_name is None
+    warm_n0: Optional[Array] = None,      # (q, m) warm-start predictions
+    warm_beta: Optional[Array] = None,    # (q, m+1) cached coefficients
     *,
     est_name: Optional[str] = "avg",
     B: int = 500,
@@ -1166,7 +1277,7 @@ def _fused_l2miss_lanes1(
     ext_cap = resolve_ext_cap(n_cap, n_max, ext_cap)
     params = make_lane_params(
         offsets, scale, keys, epsilons, deltas, sample_keys, est_fids,
-        n_cap=n_cap)
+        n_cap=n_cap, warm_n0=warm_n0, warm_beta=warm_beta)
     p_dim = (get_estimator(est_name).out_dim(values.shape[1])
              if est_name is not None else 1)
     state0 = init_lane_state(
@@ -1193,6 +1304,8 @@ def fused_l2miss(
     epsilon: Array,
     delta,
     sample_key: Optional[Array] = None,
+    warm_n0: Optional[Array] = None,      # (m,) warm-start prediction
+    warm_beta: Optional[Array] = None,    # (m+1,) cached coefficients
     **static_kwargs,
 ) -> FusedResult:
     """Single-query entry point: the q=1 lane configuration.
@@ -1208,6 +1321,10 @@ def fused_l2miss(
         jnp.asarray(epsilon, jnp.float32)[None],
         jnp.asarray(delta, jnp.float32)[None],
         None if sample_key is None else jnp.asarray(sample_key),
+        warm_n0=None if warm_n0 is None
+        else jnp.asarray(warm_n0, jnp.int32)[None],
+        warm_beta=None if warm_beta is None
+        else jnp.asarray(warm_beta, jnp.float32)[None],
         **static_kwargs)
     return FusedResult(*(x[0] for x in res))
 

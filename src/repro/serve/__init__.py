@@ -4,13 +4,15 @@ from .batching import ContinuousBatcher
 from .lane_pool import LanePool, PoolResponse
 from .planner import Planner, PoolPlan, Route
 from .session import AQPSession, SessionResponse, SessionTicket
+from .warm_cache import CachedAnswer, WarmCache, WarmEntry
 
 # NOTE: ``Request`` here is the AQP serving request (aqp/query.py: Query +
 # SLO envelope) -- what AQPSession.submit takes.  The LM token-batching
 # request lives at ``repro.serve.batching.Request``; import it from the
 # submodule.
 __all__ = [
-    "AQPResponse", "AQPService", "AQPSession", "ContinuousBatcher",
-    "LanePool", "Planner", "PoolPlan", "PoolResponse", "Request", "Route",
-    "SessionResponse", "SessionTicket",
+    "AQPResponse", "AQPService", "AQPSession", "CachedAnswer",
+    "ContinuousBatcher", "LanePool", "Planner", "PoolPlan", "PoolResponse",
+    "Request", "Route", "SessionResponse", "SessionTicket", "WarmCache",
+    "WarmEntry",
 ]

@@ -72,7 +72,8 @@ from ..core.fused import (LaneParams, LaneState, ShardSpec, bucket_ladder,
                           fused_step, init_lane_state, lane_boot_seed,
                           make_lane_params, make_shard_spec,
                           make_sharded_lane_params, make_sharded_step,
-                          resolve_ext_cap, resolve_seg_window)
+                          resolve_ext_cap, resolve_seg_window,
+                          sharded_step_cache_size)
 from ..core import estimators
 from ..core.sampling import GroupedData, ShardLayout, counter_slot_table
 
@@ -97,6 +98,8 @@ class PoolResponse:
     lane: int               # global lane id (tier * tier_lanes + local)
     tier: int               # width tier the query rode in
     spliced_tier_width: int  # tier's max active watermark at splice time
+    beta: Optional[np.ndarray] = None   # (m+1,) final fitted coefficients
+    warm: bool = False      # lane was warm-started from a cached prediction
 
 
 @dataclasses.dataclass
@@ -111,6 +114,8 @@ class _Ticket:
     submitted_s: float
     priority: int = 0                       # higher = admitted first
     deadline_at: Optional[float] = None     # absolute perf_counter deadline
+    warm_n0: Optional[np.ndarray] = None    # (m,) cached n* prediction
+    warm_beta: Optional[np.ndarray] = None  # (m+1,) cached coefficients
     spliced_s: float = 0.0
     spliced_tick: int = 0
     spliced_width: int = 0
@@ -146,9 +151,8 @@ class _Tier:
 
 
 @partial(jax.jit, static_argnames=("n_min",))
-@partial(jax.jit, static_argnames=("n_min",))
 def _splice(state: LaneState, params: LaneParams, lanes, keys, scale_rows,
-            eps, deltas, fids, *, n_min: int):
+            eps, deltas, fids, warm, warm_n0, warm_beta, *, n_min: int):
     """Reset lanes ``lanes`` to tick 0, swapping in their new queries.
 
     One dispatch splices a whole refill round: the row arrays are padded to
@@ -187,6 +191,9 @@ def _splice(state: LaneState, params: LaneParams, lanes, keys, scale_rows,
         est_fids=params.est_fids.at[lanes].set(fids, **drop),
         boot_base=params.boot_base.at[lanes].set(
             jax.vmap(lane_boot_seed)(keys), **drop),
+        warm=params.warm.at[lanes].set(warm, **drop),
+        warm_n0=params.warm_n0.at[lanes].set(warm_n0, **drop),
+        warm_beta=params.warm_beta.at[lanes].set(warm_beta, **drop),
     )
     return st, pr
 
@@ -332,6 +339,7 @@ class LanePool:
         self.lane_ticks_busy = 0  # occupied-lane ticks (occupancy integral)
         self.submitted = 0
         self.retired = 0
+        self.warm_spliced = 0     # warm-started lanes admitted (phase H)
         self.peak_queue_depth = 0
         self._active_frac_sum = 0.0   # sum over dispatches of busy/tier_lanes
         self._retired_rows = 0        # rows_sampled of retired queries
@@ -359,13 +367,24 @@ class LanePool:
 
     def submit(self, query: Query, key: Optional[Array] = None, *,
                priority: int = 0,
-               deadline_at: Optional[float] = None) -> int:
+               deadline_at: Optional[float] = None,
+               warm_n0: Optional[np.ndarray] = None,
+               warm_beta: Optional[np.ndarray] = None) -> int:
         """Enqueue one query; returns its qid (results keyed on it).
 
         ``priority`` / ``deadline_at`` (an absolute ``time.perf_counter``
         timestamp) shape ADMISSION ordering only -- higher priority first,
         then earliest deadline, then FIFO; see ``_Ticket.order``.
+
+        ``warm_n0``/``warm_beta`` (phase H, both or neither) splice the
+        query as a WARM lane: tick 0 jumps to the cached prediction and
+        the lane verifies instead of walking the init design.  Warm lanes
+        land in the narrowest free tier like every young lane (the
+        width-aware ``_place_tier`` already prefers it -- their watermark
+        is 0 at splice and small by construction after).
         """
+        if (warm_n0 is None) != (warm_beta is None):
+            raise ValueError("warm_n0 and warm_beta come together")
         if not self.supports(query):
             raise ValueError(
                 f"lane pool cannot serve func={query.func!r} "
@@ -382,12 +401,21 @@ class LanePool:
         qid = self._next_qid
         self._next_qid += 1
         self.submitted += 1
+        m = self.data.num_groups
+        if warm_n0 is not None:
+            # The step clips n to group sizes / n_cap anyway; clamping here
+            # keeps the int32 device row safe from oversized predictions.
+            warm_n0 = np.clip(
+                np.asarray(warm_n0, np.int64).reshape((m,)),
+                1, self._spec["n_cap"]).astype(np.int32)
+            warm_beta = np.asarray(warm_beta, np.float32).reshape((m + 1,))
         self._queue.append(_Ticket(
             qid=qid, func=query.func, fid=self._family[query.func],
             epsilon=float(query.epsilon), delta=float(query.delta),
             key=np.asarray(key), scale_row=scale_row,
             submitted_s=time.perf_counter(),
-            priority=int(priority), deadline_at=deadline_at))
+            priority=int(priority), deadline_at=deadline_at,
+            warm_n0=warm_n0, warm_beta=warm_beta))
         self.peak_queue_depth = max(self.peak_queue_depth, len(self._queue))
         return qid
 
@@ -443,12 +471,18 @@ class LanePool:
             eps = np.ones((tl,), np.float32)
             dts = np.full((tl,), 0.05, np.float32)
             fids = np.zeros((tl,), np.int32)
+            warm = np.zeros((tl,), bool)
+            wn0 = np.zeros((tl, m), np.int32)
+            wb = np.zeros((tl, m + 1), np.float32)
             for j, (lane, tk) in enumerate(picks):
                 lanes[j], keys[j], rows[j] = lane, tk.key, tk.scale_row
                 eps[j], dts[j], fids[j] = tk.epsilon, tk.delta, tk.fid
+                if tk.warm_n0 is not None:
+                    warm[j], wn0[j], wb[j] = True, tk.warm_n0, tk.warm_beta
+                    self.warm_spliced += 1
             tier.state, tier.params = _splice(
                 tier.state, tier.params, lanes, keys, rows, eps, dts, fids,
-                n_min=self._spec["n_min"])
+                warm, wn0, wb, n_min=self._spec["n_min"])
 
     def _harvest(self) -> int:
         """Retire finished lanes; returns the number retired this sync."""
@@ -468,8 +502,8 @@ class LanePool:
                              or k[lane] >= max_iters)]
             if not finished:
                 continue
-            e, n_cur, iters, theta = jax.device_get(
-                (s.e, s.n_cur, s.iters, s.theta))
+            e, n_cur, iters, theta, beta = jax.device_get(
+                (s.e, s.n_cur, s.iters, s.theta, s.beta))
             for lane in finished:
                 t = tier.occupant[lane]
                 rows = int(filled[lane].sum())
@@ -482,7 +516,9 @@ class LanePool:
                     queue_wait_s=t.spliced_s - t.submitted_s,
                     ticks_in_lane=self.ticks - t.spliced_tick,
                     lane=ti * self.tier_lanes + lane, tier=ti,
-                    spliced_tier_width=t.spliced_width)
+                    spliced_tier_width=t.spliced_width,
+                    beta=np.asarray(beta[lane]),
+                    warm=t.warm_n0 is not None)
                 tier.occupant[lane] = None
                 self.retired += 1
                 self._retired_rows += rows
@@ -675,4 +711,8 @@ class LanePool:
             "rows_per_tick": rows_gathered / max(self.ticks, 1),
             "sample_epochs": self.sample_epochs,
             "pending_rotation": self._pending_sample_key is not None,
+            "warm_spliced": self.warm_spliced,
+            # The process-wide make_sharded_step memo LRU (bounded; every
+            # pool shares it, so this is global occupancy, not per-pool).
+            "sharded_step_cache": sharded_step_cache_size(),
         }

@@ -60,6 +60,14 @@ class Route(enum.Enum):
     BATCHED = "batched"
     LOOP = "loop"
     HOST = "host"
+    # Phase H: a warm-cache hit.  Coefficient hits ride the pool with a
+    # warm-started lane (admitted into the narrowest tier -- their windows
+    # are small by construction); exact-answer hits bypass the pool
+    # entirely and are answered at poll() with zero dispatches.  Either
+    # way the lane is short-lived, so warm requests are EXCLUDED from the
+    # planner's sliding tuning windows -- a burst of repeats must not
+    # inflate the lane-count drift signal and trigger pool rebuilds.
+    WARM = "warm"
 
 
 def fusable(request: Request) -> bool:
@@ -116,15 +124,20 @@ class Planner:
 
     # -- routing ------------------------------------------------------------
     def route(self, request: Request, *, pending_fusable: int,
-              pool_busy: bool) -> Route:
+              pool_busy: bool, warm: bool = False) -> Route:
         """Pick the route for one request.
 
         ``pending_fusable`` is the number of fusable requests in the same
         admission wave (this request included); ``pool_busy`` whether the
-        live pool currently holds in-flight or queued work.
+        live pool currently holds in-flight or queued work.  ``warm``
+        marks a warm-cache coefficient hit: it takes the WARM fast path
+        (a warm-started pool lane) unless the operator forced a
+        non-pool mode -- forced BATCHED/LOOP stay forced (compat).
         """
         if not fusable(request):
             return Route.HOST
+        if warm and self.mode in (None, Route.POOL, Route.WARM):
+            return Route.WARM
         if self.mode is not None:
             return self.mode
         # Auto: join a busy pool (mid-flight admission is the point of the

@@ -59,6 +59,7 @@ from ..core.sampling import GroupedData, SampleStore
 from ..kernels import resolve_use_kernel
 from .lane_pool import LanePool
 from .planner import Planner, Route, fusable
+from .warm_cache import CachedAnswer, WarmCache, WarmEntry
 
 Array = jax.Array
 
@@ -94,12 +95,27 @@ class SessionResponse:
     slo_met: Optional[bool] = None      # None when no deadline was set
 
 
+def _request_eps(q: Query) -> float:
+    """The bound value a cached answer is keyed on: the absolute epsilon,
+    the relative epsilon, or 1.0 for the parameterless order metric (the
+    bound-kind lives in the signature shape, so the three never collide)."""
+    if q.metric == "order":
+        return 1.0
+    if q.epsilon is not None:
+        return float(q.epsilon)
+    return float(q.epsilon_rel)
+
+
 @dataclasses.dataclass
 class _InFlight:
     ticket: SessionTicket
     request: Request
     key: Optional[np.ndarray]           # explicit bootstrap key, if any
     route: Optional[Route] = None       # set at admission
+    # Phase H warm-cache state, resolved at submit():
+    sig: Optional[tuple] = None         # cache signature (None: uncacheable)
+    warm_n0: Optional[np.ndarray] = None    # (m,) predicted n* (warm hit)
+    warm_beta: Optional[np.ndarray] = None  # (m+1,) cached coefficients
 
 
 class AQPSession:
@@ -113,7 +129,8 @@ class AQPSession:
                  use_kernel: "bool | str" = "auto",
                  planner: Optional[Planner] = None,
                  pool_tiers: "int | str" = "auto",
-                 data_shards: int = 1, mesh=None):
+                 data_shards: int = 1, mesh=None,
+                 warm_cache: "bool | WarmCache" = False):
         self.data = data
         self.store = SampleStore(data, seed=seed)
         self.engine = AQPEngine(data, B=B, n_min=n_min, n_max=n_max,
@@ -147,6 +164,17 @@ class AQPSession:
         self._results: Dict[int, SessionResponse] = {}  # rid -> response
         self._pool: Optional[LanePool] = None
         self._pool_rids: Dict[int, int] = {}            # pool qid -> rid
+        # Phase H: learned warm-start + answer cache.  OPT-IN: repeat
+        # detection changes how a bit-identical resubmission is served
+        # (replayed, zero dispatches), so callers that rely on every
+        # submission running -- parity tests, scheduling benchmarks --
+        # keep the default off.
+        if isinstance(warm_cache, WarmCache):
+            self.cache: Optional[WarmCache] = warm_cache
+        else:
+            self.cache = WarmCache() if warm_cache else None
+        self.warm_verify_failures = 0   # warm lanes that needed > 1 iter
+        self.cache_served = 0           # exact-answer replays (0 dispatches)
         # Accounting (the service contract).
         self._fused_rows = 0
         self.fused_dispatches = 0
@@ -180,12 +208,66 @@ class AQPSession:
             raise ValueError(f"request id {request.rid} already submitted")
         ticket = SessionTicket(rid=request.rid,
                                submitted_s=time.perf_counter())
-        self._inflight[request.rid] = _InFlight(
-            ticket=ticket, request=request,
-            key=None if key is None else np.asarray(key))
-        self._arrivals.append(request.rid)
+        entry = _InFlight(ticket=ticket, request=request,
+                          key=None if key is None else np.asarray(key))
+        self._inflight[request.rid] = entry
         self.submitted += 1
+        # Phase H: resolve the warm cache at submit time.  An explicitly
+        # pinned bootstrap key is a replay/repro contract the cache must
+        # not alias, so pinned requests bypass it entirely.
+        if self.cache is not None and entry.key is None \
+                and self._cache_resolve(entry):
+            return ticket       # exact replay: answered, zero dispatches
+        self._arrivals.append(request.rid)
         return ticket
+
+    def _cache_resolve(self, entry: _InFlight) -> bool:
+        """Submit-time cache lookup.  True = the request was answered
+        outright (bit-identical repeat replayed from the cache: it never
+        enters the arrival queue).  Otherwise annotates the entry with
+        warm-start state (predicted ``n0`` + cached coefficients) for the
+        WARM route and returns False."""
+        q = entry.request.query
+        entry.sig = self.cache.signature(q)
+        if entry.sig is None:
+            return False        # opaque callable predicate: uncacheable
+        kind, ce = self.cache.lookup(entry.sig, epsilon=_request_eps(q))
+        if kind == "exact":
+            a = ce.answer
+            self.cache_served += 1
+            # No rows were sampled, so the replay must not advance the
+            # reuse epoch (it would spuriously trigger reshuffles).
+            self._complete(
+                entry, theta=a.theta.copy(), error=a.error,
+                success=a.success, n=a.n.copy(), wall_time_s=0.0,
+                queue_wait_s=0.0, route=Route.WARM, rows_sampled=0,
+                count_epoch=False)
+            return True
+        if kind == "warm" and fusable(entry.request):
+            entry.warm_n0 = self.cache.predict_n0(
+                ce, epsilon=float(q.epsilon), n_min=self.n_min)
+            entry.warm_beta = np.asarray(ce.beta, np.float32).copy()
+        return False
+
+    def _cache_insert(self, entry: _InFlight, *, beta, n, theta, error,
+                      success: bool, failed: bool, iterations: int) -> None:
+        """Teach the cache what one completed run learned.  Skipped for
+        pinned-key runs (``entry.sig`` is None then), unsuccessful or
+        Algorithm-2-failed runs, and entries whose signature predates the
+        current epoch -- a rotation fired while this run was in flight, so
+        its rows were drawn under the dead slot->row binding."""
+        if (self.cache is None or entry.sig is None or failed
+                or not success or entry.sig[0][0] != self.cache.epoch):
+            return
+        n = np.asarray(n)
+        b = (np.zeros(n.shape[0] + 1, np.float32) if beta is None
+             else np.asarray(beta, np.float32).copy())
+        eps = _request_eps(entry.request.query)
+        self.cache.insert(entry.sig, WarmEntry(
+            beta=b, n_star=n.copy(), iterations=int(iterations), epsilon=eps,
+            answer=CachedAnswer(theta=np.asarray(theta).copy(),
+                                error=float(error), success=True,
+                                n=n.copy(), epsilon=eps)))
 
     def poll(self, ticket: Union[SessionTicket, int]
              ) -> Optional[SessionResponse]:
@@ -245,6 +327,13 @@ class AQPSession:
             "pool_rebuilds": self.pool_rebuilds,
             "sample_epoch": self._epoch_counter,
         }
+        if self.cache is not None:
+            out["cache_hits"] = self.cache.hits
+            out["cache_misses"] = self.cache.misses
+            out["cache_evictions"] = self.cache.evictions
+            out["cache_served"] = self.cache_served
+            out["warm_verify_failures"] = self.warm_verify_failures
+            out["warm_cache"] = self.cache.stats()
         if self._pool is not None:
             out["pool"] = self._pool.stats()
         return out
@@ -255,6 +344,11 @@ class AQPSession:
         self._queries_in_epoch = 0
         self._sample_key = jax.random.fold_in(
             jax.random.PRNGKey(self.store.seed ^ 0x5A17), self._epoch_counter)
+        if self.cache is not None:
+            # Cached answers/coefficients were learned under the old
+            # slot->row binding -- drop them (and bump the signature epoch
+            # so in-flight runs of the old epoch skip their inserts).
+            self.cache.rotate_epoch()
         if self._pool is not None:
             # Deferred: applied immediately if the pool is idle, else at
             # its next idle point -- never under a resident prefix.
@@ -270,7 +364,8 @@ class AQPSession:
 
     def _complete(self, entry: _InFlight, *, theta, error, success, n,
                   wall_time_s: float, queue_wait_s: float, route: Route,
-                  rows_sampled: int, now: Optional[float] = None) -> None:
+                  rows_sampled: int, now: Optional[float] = None,
+                  count_epoch: bool = True) -> None:
         now = time.perf_counter() if now is None else now
         latency = now - entry.ticket.submitted_s
         ddl = entry.request.deadline_s
@@ -281,7 +376,10 @@ class AQPSession:
             rows_sampled=rows_sampled, deadline_s=ddl,
             slo_met=None if ddl is None else latency <= ddl)
         del self._inflight[entry.request.rid]
-        self._account_completion()
+        if count_epoch:
+            self._account_completion()
+        else:
+            self.completed += 1     # cache replay: outside the epoch policy
 
     # -- pool management ----------------------------------------------------
     def _build_pool(self, lanes: int, ticks_per_sync: int) -> LanePool:
@@ -333,9 +431,12 @@ class AQPSession:
         pool = self._pool
         pool_busy = pool is not None and bool(
             pool.busy_lanes or pool.queue_depth)
+        # Warm-cache hits are short-lived lanes by construction; feeding
+        # them into the planner's sliding windows would let a burst of
+        # repeats inflate the lane-count drift signal and trigger rebuilds.
         n_fus = 0
         for e in wave:
-            if fusable(e.request):
+            if fusable(e.request) and e.warm_n0 is None:
                 n_fus += 1
                 self.planner.observe_request(e.request)
         self.planner.observe_backlog(
@@ -343,11 +444,16 @@ class AQPSession:
         groups: Dict[Route, List[_InFlight]] = {}
         for e in wave:
             e.route = self.planner.route(
-                e.request, pending_fusable=n_fus, pool_busy=pool_busy)
+                e.request, pending_fusable=n_fus, pool_busy=pool_busy,
+                warm=e.warm_n0 is not None)
             groups.setdefault(e.route, []).append(e)
         try:
-            if Route.POOL in groups:
-                self._admit_pool(groups[Route.POOL])
+            # WARM rides the pool machinery (a warm-started lane admitted
+            # into the narrowest free tier by the pool's placement rule).
+            pooled_entries = groups.get(Route.POOL, []) + \
+                groups.get(Route.WARM, [])
+            if pooled_entries:
+                self._admit_pool(pooled_entries)
             if Route.BATCHED in groups:
                 self._run_batched(groups[Route.BATCHED])
             if Route.LOOP in groups:
@@ -382,7 +488,8 @@ class AQPSession:
             deadline_at = (None if req.deadline_s is None
                            else e.ticket.submitted_s + req.deadline_s)
             qid = pool.submit(req.query, key=key, priority=req.priority,
-                              deadline_at=deadline_at)
+                              deadline_at=deadline_at,
+                              warm_n0=e.warm_n0, warm_beta=e.warm_beta)
             self._pool_rids[qid] = req.rid
 
     def _harvest_pool(self) -> None:
@@ -399,13 +506,24 @@ class AQPSession:
             if rid is None:
                 continue        # foreign ticket (pool shared out-of-band)
             entry = self._inflight[rid]
+            warm = entry.warm_n0 is not None
+            if warm and r.iterations > 1:
+                # The cached prediction did not verify in one tick; the
+                # lane fell through to the normal extend loop (still
+                # correct, just not O(1) -- the counter is the signal).
+                self.warm_verify_failures += 1
+            self._cache_insert(
+                entry, beta=r.beta, n=r.n, theta=r.theta, error=r.error,
+                success=bool(r.success), failed=bool(r.failed),
+                iterations=int(r.iterations))
             wall = now - entry.ticket.submitted_s
             resident = r.wall_time_s - r.queue_wait_s
             self._complete(
                 entry, theta=r.theta, error=r.error, success=r.success,
                 n=r.n, wall_time_s=wall,
                 queue_wait_s=max(wall - resident, 0.0),
-                route=Route.POOL, rows_sampled=r.rows_sampled, now=now)
+                route=Route.WARM if warm else Route.POOL,
+                rows_sampled=r.rows_sampled, now=now)
 
     # -- synchronous routes -------------------------------------------------
     def _group_scale(self, func: str, k: int):
@@ -448,9 +566,15 @@ class AQPSession:
             theta = np.asarray(res.theta)          # forces the dispatch
             errs, succ = np.asarray(res.error), np.asarray(res.success)
             ns, rows = np.asarray(res.n), np.asarray(res.rows_sampled)
+            betas, fails = np.asarray(res.beta), np.asarray(res.failed)
+            its = np.asarray(res.iterations)
             per_q = (time.perf_counter() - t0) / len(group)
             for lane, e in enumerate(group):
                 self._fused_rows += int(rows[lane])
+                self._cache_insert(
+                    e, beta=betas[lane], n=ns[lane], theta=theta[lane],
+                    error=float(errs[lane]), success=bool(succ[lane]),
+                    failed=bool(fails[lane]), iterations=int(its[lane]))
                 self._complete(
                     e, theta=theta[lane], error=float(errs[lane]),
                     success=bool(succ[lane]), n=ns[lane],
@@ -467,6 +591,12 @@ class AQPSession:
                 theta = np.asarray(res.theta)
                 rows = int(np.asarray(res.rows_sampled)[0])
                 self._fused_rows += rows
+                self._cache_insert(
+                    e, beta=np.asarray(res.beta)[0], n=np.asarray(res.n)[0],
+                    theta=theta[0], error=float(np.asarray(res.error)[0]),
+                    success=bool(np.asarray(res.success)[0]),
+                    failed=bool(np.asarray(res.failed)[0]),
+                    iterations=int(np.asarray(res.iterations)[0]))
                 self._complete(
                     e, theta=theta[0],
                     error=float(np.asarray(res.error)[0]),
@@ -480,6 +610,11 @@ class AQPSession:
         bounds/quantiles)."""
         t0 = time.perf_counter()
         tr = self.engine.execute(entry.request.query)
+        beta = tr.info.get("beta") if isinstance(tr.info, dict) else None
+        self._cache_insert(
+            entry, beta=beta, n=tr.n, theta=tr.theta, error=tr.error,
+            success=bool(tr.success), failed=tr.status == "unrecoverable",
+            iterations=int(tr.iterations))
         self._complete(
             entry, theta=tr.theta, error=tr.error, success=tr.success,
             n=tr.n, wall_time_s=time.perf_counter() - t0, queue_wait_s=0.0,

@@ -1,0 +1,238 @@
+"""Learned warm-start + answer cache (DESIGN.md SS7 phase H).
+
+At millions of queries the dominant repeated cost in the MISS loop is the
+pilot ramp: every lane re-walks SAMPLE->ESTIMATE->FIT->PREDICT from
+``n_min`` even when an identical query just ran, because the fitted error
+model is thrown away at harvest.  This module is the memory: an in-process
+LRU keyed by the query's :func:`~repro.aqp.query.cache_signature` that
+stores what a completed run learned --
+
+* the fitted coefficients ``beta`` (the paper's ``log e = b0 - sum b_i
+  log n_i`` model, epsilon-INDEPENDENT, so one entry predicts ``n*`` for
+  any bound of the same query shape),
+* the final converged sizes ``n_star`` and iteration count,
+* and, for bit-identical repeats (same exact epsilon/delta, same epoch,
+  no pinned key), the exact answer -- served at ``poll()`` with ZERO pool
+  dispatches.
+
+Lookup semantics (:meth:`WarmCache.lookup`): an exact hit requires the
+entry to hold an answer at the request's exact epsilon; otherwise any
+entry in the same epsilon BUCKET is a warm (coefficients) hit; otherwise
+the lookup falls back to the nearest other bucket of the same shape --
+the coefficients generalize across bounds, the bucket index only orders
+preference.  A warm hit yields a predicted ``n0`` via the closed-form
+Lagrange optimum (paper Eq. 13) and the lane verifies it in one tick
+(core/fused.py ``LaneParams.warm``).
+
+Invalidation: entries are keyed inside one sample epoch.  Rotating the
+epoch (``request_sample_key`` / ``set_sample_key`` landing, store
+``refresh``/``reshuffle``) drops every entry -- a cached answer's rows
+were drawn under the OLD slot->row binding, and replaying it across the
+rotation would silently undo the decorrelation the rotation exists to
+provide.  Dropped-by-rotation entries count as ``stale``, not evictions.
+
+Bounded two ways (entries AND bytes), LRU over both; all counters are
+exposed via :meth:`stats` and surfaced in ``AQPSession.stats()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from ..aqp.query import Query, cache_signature
+
+# Safety factor applied to model-predicted warm sizes: overshooting by a
+# hair converts "verify, miss by 2%, extend, verify" (two ticks) into one
+# tick, at a marginal sampled-rows cost.  Exact-epsilon repeats take the
+# stored n_star (the size that actually converged) instead.
+WARM_MARGIN = 1.10
+
+
+@dataclasses.dataclass
+class CachedAnswer:
+    """The exact answer of one completed run (bit-replayable)."""
+    theta: np.ndarray
+    error: float
+    success: bool
+    n: np.ndarray
+    epsilon: float          # the exact bound this answer satisfied
+
+
+@dataclasses.dataclass
+class WarmEntry:
+    """What one completed run taught the cache."""
+    beta: np.ndarray        # (m+1,) fitted error-model coefficients
+    n_star: np.ndarray      # (m,) final converged sizes
+    iterations: int         # iterations the producing run took
+    epsilon: float          # the producing run's exact bound
+    answer: Optional[CachedAnswer] = None
+
+    @property
+    def nbytes(self) -> int:
+        n = self.beta.nbytes + self.n_star.nbytes + 64
+        if self.answer is not None:
+            n += self.answer.theta.nbytes + self.answer.n.nbytes + 64
+        return n
+
+
+class WarmCache:
+    """Bounded LRU of :class:`WarmEntry` rows keyed by query signature.
+
+    Keys are ``(shape, bucket)`` pairs from ``cache_signature`` -- the
+    epsilon-free query shape plus the geometric epsilon bucket.  A
+    secondary shape index supports the near-repeat fallback (same shape,
+    different bucket) without scanning the LRU.
+    """
+
+    def __init__(self, max_entries: int = 256,
+                 max_bytes: int = 8 << 20) -> None:
+        self.max_entries = int(max_entries)
+        self.max_bytes = int(max_bytes)
+        self._entries: "OrderedDict[Tuple, WarmEntry]" = OrderedDict()
+        self._shapes: Dict[Tuple, set] = {}     # shape -> {bucket, ...}
+        self._bytes = 0
+        self.epoch = 0
+        # Counters (the stats() contract).
+        self.hits = 0           # exact + warm
+        self.exact_hits = 0
+        self.warm_hits = 0
+        self.misses = 0
+        self.evictions = 0      # capacity-pressure drops
+        self.stale = 0          # epoch-rotation drops
+        self.insertions = 0
+
+    # -- introspection ------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def bytes_used(self) -> int:
+        return self._bytes
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "entries": len(self._entries),
+            "bytes": self._bytes,
+            "max_entries": self.max_entries,
+            "max_bytes": self.max_bytes,
+            "epoch": self.epoch,
+            "hits": self.hits,
+            "exact_hits": self.exact_hits,
+            "warm_hits": self.warm_hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "stale": self.stale,
+            "insertions": self.insertions,
+        }
+
+    # -- invalidation -------------------------------------------------------
+    def rotate_epoch(self) -> None:
+        """Sample-key rotation landed: every entry's rows are now drawn
+        under a dead slot->row binding -- drop them all (counted stale)."""
+        self.stale += len(self._entries)
+        self._entries.clear()
+        self._shapes.clear()
+        self._bytes = 0
+        self.epoch += 1
+
+    # -- lookup / insert ----------------------------------------------------
+    def signature(self, query: Query) -> Optional[Tuple[Tuple, int]]:
+        """The query's cache identity under the CURRENT epoch (None =
+        uncacheable: opaque callable predicate)."""
+        return cache_signature(query, dataset_epoch=self.epoch)
+
+    def lookup(self, sig: Optional[Tuple[Tuple, int]], *,
+               epsilon: float) -> Tuple[str, Optional[WarmEntry]]:
+        """Resolve one request: ``("exact", entry)`` when the entry holds an
+        answer at this exact epsilon, ``("warm", entry)`` for a coefficient
+        hit (same bucket first, nearest other bucket of the same shape as
+        fallback), ``("miss", None)`` otherwise.  Touches LRU recency on
+        hits; every call increments exactly one counter."""
+        if sig is None:
+            self.misses += 1
+            return "miss", None
+        shape, bucket = sig
+        entry = self._entries.get(sig)
+        if entry is not None:
+            self._entries.move_to_end(sig)
+            if (entry.answer is not None
+                    and entry.answer.epsilon == float(epsilon)):
+                self.hits += 1
+                self.exact_hits += 1
+                return "exact", entry
+            self.hits += 1
+            self.warm_hits += 1
+            return "warm", entry
+        # Near-repeat fallback: any other bucket of the same shape carries
+        # usable coefficients (the log-log model is epsilon-independent);
+        # prefer the numerically nearest bucket.
+        buckets = self._shapes.get(shape)
+        if buckets:
+            near = min((b for b in buckets if b != bucket),
+                       key=lambda b: abs(b - bucket), default=None)
+            if near is not None:
+                key = (shape, near)
+                self._entries.move_to_end(key)
+                self.hits += 1
+                self.warm_hits += 1
+                return "warm", self._entries[key]
+        self.misses += 1
+        return "miss", None
+
+    def insert(self, sig: Optional[Tuple[Tuple, int]],
+               entry: WarmEntry) -> None:
+        """Store (or refresh) one completed run's entry; evicts LRU rows
+        until both bounds hold."""
+        if sig is None:
+            return
+        old = self._entries.pop(sig, None)
+        if old is not None:
+            self._bytes -= old.nbytes
+        self._entries[sig] = entry
+        self._bytes += entry.nbytes
+        self._shapes.setdefault(sig[0], set()).add(sig[1])
+        self.insertions += 1
+        while self._entries and (
+                len(self._entries) > self.max_entries
+                or self._bytes > self.max_bytes):
+            if len(self._entries) == 1 and len(self._entries) <= \
+                    self.max_entries:
+                break       # a single oversized entry is kept (progress)
+            key, ev = self._entries.popitem(last=False)
+            self._bytes -= ev.nbytes
+            self.evictions += 1
+            buckets = self._shapes.get(key[0])
+            if buckets is not None:
+                buckets.discard(key[1])
+                if not buckets:
+                    del self._shapes[key[0]]
+
+    # -- prediction ---------------------------------------------------------
+    def predict_n0(self, entry: WarmEntry, *, epsilon: float,
+                   n_min: int) -> np.ndarray:
+        """The warm lane's tick-0 jump target for a bound of ``epsilon``.
+
+        Exact-epsilon repeats reuse the stored ``n_star`` (the size that
+        actually converged -- strictly better than the model's optimum,
+        which converged runs typically overshoot by one refinement).  Any
+        other bound goes through the closed-form Lagrange optimum (paper
+        Eq. 13) on the cached coefficients, padded by :data:`WARM_MARGIN`
+        so borderline predictions verify in one tick.  Non-finite model
+        output (e.g. a degenerate cached fit) falls back to ``n_star``.
+        """
+        if float(epsilon) == entry.epsilon:
+            return np.maximum(entry.n_star.astype(np.int64), n_min)
+        b0, b = float(entry.beta[0]), np.maximum(
+            entry.beta[1:].astype(np.float64), 1e-9)
+        s = float(b.sum())
+        log_lambda = (b0 - float((b * np.log(b)).sum())
+                      - np.log(float(epsilon))) / s
+        with np.errstate(over="ignore"):
+            n_hat = b * np.exp(log_lambda)
+        if not np.all(np.isfinite(n_hat)):
+            return np.maximum(entry.n_star.astype(np.int64), n_min)
+        n0 = np.ceil(n_hat * WARM_MARGIN).astype(np.int64)
+        return np.maximum(n0, n_min)
