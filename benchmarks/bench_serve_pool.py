@@ -440,6 +440,181 @@ def run_sharded(emit: CsvEmitter, *, full: bool = False, smoke: bool = False,
         "parity_solo_fused_l2miss": bool(solo_ok)})
 
 
+def _zipf_grouped(G: int, head: int, floor: int, seed: int):
+    """Zipf(1.1) group sizes with a floor: the BlinkDB-motivated mix --
+    a heavy head plus a long tail of rare-but-answerable groups (the floor
+    keeps every group large enough that its own (eps, delta) contract is
+    satisfiable at bench epsilons)."""
+    from repro.core.sampling import GroupedData
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, G + 1, dtype=np.float64)
+    sizes = np.maximum((head / ranks ** 1.1).astype(np.int64), floor)
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+    vals = np.empty((int(offsets[-1]), 1), np.float32)
+    for g in range(G):
+        vals[offsets[g]:offsets[g + 1], 0] = rng.normal(
+            rng.normal(5.0, 2.0), rng.uniform(0.5, 1.5), size=sizes[g])
+    return GroupedData(vals, offsets), sizes
+
+
+def _ladder_rung(widths, v: int) -> int:
+    for w in widths:
+        if v <= w:
+            return int(w)
+    return int(widths[-1])
+
+
+def run_groupby(emit: CsvEmitter, *, full: bool = False, smoke: bool = False,
+                seed: int = 3):
+    """Phase-I benchmark: shared-scan grouped blocks vs G per-group solo
+    lanes.
+
+    A grouped query admitted to the pool runs as ONE block of G m=1 lanes
+    sharing a single stratified gather and one segment-aggregated bootstrap
+    pass per tick; the baseline is what a naive port would do -- G
+    independent ``fused_l2miss`` runs, one per group slice, each paying its
+    own gather, its own bucket-padded ESTIMATE scan, and its own dispatch.
+    Both sides answer the SAME query with the SAME sample binding (lane g
+    keyed by ``fold_in(key, g)``, slots by ``stratum_key(sample_key, g)``),
+    so the parity flags assert the block reproduces the G solo trajectories
+    (exact n/iterations/success; theta rtol 1e-5; error rtol 1e-3 -- the
+    documented grouped tolerance, DESIGN.md phase I).
+
+    ``rows_scanned_*`` prices the ESTIMATE scans through the compiled
+    ladders: the block pays one :func:`seg_ladder` rung over the PACKED
+    stream (sum of resident fills) per tick, the baseline pays a
+    :func:`bucket_ladder` rung per lane per iteration -- the ``G x n_cap``
+    vs union-watermark story.  Acceptance: ``speedup_vs_indep >= 3`` at
+    G=256 and ``rows_scanned_block < rows_scanned_indep`` at every G, with
+    every parity flag true and ``rare_group_ok`` (the Zipf tail's own
+    (eps, delta) bound) on every row.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import fused
+    from repro.core.fused import fused_l2miss
+    from repro.core.sampling import stratum_key
+    from repro.serve.lane_pool import LanePool
+
+    Gs = (8, 32) if smoke else (16, 64, 256)
+    head = 20_000 if smoke else 60_000
+    floor = 1_200 if smoke else 1_500
+    eps, delta = 0.2, 0.05
+    l_spec, ext_cap = 6, 1 << 9
+    spec = dict(B=64 if smoke else 100, n_min=200, n_max=400,
+                max_iters=12, n_cap=1 << 12)
+    repeats = 1 if smoke else 3
+    for G in Gs:
+        data, sizes = _zipf_grouped(G, head, floor, seed)
+        q = Query(func="avg", epsilon=eps, delta=delta, group_by=True)
+        key = jax.random.PRNGKey(42)
+        pool = LanePool(data, lanes=2, seed=seed, l=l_spec, ext_cap=ext_cap,
+                        **spec)
+
+        def block_once():
+            qid = pool.submit_group(q, key=key)
+            t0 = time.perf_counter()
+            res = {r.qid: r for r in pool.drain()}
+            return res[qid], time.perf_counter() - t0
+
+        gr, _ = block_once()                        # compile pass
+        ticks0 = pool.block_ticks
+        t_block = np.inf
+        for _ in range(repeats):
+            gr, dt = block_once()
+            t_block = min(t_block, dt)
+        block_ticks = (pool.block_ticks - ticks0) // repeats
+
+        # Baseline: G solo runs on the group slices, padded to ONE buffer
+        # shape so all G share a single compiled program (the padded tail is
+        # never sampled: slot rows stay < size).  Statics mirror the pool's
+        # block spec exactly -- this doubles as the parity reference.
+        max_size = int(sizes.max())
+        padded = np.zeros((G, max_size, 1), np.float32)
+        offs_np = np.asarray(data.offsets)
+        for g in range(G):
+            padded[g, :sizes[g], 0] = data.values[offs_np[g]:offs_np[g + 1],
+                                                  0]
+        padded = jnp.asarray(padded)
+        scale1 = np.ones(1)
+        fid0 = jnp.zeros((1,), jnp.int32)
+
+        def solo(g):
+            return fused_l2miss(
+                padded[g], jnp.asarray([0, int(sizes[g])]), scale1,
+                jax.random.fold_in(key, g), eps, delta,
+                sample_key=stratum_key(pool._sample_key, g), est_name=None,
+                est_fids=fid0, l=l_spec, tau=1e-3, growth_cap=8.0,
+                metric="l2",
+                ext_cap=fused.resolve_ext_cap(spec["n_cap"], spec["n_max"],
+                                              ext_cap), **spec)
+
+        solo(0).n.block_until_ready()               # compile pass
+        t_indep = np.inf
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            solos = [solo(g) for g in range(G)]
+            solos[-1].n.block_until_ready()
+            t_indep = min(t_indep, time.perf_counter() - t0)
+        solos = [jax.tree.map(np.asarray, s) for s in solos]
+
+        # Parity: the block's per-group answers vs the G solo trajectories.
+        n_s = np.asarray([int(s.n[0]) for s in solos])
+        it_s = np.asarray([int(s.iterations) for s in solos])
+        ok_s = np.asarray([bool(s.success) for s in solos])
+        th_s = np.asarray([float(s.theta[0, 0]) for s in solos])
+        er_s = np.asarray([float(s.error) for s in solos])
+        parity_exact = (np.array_equal(gr.n, n_s)
+                        and np.array_equal(gr.iterations, it_s)
+                        and np.array_equal(gr.group_success, ok_s))
+        parity_theta = bool(np.allclose(gr.theta, th_s, rtol=1e-5))
+        parity_error = bool(np.allclose(gr.error, er_s, rtol=1e-3))
+        rare_ok = bool(gr.group_success.all() and (gr.error <= eps).all())
+        if not (parity_exact and parity_theta and parity_error and rare_ok):
+            print(f"warning: groupby G={G} parity failed "
+                  f"(exact={parity_exact}, theta={parity_theta}, "
+                  f"error={parity_error}, rare={rare_ok})", flush=True)
+
+        # ESTIMATE-scan pricing through the compiled ladders (solo profiles
+        # == block trajectories by the parity above).  Both paths gate
+        # inactive lanes (a parked/converged lane owns zero elements of the
+        # packed stream, _segment_tick), so each side is priced over ACTIVE
+        # iterations only at its ladder: the block pays one seg_ladder rung
+        # over the packed sum of active prefixes per tick, the baseline a
+        # pow2 bucket_ladder rung per lane per iteration -- whose >= 512-row
+        # floor every small lane pays alone.
+        prof = np.asarray([s.profile_n[:, 0] for s in solos])   # (G, T)
+        seg_cap = fused.grouped_seg_cap(offs_np, spec["n_cap"])
+        seg_w = fused.seg_ladder(seg_cap, spec["n_max"])
+        buck_w = fused.bucket_ladder(spec["n_cap"], spec["n_max"])
+        T = int(it_s.max())
+        active_fill = np.asarray(
+            [[prof[g, t] if t < it_s[g] else 0 for t in range(T)]
+             for g in range(G)])                                # (G, T)
+        rows_block = sum(_ladder_rung(seg_w, int(active_fill[:, t].sum()))
+                         for t in range(T))
+        rows_indep = sum(_ladder_rung(buck_w, int(prof[g, t]))
+                         for g in range(G) for t in range(it_s[g]))
+
+        emit.add(f"serve/groupby-indep-G{G}", t_indep / G, {
+            "num_groups": G, "queries": 1, "dispatches": G,
+            "rows_touched": rows_indep, "rows_scanned_indep": rows_indep})
+        emit.add(f"serve/groupby-block-G{G}", t_block / G, {
+            "num_groups": G, "queries": 1, "dispatches": block_ticks,
+            "rows_touched": rows_block,
+            "rows_scanned_block": rows_block,
+            "rows_scanned_indep": rows_indep,
+            "rows_ratio": round(rows_indep / max(rows_block, 1), 2),
+            "speedup_vs_indep": round(t_indep / max(t_block, 1e-9), 2),
+            "parity_exact": bool(parity_exact),
+            "parity_theta": parity_theta,
+            "parity_error": parity_error,
+            "rare_group_ok": rare_ok,
+            "rows_gathered": int(gr.rows_sampled),
+            "all_success": bool(gr.success)})
+
+
 def run(emit: CsvEmitter, *, full: bool = False, smoke: bool = False,
         arrivals: "str | None" = None):
     q = 6 if smoke else 16

@@ -29,7 +29,9 @@ SERVE_JSON_KEYS = (
     "queries", "lanes", "data_shards", "qps", "speedup_vs_1dev",
     "shard_rows", "parity_bitwise_vs_1dev", "parity_solo_fused_l2miss",
     "hit_rate", "dispatches_per_query", "warm_speedup_p50", "cache_served",
-    "warm_verify_failures")
+    "warm_verify_failures", "num_groups", "speedup_vs_indep",
+    "rows_scanned_block", "rows_scanned_indep", "rows_ratio", "parity_exact",
+    "parity_theta", "parity_error", "rare_group_ok")
 
 
 def _run_fig1(emit, args):
@@ -90,6 +92,11 @@ def _run_cache(emit, args):
     bench_serve_pool.run_cache(emit, full=args.full, smoke=args.smoke)
 
 
+def _run_groupby(emit, args):
+    from . import bench_serve_pool
+    bench_serve_pool.run_groupby(emit, full=args.full, smoke=args.smoke)
+
+
 # The full section registry; --only names are validated against it.
 SECTIONS = {
     "fig1": _run_fig1,
@@ -103,6 +110,7 @@ SECTIONS = {
     "serve": _run_serve,
     "distributed": _run_distributed,
     "cache": _run_cache,
+    "groupby": _run_groupby,
 }
 
 
@@ -168,9 +176,10 @@ def main() -> None:
             print("wrote BENCH_fused.json", flush=True)
             wrote_json = True
     if args.json and any(s in sections
-                         for s in ("serve", "distributed", "cache")):
-        # serve + distributed + cache share one artifact (all emit serve/
-        # rows); written once, after every selected section has run.
+                         for s in ("serve", "distributed", "cache",
+                                   "groupby")):
+        # serve + distributed + cache + groupby share one artifact (all
+        # emit serve/ rows); written once, after every selected section.
         with open("BENCH_serve.json", "w") as fh:
             json.dump(emit.json_rows("serve/", keys=SERVE_JSON_KEYS),
                       fh, indent=2)

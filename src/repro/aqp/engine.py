@@ -81,16 +81,58 @@ class AQPEngine:
             epsilon=epsilon, delta=q.delta, B=self.B, n_min=self.n_min,
             n_max=self.n_max, seed=self.seed, use_kernel=self.use_kernel)
 
+    def _bind_predicate(self, q: Query):
+        """``(data, store)`` with the predicate folded into the measure.
+
+        Predicate queries estimate over the derived indicator column; the
+        rebound store keeps the SAME permutations (and therefore the
+        nested-prefix guarantee) while reading the new values.  No-op
+        passthrough for predicate-free queries.
+        """
+        if q.predicate is None:
+            return self.data, self.store
+        vals = np.asarray(self.data.values)
+        ind = _predicate_fn(q.predicate)(vals).astype(np.float32)
+        data = GroupedData(ind, self.data.offsets.copy(),
+                           self.data.scale.copy())
+        return data, self.store.bind(data.values)
+
+    def execute_grouped(self, q: Query):
+        """GROUP BY execution: ONE shared-scan lane block (DESIGN.md phase I).
+
+        Instead of looping MISS over the m-group profile (whose joint l2
+        metric couples the groups), a grouped query runs
+        :func:`~repro.core.fused.fused_grouped`: G per-group lanes sharing
+        one stratified gather and one segment-aggregated ESTIMATE per tick,
+        each lane verifying its OWN ``(epsilon, delta)`` contract.  Returns
+        the per-group :class:`~repro.core.fused.FusedResult` -- ``theta
+        (G, 1)`` already population-scaled, ``error (G,)``, ``success (G,)``
+        the G independent verdicts.
+        """
+        from ..core import fused
+        from ..kernels import resolve_use_kernel
+
+        if q.metric != "l2":
+            raise ValueError(
+                f"grouped queries run per-group l2 verification; got "
+                f"metric {q.metric!r}")
+        estimators.moment_family_index(q.func)   # raises for non-moment
+        data, _ = self._bind_predicate(q)
+        eps = q.epsilon
+        if eps is None:
+            eps = q.epsilon_rel * self._pilot_scale(q)
+        scale = estimators.population_scale_row(q.func, data.scale)
+        key = jax.random.PRNGKey(self.seed)
+        return fused.fused_grouped(
+            data.values, np.asarray(data.offsets), scale, key,
+            float(eps), float(q.delta), est_name=q.func, B=self.B,
+            n_min=self.n_min, n_max=self.n_max,
+            use_kernel=resolve_use_kernel(self.use_kernel))
+
     def execute(self, q: Query) -> MissTrace:
-        data = self.data
-        store = self.store
-        if q.predicate is not None:
-            vals = np.asarray(data.values)
-            ind = _predicate_fn(q.predicate)(vals).astype(np.float32)
-            data = GroupedData(ind, data.offsets.copy(), data.scale.copy())
-            # Same permutations, different column: the predicate query reuses
-            # the store's row choices (and keeps its nested-prefix guarantee).
-            store = self.store.bind(data.values)
+        if q.group_by:
+            return self.execute_grouped(q)
+        data, store = self._bind_predicate(q)
         eps = q.epsilon
         if eps is None and q.metric != "order":
             eps = q.epsilon_rel * self._pilot_scale(q)
@@ -113,9 +155,5 @@ class AQPEngine:
     def exact(self, q: Query) -> np.ndarray:
         from ..core.l2miss import exact_answer
 
-        data = self.data
-        if q.predicate is not None:
-            vals = np.asarray(data.values)
-            ind = _predicate_fn(q.predicate)(vals).astype(np.float32)
-            data = GroupedData(ind, data.offsets.copy(), data.scale.copy())
+        data, _ = self._bind_predicate(q)
         return exact_answer(data, estimators.get(q.func))

@@ -183,7 +183,8 @@ def epsilon_bucket(eps: float, ratio: float = EPS_BUCKET_RATIO) -> int:
     return int(math.floor(math.log(eps) / math.log(ratio) + 1e-9))
 
 
-def cache_signature(query: "Query", *, dataset_epoch: int = 0
+def cache_signature(query: "Query", *, dataset_epoch: int = 0,
+                    num_groups: Optional[int] = None
                     ) -> Optional[Tuple[Tuple, int]]:
     """``(shape, epsilon_bucket)`` identity of a query for the warm cache.
 
@@ -194,6 +195,14 @@ def cache_signature(query: "Query", *, dataset_epoch: int = 0
     carries a single measure column, so the column references live inside
     the predicate AST.)  Returns None when the query has no stable identity
     (opaque callable predicate) -- such queries never hit the cache.
+
+    A grouped query (``query.group_by``) carries ``("groupby", G)`` in its
+    shape -- its cached entry holds PER-GROUP predictions/coefficients with
+    one row per group, so it must never be confused with the solo entry of
+    the same func/predicate, nor with a grouped entry taken under a
+    different grouping cardinality.  Callers route the dataset's group
+    count through ``num_groups`` for grouped queries (required: a grouped
+    signature without it raises).
     """
     pred_sig = predicate_signature(query.predicate)
     if pred_sig is None:
@@ -207,6 +216,11 @@ def cache_signature(query: "Query", *, dataset_epoch: int = 0
     shape = (int(dataset_epoch), query.func, pred_sig, float(query.delta),
              query.metric, None if query.lp is None else float(query.lp),
              kind)
+    if query.group_by:
+        if num_groups is None:
+            raise ValueError(
+                "grouped cache signatures need the dataset's num_groups")
+        shape = shape + (("groupby", int(num_groups)),)
     return shape, epsilon_bucket(eps)
 
 
@@ -219,6 +233,9 @@ class Query:
     metric: str = "l2"
     predicate: Optional[Predicate] = None  # row predicate: callable | AST
     lp: Optional[float] = None             # the p of metric="lp" (p >= 1)
+    group_by: bool = False                 # Listing-1 GROUP BY X: one answer
+                                           #   (and one (eps, delta) verdict)
+                                           #   PER GROUP of the dataset
 
     def __post_init__(self):
         if self.metric not in METRICS:

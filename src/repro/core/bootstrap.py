@@ -338,6 +338,64 @@ def windowed_lane_moment_sums(vals, lo, hi, seeds, B, widths, *,
             M_plain.reshape(qp, m, 3)[:q])
 
 
+def segment_moment_sums(x, gid, slot, valid, seeds, q, B, *,
+                        use_kernel=False, interpret=None, tn=2048):
+    """RAW replicate moment sums over one PACKED stream of lane windows.
+
+    The grouped-block ESTIMATE (DESIGN.md phase I): ``x (L,)`` are the
+    gathered values of ALL active lanes' windows concatenated, ``gid (L,)``
+    the owning lane, ``slot (L,)`` each element's ABSOLUTE buffer slot,
+    ``valid (L,)`` stream validity (padding + frozen lanes contribute
+    nothing), ``seeds (q,)`` the per-lane tick seeds.  Returns ``(M (q, B,
+    3), M_plain (q, 3))`` with weight (j, b) = ``poisson1(hash3(seeds[gid_j],
+    slot_j, b))`` -- the SAME draw :func:`lane_moment_sums` makes for that
+    (lane, slot, replicate), so a block lane's statistics match its solo
+    run; only f32 summation order differs (segment adds vs per-lane dot),
+    which is why grouped parity is asserted at the sharded pool's tolerance
+    rather than bitwise.
+
+    Cost tracks the stream length: ONE weight generation + ONE segment
+    reduction for all q lanes, instead of q per-lane contractions each
+    priced at the global width bucket.  With ``use_kernel`` the weights are
+    generated in VMEM by ``kernels/segment_agg.segment_bootstrap_moments``
+    (bit-identical to its jnp oracle); the jnp path chunks the stream so
+    the transient (tn, B, 3) contribution tensor stays bounded.
+    """
+    L = x.shape[0]
+    mf = valid.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    gid = jnp.clip(gid.astype(jnp.int32), 0, q - 1)
+    feats = jnp.stack([mf, mf * xf, mf * xf * xf], axis=-1)    # (L, 3)
+    M_plain = jax.ops.segment_sum(feats, gid, num_segments=q)  # (q, 3)
+    if use_kernel:
+        from ..kernels.segment_agg import ops as seg_ops
+        M = seg_ops.segment_bootstrap_moments(
+            gid, slot.astype(jnp.int32), xf, mf, seeds[gid], q, B,
+            interpret=interpret)
+        return M, M_plain
+    chunks = -(-L // tn)
+    Lp = chunks * tn
+    if Lp != L:
+        padc = Lp - L
+        feats = jnp.pad(feats, ((0, padc), (0, 0)))
+        gid = jnp.pad(gid, (0, padc))
+        slot = jnp.pad(slot, (0, padc))
+    seed_flat = seeds[gid].astype(jnp.uint32)                  # (Lp,)
+    cols = jnp.arange(B, dtype=jnp.uint32)
+
+    def body(i, M):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * tn, tn)
+        W = prng.poisson1_weights_at(
+            sl(seed_flat)[:, None], sl(slot)[:, None].astype(jnp.uint32),
+            cols[None, :])                                     # (tn, B)
+        C = W[:, :, None] * sl(feats)[:, None, :]              # (tn, B, 3)
+        return M + jax.ops.segment_sum(C, sl(gid), num_segments=q)
+
+    M = jax.lax.fori_loop(
+        0, chunks, body, jnp.zeros((q, B, 3), jnp.float32))
+    return M, M_plain
+
+
 def guard_dead_replicates(M: Array, M_plain: Array) -> Array:
     """Substitute the plain sample for dead replicates (``sum w == 0``).
 

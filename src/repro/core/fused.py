@@ -69,6 +69,7 @@ import numpy as np
 
 from . import bootstrap, error_model, sampling
 from .estimators import get as get_estimator
+from .estimators import moment_family_index
 from ..kernels import prng
 
 Array = jax.Array
@@ -153,6 +154,11 @@ class LaneParams(NamedTuple):
     warm: Array         # (q,) bool: lane starts from a cached prediction
     warm_n0: Array      # (q, m) int32 predicted n* (the tick-0 jump target)
     warm_beta: Array    # (q, m+1) f32 cached error-model coefficients
+    group_sizes: Array  # (q, m) int32 rows available to each lane's groups.
+                        #   Ordinary pools broadcast the shared layout's
+                        #   sizes; a grouped lane BLOCK (phase I) binds lane
+                        #   g to group g, so its row is that one group's
+                        #   size -- the per-lane sample-size ceiling.
 
 
 def _bucket_widths(n_cap: int, base: int) -> Tuple[int, ...]:
@@ -194,6 +200,28 @@ def bucket_ladder(n_cap: int, n_max: int) -> Tuple[int, ...]:
     the bucket a scheduler reasons about is the bucket the step executes.
     """
     return _bucket_widths(n_cap, sampling.bucket_cap(min(n_max, n_cap)))
+
+
+def seg_ladder(seg_cap: int, n_max: int) -> Tuple[int, ...]:
+    """Static packed-stream width ladder of the grouped-block ESTIMATE.
+
+    The phase-I analogue of :func:`bucket_ladder`: a grouped block's tick
+    scans ONE packed stream of all active lanes' windows, padded up to the
+    smallest rung covering the union watermark.  Exposed so the pool's cost
+    model and the benchmark's rows-scanned accounting price exactly the
+    rung the compiled step executes.
+    """
+    return _window_ladder(seg_cap, min(sampling.bucket_cap(n_max), seg_cap))
+
+
+def grouped_seg_cap(offsets, n_cap: int) -> int:
+    """Host-side packed-stream capacity of a grouped block: sum of the
+    per-group slot ceilings ``min(size_g, n_cap)`` -- the most slots the
+    block's union watermark can ever cover, and therefore the top rung of
+    :func:`seg_ladder`."""
+    off = np.asarray(offsets)
+    sizes = off[1:] - off[:-1]
+    return int(np.minimum(sizes, n_cap).sum())
 
 
 def resolve_ext_cap(n_cap: int, n_max: int, ext_cap: Optional[int] = None) -> int:
@@ -293,7 +321,62 @@ def make_lane_params(
         scale=jnp.asarray(scale), epsilons=jnp.asarray(epsilons, jnp.float32),
         deltas=jnp.asarray(deltas, jnp.float32),
         est_fids=jnp.asarray(est_fids, jnp.int32), boot_base=boot_base,
-        slot_idx=slot_idx, warm=w, warm_n0=wn0, warm_beta=wb)
+        slot_idx=slot_idx, warm=w, warm_n0=wn0, warm_beta=wb,
+        group_sizes=jnp.broadcast_to(sizes[None, :], (q, sizes.shape[0])))
+
+
+def make_group_lane_params(
+    offsets: Array,
+    scale: Array,        # (G,) per-group scale (population_scale_row)
+    keys: Array,         # (G, 2) per-lane bootstrap keys
+    epsilons: Array,     # (G,)
+    deltas: Array,       # (G,)
+    sample_key: Array,   # (2,) the block's shared stratified-store key
+    est_fids: Optional[Array] = None,
+    *,
+    n_cap: int,
+    warm: Optional[Array] = None,
+    warm_n0: Optional[Array] = None,     # (G, 1)
+    warm_beta: Optional[Array] = None,   # (G, 2)
+    slot_idx: Optional[Array] = None,    # prebuilt (G, 1, n_cap) tables
+) -> LaneParams:
+    """Lane-BLOCK parameters for a grouped query (phase I): lane g <- group g.
+
+    The block runs ``q = G`` lanes of ``m = 1``.  Lane g's slot table is
+    the stratified store's stratum table (:func:`~.sampling.
+    stratified_slot_tables`) -- identical to the solo table a run on group
+    g's slice with ``sample_key = stratum_key(sample_key, g)`` would build,
+    shifted to global rows -- and its ``group_sizes`` row is that one
+    group's size, so the per-lane clamp in the step body enforces each
+    group's own ceiling.  Everything else (bootstrap seed bases, warm rows)
+    is derived exactly as :func:`make_lane_params` does, which is what
+    makes block trajectories comparable to G solo runs.
+
+    ``slot_idx`` optionally supplies the stratified tables prebuilt (they
+    depend only on ``(sample_key, offsets, n_cap)``, so a pool admitting
+    many blocks per sample epoch builds them once and passes them in).
+    """
+    sizes = (offsets[1:] - offsets[:-1]).astype(jnp.int32)
+    q = epsilons.shape[0]
+    if q != sizes.shape[0]:
+        raise ValueError(
+            f"grouped block wants one lane per group: got {q} lanes for "
+            f"{sizes.shape[0]} groups")
+    if sample_key.ndim != 1:
+        raise ValueError("a grouped block shares one (2,) sample key")
+    if slot_idx is None:
+        slot_idx = sampling.stratified_slot_tables(sample_key, offsets, n_cap)
+    boot_base = jax.vmap(lane_boot_seed)(keys)
+    if est_fids is None:
+        est_fids = jnp.zeros((q,), jnp.int32)
+    w, wn0, wb = resolve_warm_rows(q, 1, warm, warm_n0, warm_beta)
+    return LaneParams(
+        scale=jnp.asarray(scale, jnp.float32).reshape(q, 1),
+        epsilons=jnp.asarray(epsilons, jnp.float32),
+        deltas=jnp.asarray(deltas, jnp.float32),
+        est_fids=jnp.asarray(est_fids, jnp.int32), boot_base=boot_base,
+        slot_idx=slot_idx, warm=w, warm_n0=wn0, warm_beta=wb,
+        group_sizes=sizes.reshape(q, 1))
 
 
 def init_lane_state(
@@ -418,6 +501,89 @@ def _lane_epilogue(s: LaneState, p: LaneParams, *, max_iters, active,
     )
 
 
+def _segment_tick(values, s, p, *, active, win_lo, win_hi, seeds, est,
+                  B, n_max, n_cap, ext_cap, seg_cap, metric, use_kernel):
+    """Shared-scan SAMPLE + ESTIMATE of a grouped lane block (phase I).
+
+    The block is ``q`` lanes of ``m = 1`` -- lane g bound to group g via its
+    row of the stratified slot tables.  One PACKED gather over all active
+    lanes' extension windows replaces the per-lane ``lax.map`` gather, and
+    one segment-aggregated moment pass replaces the shared width-bucket
+    bootstrap: per-tick cost tracks the union watermark (the packed stream
+    length, padded to a :func:`seg_ladder` rung), not ``q x`` the global
+    max width.  Windows, slot bindings, and the (seed, absolute slot,
+    replicate) weight draws are identical to the generic path, so a block
+    lane's trajectory matches its solo run up to the f32 summation order of
+    the moment sums (the documented sharded-pool tolerance).
+
+    Packing: lane windows are concatenated in lane order; element j maps to
+    its owner by ``searchsorted`` over the cumulative window starts.
+    Zero-width lanes (frozen, parked, or converged) own no elements --
+    ``side="right"`` search skips their duplicated starts -- so an inactive
+    lane contributes nothing to the scan and its (guarded) zero-sum outputs
+    are discarded by the predicated epilogue, exactly like the generic
+    path's masked lanes.
+    """
+    q = p.epsilons.shape[0]
+    filled0 = s.filled[:, 0]
+    lo, hi = win_lo[:, 0], win_hi[:, 0]
+
+    # ---- one packed gather over the extension windows [filled, win_hi) ----
+    ext_w = jnp.maximum(hi - filled0, 0)       # inactive: hi <= filled -> 0
+    gather_cap = min(seg_cap, q * ext_cap)
+    g_rungs = _window_ladder(gather_cap,
+                             min(sampling.bucket_cap(n_max), gather_cap))
+    g_total = jnp.sum(ext_w)
+    g_idx = jnp.sum(g_total > jnp.asarray(g_rungs[:-1], jnp.int32))
+    g_starts = jnp.cumsum(ext_w) - ext_w                       # (q,)
+
+    def mk_gather(L):
+        def branch(buf_b):
+            j = jnp.arange(L, dtype=jnp.int32)
+            lane_j = jnp.clip(
+                jnp.searchsorted(g_starts, j, side="right") - 1, 0, q - 1)
+            slot_j = filled0[lane_j] + (j - g_starts[lane_j])
+            valid = j < g_total
+            gidx = p.slot_idx[lane_j, 0, jnp.minimum(slot_j, n_cap - 1)]
+            rows = values[gidx]                                # (L, c)
+            tgt = jnp.where(valid, slot_j, n_cap)              # OOB -> drop
+            return buf_b.at[lane_j, 0, tgt].set(rows, mode="drop")
+        return branch
+
+    buf = jax.lax.switch(g_idx.astype(jnp.int32),
+                         [mk_gather(w) for w in g_rungs], s.buf)
+    filled = jnp.maximum(s.filled, win_hi)
+
+    # ---- one segment-aggregated ESTIMATE over [win_lo, win_hi) ----
+    est_w = jnp.where(active, hi - lo, 0)
+    e_rungs = seg_ladder(seg_cap, n_max)
+    e_total = jnp.sum(est_w)
+    e_idx = jnp.sum(e_total > jnp.asarray(e_rungs[:-1], jnp.int32))
+    e_starts = jnp.cumsum(est_w) - est_w
+    lane_seeds = seeds[:, 0]                                   # (q,)
+
+    def mk_est(L):
+        def branch(buf_b):
+            j = jnp.arange(L, dtype=jnp.int32)
+            lane_j = jnp.clip(
+                jnp.searchsorted(e_starts, j, side="right") - 1, 0, q - 1)
+            slot_j = jnp.minimum(lo[lane_j] + (j - e_starts[lane_j]),
+                                 n_cap - 1)
+            valid = j < e_total
+            x_j = buf_b[lane_j, 0, slot_j, 0]
+            return bootstrap.segment_moment_sums(
+                x_j, lane_j, slot_j, valid, lane_seeds, q, B,
+                use_kernel=use_kernel)
+        return branch
+
+    M, Mp = jax.lax.switch(e_idx.astype(jnp.int32),
+                           [mk_est(w) for w in e_rungs], buf)
+    e_b, theta_b = bootstrap.finish_lanes_moments(
+        M[:, None], Mp[:, None], p.scale, p.deltas, est=est,
+        est_fids=p.est_fids, metric=metric)
+    return buf, filled, e_b, theta_b
+
+
 def _step_body(
     values: Array,
     offsets: Array,
@@ -439,6 +605,7 @@ def _step_body(
     adaptive: bool,
     use_kernel: bool,
     gate_gather: bool,
+    seg_cap: Optional[int] = None,
 ) -> LaneState:
     """One SAMPLE -> ESTIMATE -> FIT -> PREDICT -> TEST tick over all lanes.
 
@@ -450,10 +617,18 @@ def _step_body(
     bucket is shared -- the max watermark over *active* lanes -- which is
     statistically invisible because the counter-PRNG weight draws do not
     depend on the bucket width.
+
+    ``seg_cap`` (phase I) switches a q-lane block of m=1 per-group lanes
+    onto the SHARED-SCAN path: the tick packs every active lane's window
+    into one flat stream (capacity ``seg_cap`` = the block's union
+    watermark ceiling), runs ONE gather over the packed extension windows
+    and ONE segment-aggregated moment pass -- per-tick cost tracks rows
+    scanned, not ``q x`` the global width bucket.  Decision structure,
+    windows, weights, and seeds are identical to the generic path; only
+    the f32 summation order of the moment sums differs.
     """
     est = get_estimator(est_name) if est_name is not None else None
     m = offsets.shape[0] - 1
-    sizes = (offsets[1:] - offsets[:-1]).astype(jnp.int32)
     # Deterministic balanced two-point design (Eq. 15/16): cyclic shifts give
     # every group both levels, keeping all slopes identifiable.
     l_min = min(max(int(round(l * n_max / (n_min + n_max))), 1), l - 1)
@@ -473,7 +648,10 @@ def _step_body(
     # _fit_predict already overrode with the cached-coefficient schedule.
     init_phase = (s.k < l) & ~p.warm                           # (q,)
     n_vec = jnp.where(init_phase[:, None], n_init, n_pred)
-    n_vec = jnp.clip(n_vec, 1, jnp.minimum(sizes, n_cap)[None, :])
+    # Per-LANE size ceiling: ordinary pools broadcast the shared layout's
+    # group sizes here (identical to the old shared clamp); a grouped block
+    # clamps lane g to ITS group's rows.
+    n_vec = jnp.clip(n_vec, 1, jnp.minimum(p.group_sizes, n_cap))
     # Complete-sample clamp: one iteration can extend the resident prefix
     # by at most the window; a larger predicted jump is taken over
     # several iterations (growth guard keeps it monotone).
@@ -495,6 +673,22 @@ def _step_body(
     win_hi = jnp.where(active[:, None], win_lo + n_vec,
                        jnp.minimum(s.n_cur, s.filled))
     n_eff = n_vec
+    if seg_cap is not None:
+        # Grouped lane block (phase I): one shared scan for the whole tick.
+        seeds = prng.hash3(
+            prng.hash3(p.boot_base, s.k.astype(jnp.uint32),
+                       jnp.uint32(_SALT_GROUP))[:, None],
+            jnp.arange(m, dtype=jnp.uint32)[None, :],
+            jnp.uint32(_SALT_GROUP))                           # (q, m)
+        buf, filled, e_b, theta_b = _segment_tick(
+            values, s, p, active=active, win_lo=win_lo, win_hi=win_hi,
+            seeds=seeds, est=est, B=B, n_max=n_max, n_cap=n_cap,
+            ext_cap=ext_cap, seg_cap=seg_cap, metric=metric,
+            use_kernel=use_kernel)
+        return _lane_epilogue(
+            s, p, max_iters=max_iters, active=active, init_phase=init_phase,
+            new_keys=new_keys, e_b=e_b, theta_b=theta_b, n_eff=n_eff,
+            filled=filled, buf=buf, beta=beta, r2=r2, failed_fit=failed_fit)
     # ---- extend the carried nested samples by the window only ----
     # One lane's window gather: (m, ext_cap) rows past the watermark,
     # scattered into the lane's carried buffer (OOB targets dropped).
@@ -897,7 +1091,9 @@ def make_sharded_lane_params(
         scale=jnp.asarray(scale), epsilons=jnp.asarray(epsilons, jnp.float32),
         deltas=jnp.asarray(deltas, jnp.float32),
         est_fids=jnp.asarray(est_fids, jnp.int32), boot_base=boot_base,
-        slot_idx=slot_idx, warm=w, warm_n0=wn0, warm_beta=wb)
+        slot_idx=slot_idx, warm=w, warm_n0=wn0, warm_beta=wb,
+        group_sizes=jnp.broadcast_to(
+            jnp.asarray(layout.cap_groups, jnp.int32)[None, :], (q, m)))
 
 
 _SHARD_STEP_STATICS = (
@@ -950,7 +1146,7 @@ def _make_sharded_step(mesh, num_ticks, statics_items):
     pr_specs = LaneParams(
         scale=PS(), epsilons=PS(), deltas=PS(), est_fids=PS(),
         boot_base=PS(), slot_idx=PS("data", None, None),
-        warm=PS(), warm_n0=PS(), warm_beta=PS())
+        warm=PS(), warm_n0=PS(), warm_beta=PS(), group_sizes=PS())
     # alloc replicated: every device needs the full stack for the local
     # growth clamp (and its own shard's table via axis_index).
     sp_specs = ShardSpec(alloc=PS(), cap_groups=PS())
@@ -978,7 +1174,7 @@ _STEP_STATICS = (
 
 @partial(jax.jit,
          static_argnames=_STEP_STATICS + ("num_ticks", "data_shards",
-                                          "seg_window"))
+                                          "seg_window", "seg_cap"))
 def fused_step(
     values: Array,
     offsets: Array,
@@ -1003,6 +1199,7 @@ def fused_step(
     gate_gather: bool = True,
     data_shards: int = 1,
     seg_window: Optional[int] = None,
+    seg_cap: Optional[int] = None,
     num_ticks: int = 1,
 ) -> LaneState:
     """Host-callable resumable step: ``num_ticks`` iterations, one dispatch.
@@ -1022,9 +1219,34 @@ def fused_step(
     to a per-segment window via :func:`resolve_seg_window`; ``seg_window``
     bypasses the resolution with an exact per-segment value (how the pool's
     ``mesh=False`` path reuses the spec its mesh twin compiled with).
+
+    ``seg_cap`` (phase I) selects the grouped lane BLOCK path: ``q`` lanes
+    of ``m = 1``, each bound to one group of a stratified sample store
+    (:func:`make_group_lane_params`), ticked with ONE packed gather and ONE
+    segment-aggregated moment pass whose cost tracks the union watermark.
+    Pass :func:`grouped_seg_cap` of the block's offsets; requires the
+    adaptive poisson path, a moment-family estimator, single-shard data,
+    and dummy ``[0, N]`` step offsets (the per-group sizes live in
+    ``params.group_sizes``).
     """
     if seg_window is not None and data_shards == 1:
         raise ValueError("seg_window applies to the sharded step only")
+    if seg_cap is not None:
+        if data_shards > 1:
+            raise ValueError("seg_cap (grouped blocks) is single-shard only")
+        if backend != "poisson" or not adaptive:
+            raise ValueError(
+                "grouped blocks require the adaptive poisson path")
+        if offsets.shape[0] != 2:
+            raise ValueError(
+                "a grouped block is q lanes of m=1 (one lane per group); "
+                "pass the dummy [0, N] step offsets")
+        if params.slot_idx.ndim != 3:
+            raise ValueError(
+                "grouped blocks need per-lane stratified slot tables "
+                "(make_group_lane_params)")
+        if est_name is not None:
+            moment_family_index(est_name)   # raises for non-moment ests
     if data_shards > 1:
         if shard_spec is None:
             raise ValueError("data_shards > 1 requires a shard_spec")
@@ -1056,7 +1278,7 @@ def fused_step(
         est_name=est_name, B=B, n_min=n_min, n_max=n_max, l=l, tau=tau,
         max_iters=max_iters, n_cap=n_cap, backend=backend, metric=metric,
         growth_cap=growth_cap, ext_cap=ext_cap, adaptive=adaptive,
-        use_kernel=use_kernel, gate_gather=gate_gather)
+        use_kernel=use_kernel, gate_gather=gate_gather, seg_cap=seg_cap)
     if num_ticks == 1:
         return _step_body(values, offsets, state, params, **spec)
     return jax.lax.fori_loop(
@@ -1112,7 +1334,9 @@ def _sharded_lanes_closed(
         scale=jnp.asarray(scale), epsilons=jnp.asarray(epsilons, jnp.float32),
         deltas=jnp.asarray(deltas, jnp.float32),
         est_fids=jnp.asarray(est_fids, jnp.int32), boot_base=boot_base,
-        slot_idx=slot_tables, warm=w, warm_n0=wn0, warm_beta=wb)
+        slot_idx=slot_tables, warm=w, warm_n0=wn0, warm_beta=wb,
+        group_sizes=jnp.broadcast_to(
+            shard_spec.cap_groups[None, :], (q, m)))
     p_dim = (get_estimator(est_name).out_dim(values.shape[1])
              if est_name is not None else 1)
     state0 = init_lane_state(
@@ -1327,6 +1551,124 @@ def fused_l2miss(
         else jnp.asarray(warm_beta, jnp.float32)[None],
         **static_kwargs)
     return FusedResult(*(x[0] for x in res))
+
+
+@partial(jax.jit, static_argnames=_STEP_STATICS + ("seg_cap",))
+def _fused_grouped_closed(
+    values: Array,
+    offsets: Array,       # (G + 1,) REAL group offsets (host-visible)
+    scale: Array,         # (G,)
+    keys: Array,          # (G, 2)
+    epsilons: Array,      # (G,)
+    deltas: Array,        # (G,)
+    sample_key: Array,    # (2,)
+    est_fids: Array,      # (G,)
+    *,
+    est_name: Optional[str],
+    B: int,
+    n_min: int,
+    n_max: int,
+    l: int,
+    tau: float,
+    max_iters: int,
+    n_cap: int,
+    backend: str,
+    metric: str,
+    growth_cap: float,
+    ext_cap: int,
+    adaptive: bool,
+    use_kernel: bool,
+    gate_gather: bool,
+    seg_cap: int,
+) -> FusedResult:
+    """Closed-loop driver over the grouped-block step (phase I)."""
+    params = make_group_lane_params(
+        offsets, scale, keys, epsilons, deltas, sample_key, est_fids,
+        n_cap=n_cap)
+    p_dim = (get_estimator(est_name).out_dim(values.shape[1])
+             if est_name is not None else 1)
+    state0 = init_lane_state(
+        keys, 1, n_cap=n_cap, c_dim=values.shape[1], p_dim=p_dim,
+        n_min=n_min, max_iters=max_iters, dtype=values.dtype)
+    step_offsets = jnp.asarray([0, values.shape[0]], jnp.int32)
+    spec = dict(
+        est_name=est_name, B=B, n_min=n_min, n_max=n_max, l=l, tau=tau,
+        max_iters=max_iters, n_cap=n_cap, backend=backend, metric=metric,
+        growth_cap=growth_cap, ext_cap=ext_cap, adaptive=adaptive,
+        use_kernel=use_kernel, gate_gather=gate_gather, seg_cap=seg_cap)
+    state = jax.lax.while_loop(
+        lambda st: jnp.any(lane_active(st, max_iters)),
+        lambda st: _step_body(values, step_offsets, st, params, **spec),
+        state0)
+    return lanes_result(state)
+
+
+def fused_grouped(
+    values: Array,        # (N, c) group-sorted rows
+    offsets: Array,       # (G + 1,)
+    scale: Array,         # (G,) per-group scale (population_scale_row)
+    key: Array,           # the grouped QUERY key
+    epsilon,              # scalar | (G,) per-group bound
+    delta,                # scalar | (G,)
+    sample_key: Optional[Array] = None,
+    est_fids: Optional[Array] = None,
+    *,
+    est_name: Optional[str] = "avg",
+    B: int = 500,
+    n_min: int = 100,
+    n_max: int = 200,
+    l: int = 10,
+    tau: float = 1e-3,
+    max_iters: int = 32,
+    n_cap: int = 1 << 16,
+    metric: str = "l2",
+    growth_cap: float = 8.0,
+    ext_cap: Optional[int] = None,
+    use_kernel: bool = False,
+) -> FusedResult:
+    """GROUP BY entry point (phase I): one shared-scan block of G lanes.
+
+    Admits a grouped query as a BLOCK of ``G = len(offsets) - 1`` per-group
+    MISS lanes -- lane g's bootstrap key is ``fold_in(key, g)`` and its
+    slot table is the stratified store's stratum g -- and runs the block to
+    convergence with the segment-aggregated step: every tick pays one
+    packed gather plus one segment moment pass over the union of active
+    windows, not G independent ESTIMATE dispatches.  Each group converges,
+    extends, and parks independently under its own ``(epsilon, delta)``
+    row, so the result is G verdicts equivalent to G solo
+    :func:`fused_l2miss` runs on the group slices (same keys, same
+    ``stratum_key`` sample bindings) within the documented f32-summation
+    tolerance.
+
+    Returns a :class:`FusedResult` with the GROUP axis leading and the
+    degenerate ``m = 1`` axis squeezed: ``n (G,)``, ``error (G,)``,
+    ``theta (G, p)``, ``success (G,)``, ``profile_n (G, max_iters)`` --
+    group g's row is its lane's whole trajectory.
+    """
+    offsets = jnp.asarray(offsets, jnp.int32)
+    G = int(offsets.shape[0]) - 1
+    keys = jax.vmap(lambda g: jax.random.fold_in(key, g))(jnp.arange(G))
+    epsilons = jnp.broadcast_to(
+        jnp.asarray(epsilon, jnp.float32), (G,))
+    deltas = jnp.broadcast_to(jnp.asarray(delta, jnp.float32), (G,))
+    if sample_key is None:
+        sample_key = key
+    if est_fids is None:
+        est_fids = jnp.zeros((G,), jnp.int32)
+    seg_cap = grouped_seg_cap(np.asarray(offsets), n_cap)
+    res = _fused_grouped_closed(
+        values, offsets, jnp.asarray(scale, jnp.float32), keys, epsilons,
+        deltas, jnp.asarray(sample_key), jnp.asarray(est_fids, jnp.int32),
+        est_name=est_name, B=B, n_min=n_min, n_max=n_max, l=l, tau=tau,
+        max_iters=max_iters, n_cap=n_cap, backend="poisson", metric=metric,
+        growth_cap=growth_cap,
+        ext_cap=resolve_ext_cap(n_cap, n_max, ext_cap), adaptive=True,
+        use_kernel=use_kernel, gate_gather=True, seg_cap=seg_cap)
+    return FusedResult(
+        n=res.n[:, 0], error=res.error, theta=res.theta[:, 0],
+        iterations=res.iterations, success=res.success, failed=res.failed,
+        beta=res.beta, r2=res.r2, profile_n=res.profile_n[:, :, 0],
+        profile_e=res.profile_e, rows_sampled=res.rows_sampled)
 
 
 def fused_l2miss_batch(values_batch, offsets, scale_batch, keys, epsilons,

@@ -218,6 +218,47 @@ def counter_slot_table(sample_key, starts, sizes, n_cap: int):
         (u * sizes[:, None]).astype(jnp.int32), sizes[:, None] - 1)
 
 
+def stratum_key(sample_key, g):
+    """The per-stratum sample key of group ``g`` under a shared binding.
+
+    Grouped lane blocks (DESIGN.md phase I) give every group its OWN
+    counter-PRNG slot->row stream by folding the group index into the
+    shared ``sample_key``.  This is the parity anchor for per-group
+    verification: a block lane bound to group g draws exactly the rows a
+    SOLO run over group g's slice would draw when that run is seeded with
+    ``stratum_key(sample_key, g)`` -- same key, same stream, same rows
+    (shifted by the group's start offset).
+    """
+    return jax.random.fold_in(sample_key, g)
+
+
+def stratified_slot_tables(sample_key, offsets, n_cap: int):
+    """(G, 1, n_cap) per-stratum slot->row bindings (BlinkDB-style).
+
+    Stratified analogue of :func:`counter_slot_table` for a grouped lane
+    block: table ``g`` binds the block lane of group g -- slot j reads row
+    ``start_g + floor(u * size_g)`` with ``u`` hashed from
+    ``stratum_key(sample_key, g)``'s stream.  Each stratum therefore grows
+    its own nested permuted prefix: rare groups extend their own prefixes
+    instead of starving under uniform sampling, and the first k columns of
+    a stratum's table are identical at ANY capacity >= k (the nested-prefix
+    guarantee the fused loop's carried buffer relies on).
+
+    The middle axis is the lane-local group axis (m = 1): the result plugs
+    directly into ``LaneParams.slot_idx`` as a per-lane binding.
+    """
+    offsets = jnp.asarray(offsets)
+    starts = offsets[:-1].astype(jnp.int32)
+    sizes = (offsets[1:] - offsets[:-1]).astype(jnp.int32)
+    G = starts.shape[0]
+
+    def one(g, st, sz):
+        return counter_slot_table(
+            stratum_key(sample_key, g), st[None], sz[None], n_cap)
+
+    return jax.vmap(one)(jnp.arange(G), starts, sizes)
+
+
 def bucket_cap(n: int, *, base: int = 256) -> int:
     """Round ``n`` up to the next power-of-two bucket >= base.
 

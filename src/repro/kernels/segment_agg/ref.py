@@ -1,8 +1,18 @@
-"""Pure-jnp oracle for the segment_agg kernel: jax.ops.segment_* semantics."""
+"""Pure-jnp oracles for the segment_agg kernels.
+
+``segment_aggregate_ref`` checks the exact-aggregation kernel against
+jax.ops.segment_* semantics (same values, different f32 summation order).
+``segment_bootstrap_moments_ref`` mirrors the replicate-moments kernel's
+tile loop EXACTLY -- same tile sizes, same one-hot dot_general shapes, same
+accumulation order -- so interpret-mode kernel runs are bit-identical to
+it, not merely close.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from .. import prng
 
 
 def segment_aggregate_ref(gid, x, mask, m):
@@ -20,3 +30,56 @@ def segment_aggregate_ref(gid, x, mask, m):
     out["max"] = jax.ops.segment_max(jnp.where(w > 0, x, -big), gid,
                                      num_segments=m)
     return out
+
+
+def segment_bootstrap_moments_ref(gid, slot, x, mask, seed, m, B, *,
+                                  tb=256, tn=512):
+    """(m, B, 3) replicate moment sums, tile-for-tile with the kernel."""
+    def round_up(v, mult):
+        return ((v + mult - 1) // mult) * mult
+
+    n = gid.shape[0]
+    n_pad = round_up(max(n, tn), tn)
+    pad = n_pad - n
+    xf = jnp.pad(x.astype(jnp.float32), (0, pad))
+    mf = jnp.pad(mask.astype(jnp.float32), (0, pad))
+    gf = jnp.pad(gid.astype(jnp.int32), (0, pad))
+    sf = jnp.pad(slot.astype(jnp.int32), (0, pad)).astype(jnp.uint32)
+    sd = jnp.pad(seed.astype(jnp.uint32), (0, pad))
+    feats = jnp.stack([mf, mf * xf, mf * xf * xf], axis=0)     # (3, n_pad)
+    m_pad = round_up(max(m, 1), 128)
+    B_pad = round_up(B, tb)
+    groups = jax.lax.broadcasted_iota(jnp.int32, (m_pad, tn), 0)
+
+    def n_tile(i, acc):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * tn, tn, axis=-1)
+        gt, st, mt = sl(gf), sl(sf), sl(sd)
+        ft = sl(feats)                                         # (3, tn)
+        onehot = ((jnp.broadcast_to(gt[None, :], (m_pad, tn)) == groups)
+                  & jnp.broadcast_to(ft[0:1, :] > 0,
+                                     (m_pad, tn))).astype(jnp.float32)
+        slot_b = jnp.broadcast_to(st[None, :], (tb, tn))
+        seed_b = jnp.broadcast_to(mt[None, :], (tb, tn))
+        for bi in range(B_pad // tb):
+            rep = (jax.lax.broadcasted_iota(jnp.uint32, (tb, tn), 0)
+                   + jnp.uint32(bi * tb))
+            w = prng.poisson1_from_uniform(
+                prng.uniform01(prng.hash3(seed_b, slot_b, rep)))
+            mom = jnp.stack([
+                jax.lax.dot_general(
+                    onehot, w * ft[p:p + 1, :],
+                    dimension_numbers=(((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                for p in range(3)
+            ])                                                 # (3, m_pad, tb)
+            acc = jax.lax.dynamic_update_slice(
+                acc,
+                jax.lax.dynamic_slice(
+                    acc, (0, 0, bi * tb), (3, m_pad, tb)) + mom,
+                (0, 0, bi * tb))
+        return acc
+
+    out = jax.lax.fori_loop(
+        0, n_pad // tn, n_tile,
+        jnp.zeros((3, m_pad, B_pad), jnp.float32))
+    return jnp.moveaxis(out, 0, -1)[:m, :B, :]

@@ -1,7 +1,7 @@
 from ..aqp.query import Request
 from .aqp_service import AQPResponse, AQPService
 from .batching import ContinuousBatcher
-from .lane_pool import LanePool, PoolResponse
+from .lane_pool import GroupPoolResponse, LanePool, PoolResponse
 from .planner import Planner, PoolPlan, Route
 from .session import AQPSession, SessionResponse, SessionTicket
 from .warm_cache import CachedAnswer, WarmCache, WarmEntry
@@ -12,7 +12,7 @@ from .warm_cache import CachedAnswer, WarmCache, WarmEntry
 # submodule.
 __all__ = [
     "AQPResponse", "AQPService", "AQPSession", "CachedAnswer",
-    "ContinuousBatcher", "LanePool", "Planner", "PoolPlan", "PoolResponse",
-    "Request", "Route", "SessionResponse", "SessionTicket", "WarmCache",
-    "WarmEntry",
+    "ContinuousBatcher", "GroupPoolResponse", "LanePool", "Planner",
+    "PoolPlan", "PoolResponse", "Request", "Route", "SessionResponse",
+    "SessionTicket", "WarmCache", "WarmEntry",
 ]

@@ -69,13 +69,15 @@ import numpy as np
 from ..aqp.query import Query
 from ..core import mesh as core_mesh
 from ..core.fused import (LaneParams, LaneState, ShardSpec, bucket_ladder,
-                          fused_step, init_lane_state, lane_boot_seed,
+                          fused_step, grouped_seg_cap, init_lane_state,
+                          lane_boot_seed, make_group_lane_params,
                           make_lane_params, make_shard_spec,
                           make_sharded_lane_params, make_sharded_step,
                           resolve_ext_cap, resolve_seg_window,
                           sharded_step_cache_size)
 from ..core import estimators
-from ..core.sampling import GroupedData, ShardLayout, counter_slot_table
+from ..core.sampling import (GroupedData, ShardLayout, counter_slot_table,
+                             stratified_slot_tables)
 
 Array = jax.Array
 
@@ -100,6 +102,45 @@ class PoolResponse:
     spliced_tier_width: int  # tier's max active watermark at splice time
     beta: Optional[np.ndarray] = None   # (m+1,) final fitted coefficients
     warm: bool = False      # lane was warm-started from a cached prediction
+
+
+@dataclasses.dataclass
+class GroupPoolResponse:
+    """One retired GROUP BY query: per-group answers plus accounting.
+
+    A grouped query occupies a lane BLOCK (G per-group lanes ticked as one
+    shared-scan unit -- DESIGN.md phase I), so its response carries one
+    answer and one ``(epsilon, delta)`` verdict PER GROUP.  ``success`` is
+    the conjunction over groups; ``error`` the (G,) per-group quantiles.
+    """
+    qid: int
+    func: str
+    theta: np.ndarray        # (G,) scaled per-group estimates
+    error: np.ndarray        # (G,) per-group error quantiles
+    group_success: np.ndarray  # (G,) per-group verdicts
+    success: bool            # every group met its bound
+    failed: bool             # any group hit an Algorithm-2 failure
+    n: np.ndarray            # (G,) final per-group sizes
+    iterations: np.ndarray   # (G,) per-group iteration counts
+    rows_sampled: int        # sum of per-group filled watermarks
+    wall_time_s: float       # submit -> harvest
+    queue_wait_s: float      # 0.0: blocks admit atomically at submit
+    ticks_in_block: int      # loop ticks while resident
+    beta: Optional[np.ndarray] = None   # (G, 2) per-group coefficients
+    warm: bool = False       # block was warm-started per group
+    group_by: bool = True    # discriminates from PoolResponse at harvest
+
+
+@dataclasses.dataclass
+class _Block:
+    """One resident grouped block: its own carry/params, ticked whole."""
+    qid: int
+    func: str
+    state: LaneState         # q = G lanes of m = 1
+    params: LaneParams
+    submitted_s: float
+    admitted_tick: int
+    warm: bool = False
 
 
 @dataclasses.dataclass
@@ -326,6 +367,18 @@ class LanePool:
                 params=params, occupant=[None] * tl,
                 filled_host=np.zeros((tl, m), np.int64)))
         self._queue: Deque[_Ticket] = deque()
+        # Phase I: resident grouped blocks (G per-group lanes each, ticked
+        # as one shared-scan unit).  Admission is atomic -- a block never
+        # waits in the ticket queue -- and every block of this pool shares
+        # one compiled step signature (q = num_groups, m = 1, one seg_cap).
+        self._blocks: Dict[int, _Block] = {}
+        self._gseg_cap = (grouped_seg_cap(np.asarray(data.offsets), n_cap)
+                          if self.data_shards == 1 else 0)
+        # The grouped step's dummy offsets: a block's slot tables already
+        # hold GLOBAL row indices, so its step sees one [0, N) span.
+        self._goffsets = jnp.asarray(
+            [0, int(np.asarray(data.offsets)[-1])], jnp.int32)
+        self._gtables: Optional[Array] = None   # stratified tables, per epoch
         self._pending_sample_key: Optional[Array] = None
         self.sample_epochs = 0    # applied slot-table rotations
         self._scale_rows: Dict[str, np.ndarray] = {}
@@ -339,6 +392,9 @@ class LanePool:
         self.lane_ticks_busy = 0  # occupied-lane ticks (occupancy integral)
         self.submitted = 0
         self.retired = 0
+        self.grouped_submitted = 0   # blocks admitted (phase I)
+        self.grouped_retired = 0     # blocks harvested
+        self.block_ticks = 0         # block-resident loop ticks
         self.warm_spliced = 0     # warm-started lanes admitted (phase H)
         self.peak_queue_depth = 0
         self._active_frac_sum = 0.0   # sum over dispatches of busy/tier_lanes
@@ -356,6 +412,17 @@ class LanePool:
     @property
     def busy_lanes(self) -> int:
         return sum(t.busy for t in self._tiers)
+
+    @property
+    def busy_blocks(self) -> int:
+        return len(self._blocks)
+
+    def supports_grouped(self, query: Query) -> bool:
+        """Whether this pool can serve ``query`` as a grouped lane block
+        (same clause constraints as :meth:`supports`; blocks additionally
+        need the single-device layout -- the packed shared scan is not
+        mesh-sharded)."""
+        return self.data_shards == 1 and self.supports(query)
 
     def supports(self, query: Query) -> bool:
         """Whether this pool can serve ``query`` (moment family, this
@@ -417,6 +484,84 @@ class LanePool:
             priority=int(priority), deadline_at=deadline_at,
             warm_n0=warm_n0, warm_beta=warm_beta))
         self.peak_queue_depth = max(self.peak_queue_depth, len(self._queue))
+        return qid
+
+    def _grouped_tables(self) -> Array:
+        """The stratified per-group slot tables under the CURRENT sample
+        key, built once per epoch and shared by every block admitted in it
+        (rotation invalidates the cache; it only fires with no blocks
+        resident, so no live block ever sees two bindings)."""
+        if self._gtables is None:
+            self._gtables = stratified_slot_tables(
+                self._sample_key, self._offsets, self._spec["n_cap"])
+        return self._gtables
+
+    def submit_group(self, query: Query, key: Optional[Array] = None, *,
+                     warm_n0: Optional[np.ndarray] = None,
+                     warm_beta: Optional[np.ndarray] = None) -> int:
+        """Admit one GROUP BY query as a resident lane BLOCK (phase I).
+
+        The block holds ``G = num_groups`` per-group lanes -- lane g's
+        bootstrap key is ``fold_in(key, g)``, its slot table stratum g of
+        the pool's shared sample key -- and is ticked as ONE shared-scan
+        unit alongside the tiers: one packed gather plus one
+        segment-aggregated ESTIMATE per tick, whatever G is.  Admission is
+        atomic (no ticket queue: the block's carry is built here) and
+        retirement is atomic too -- the response lands in :attr:`results`
+        once EVERY group has converged, failed, or exhausted its iteration
+        budget, carrying per-group answers and verdicts.
+
+        ``warm_n0 (G,)`` / ``warm_beta (G, 2)`` (both or neither) warm-start
+        every lane of the block from a cached grouped entry (phase H x I).
+        """
+        if (warm_n0 is None) != (warm_beta is None):
+            raise ValueError("warm_n0 and warm_beta come together")
+        if not self.supports_grouped(query):
+            raise ValueError(
+                f"lane pool cannot serve grouped func={query.func!r} "
+                f"metric={query.metric!r} (needs a moment-family func, "
+                f"metric {self._spec['metric']!r}, absolute epsilon, no "
+                f"predicate, data_shards == 1)")
+        if key is None:
+            self.key, key = jax.random.split(self.key)
+        G = self.data.num_groups
+        scale_row = self._scale_rows.get(query.func)
+        if scale_row is None:
+            scale_row = estimators.population_scale_row(
+                query.func, self.data.scale)
+            self._scale_rows[query.func] = scale_row
+        fid = self._family[query.func]
+        keys = jax.vmap(lambda g: jax.random.fold_in(jnp.asarray(key), g))(
+            jnp.arange(G))
+        warm = None
+        if warm_n0 is not None:
+            warm_n0 = jnp.asarray(np.clip(
+                np.asarray(warm_n0, np.int64).reshape((G,)),
+                1, self._spec["n_cap"]).astype(np.int32)).reshape(G, 1)
+            warm_beta = jnp.asarray(
+                np.asarray(warm_beta, np.float32).reshape((G, 2)))
+            warm = jnp.ones((G,), bool)
+            self.warm_spliced += 1
+        params = make_group_lane_params(
+            self._offsets, jnp.asarray(scale_row, jnp.float32), keys,
+            jnp.full((G,), float(query.epsilon), jnp.float32),
+            jnp.full((G,), float(query.delta), jnp.float32),
+            self._sample_key, jnp.full((G,), fid, jnp.int32),
+            n_cap=self._spec["n_cap"], warm=warm, warm_n0=warm_n0,
+            warm_beta=warm_beta, slot_idx=self._grouped_tables())
+        state = init_lane_state(
+            keys, 1, n_cap=self._spec["n_cap"],
+            c_dim=self.data.values.shape[1], p_dim=1,
+            n_min=self._spec["n_min"], max_iters=self._spec["max_iters"],
+            dtype=self.data.values.dtype)
+        qid = self._next_qid
+        self._next_qid += 1
+        self.submitted += 1
+        self.grouped_submitted += 1
+        self._blocks[qid] = _Block(
+            qid=qid, func=query.func, state=state, params=params,
+            submitted_s=time.perf_counter(), admitted_tick=self.ticks,
+            warm=warm is not None)
         return qid
 
     # -- scheduling ---------------------------------------------------------
@@ -530,10 +675,47 @@ class LanePool:
                 n_retired += 1
         return n_retired
 
+    def _harvest_blocks(self) -> int:
+        """Retire grouped blocks whose EVERY lane has finished (converged,
+        failed, or out of iterations) -- atomic retirement: per-group
+        answers leave together, as one :class:`GroupPoolResponse`."""
+        if not self._blocks:
+            return 0
+        max_iters = self._spec["max_iters"]
+        now = time.perf_counter()
+        finished: List[int] = []
+        for qid, blk in self._blocks.items():
+            s = blk.state
+            done, failed, k = jax.device_get((s.done, s.failed, s.k))
+            if not bool(np.all(done | failed | (k >= max_iters))):
+                continue
+            e, n_cur, iters, theta, beta, filled = jax.device_get(
+                (s.e, s.n_cur, s.iters, s.theta, s.beta, s.filled))
+            rows = int(np.asarray(filled).sum())
+            self.results[qid] = GroupPoolResponse(
+                qid=qid, func=blk.func,
+                theta=np.asarray(theta)[:, 0, 0],
+                error=np.asarray(e), group_success=np.asarray(done),
+                success=bool(np.all(done)), failed=bool(np.any(failed)),
+                n=np.asarray(n_cur)[:, 0],
+                iterations=np.asarray(iters),
+                rows_sampled=rows, wall_time_s=now - blk.submitted_s,
+                queue_wait_s=0.0,
+                ticks_in_block=self.ticks - blk.admitted_tick,
+                beta=np.asarray(beta), warm=blk.warm)
+            self.retired += 1
+            self.grouped_retired += 1
+            self._retired_rows += rows
+            self._shard_rows_retired[0] += rows
+            finished.append(qid)
+        for qid in finished:
+            del self._blocks[qid]
+        return len(finished)
+
     def tick(self) -> int:
         """One scheduling round: refill, run ``ticks_per_sync`` loop ticks
-        per busy tier (one dispatch each), harvest.  Returns the number of
-        busy lanes left."""
+        per busy tier (one dispatch each) plus one shared-scan dispatch per
+        resident grouped block, harvest.  Returns busy lanes + blocks."""
         self._maybe_rotate()
         self._refill()
         ran = False
@@ -567,11 +749,22 @@ class LanePool:
             self.lane_ticks_busy += busy * self.ticks_per_sync
             self._active_frac_sum += busy / self.tier_lanes
             ran = True
+        # Phase I: grouped blocks ride the same scheduling round -- one
+        # shared-scan dispatch per block, however many groups it holds.
+        for blk in self._blocks.values():
+            blk.state = fused_step(
+                self._values, self._goffsets, blk.state, blk.params,
+                num_ticks=self.ticks_per_sync, seg_cap=self._gseg_cap,
+                **self._spec)
+            self.dispatches += 1
+            self.block_ticks += self.ticks_per_sync
+            ran = True
         if not ran:
             return 0
         self.ticks += self.ticks_per_sync
         self._harvest()
-        return self.busy_lanes
+        self._harvest_blocks()
+        return self.busy_lanes + self.busy_blocks
 
     def drain(self, max_ticks: int = 100_000) -> List[PoolResponse]:
         """Tick until the queue and every lane are empty; pop and return
@@ -581,7 +774,8 @@ class LanePool:
         ``results`` is a hand-off buffer between harvest and the caller,
         not a history."""
         guard = 0
-        while (self._queue or self.busy_lanes) and guard < max_ticks:
+        while (self._queue or self.busy_lanes or self._blocks) \
+                and guard < max_ticks:
             self.tick()
             guard += self.ticks_per_sync
         return [self.results.pop(qid) for qid in sorted(self.results)]
@@ -595,7 +789,7 @@ class LanePool:
         nesting invariant.  For a live session that cannot guarantee
         idleness, use :meth:`request_sample_key` instead.
         """
-        if self.busy_lanes or self._queue:
+        if self.busy_lanes or self._queue or self._blocks:
             raise RuntimeError("cannot rotate sample_key with queries in "
                                "flight; drain() first or use "
                                "request_sample_key()")
@@ -616,7 +810,8 @@ class LanePool:
         return self._maybe_rotate()
 
     def _maybe_rotate(self) -> bool:
-        if self._pending_sample_key is None or self.busy_lanes:
+        if self._pending_sample_key is None or self.busy_lanes \
+                or self._blocks:
             return False
         key, self._pending_sample_key = self._pending_sample_key, None
         self._apply_sample_key(key)
@@ -638,6 +833,10 @@ class LanePool:
                 self._sample_key, starts, sizes, self._spec["n_cap"])
         for tier in self._tiers:
             tier.params = tier.params._replace(slot_idx=slot_idx)
+        # Grouped blocks build their stratified tables from the pool key at
+        # admission; rotation (idle-only: no blocks resident here) just
+        # invalidates the per-epoch cache.
+        self._gtables = None
         self.sample_epochs += 1
 
     # -- accounting ---------------------------------------------------------
@@ -699,6 +898,10 @@ class LanePool:
             "dispatches": self.dispatches,
             "submitted": self.submitted,
             "retired": self.retired,
+            "grouped_submitted": self.grouped_submitted,
+            "grouped_retired": self.grouped_retired,
+            "busy_blocks": self.busy_blocks,
+            "block_ticks": self.block_ticks,
             "queue_depth": self.queue_depth,
             "peak_queue_depth": self.peak_queue_depth,
             "lane_occupancy": self.lane_ticks_busy / cap,

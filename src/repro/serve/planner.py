@@ -71,10 +71,21 @@ class Route(enum.Enum):
 
 
 def fusable(request: Request) -> bool:
-    """Whether the fused on-device path can serve this request at all:
-    moment-family func, L2 metric, absolute bound, no predicate."""
+    """Whether the fused on-device path can serve this request as a SOLO
+    lane: moment-family func, L2 metric, absolute bound, no predicate.
+    Grouped requests are excluded -- they ride lane BLOCKS, not lanes
+    (:func:`grouped_fusable`)."""
     q = request.query
-    return (q.metric == "l2" and q.func in FUSABLE
+    return (not q.group_by and q.metric == "l2" and q.func in FUSABLE
+            and q.epsilon is not None and q.predicate is None)
+
+
+def grouped_fusable(request: Request) -> bool:
+    """Whether the shared-scan grouped block path (DESIGN.md phase I) can
+    serve this GROUP BY request: same clause constraints as :func:`fusable`
+    on a ``group_by`` query."""
+    q = request.query
+    return (q.group_by and q.metric == "l2" and q.func in FUSABLE
             and q.epsilon is not None and q.predicate is None)
 
 
@@ -133,7 +144,17 @@ class Planner:
         marks a warm-cache coefficient hit: it takes the WARM fast path
         (a warm-started pool lane) unless the operator forced a
         non-pool mode -- forced BATCHED/LOOP stay forced (compat).
+
+        GROUP BY requests have exactly two homes: the pool's shared-scan
+        lane block (phase I: one gather + one segment ESTIMATE per tick,
+        whatever the group count) when the clause qualifies and the layout
+        is single-device, else the host engine.  Forced BATCHED/LOOP modes
+        do not apply -- those are solo-lane shapes.
         """
+        if request.query.group_by:
+            if not grouped_fusable(request) or self.data_shards > 1:
+                return Route.HOST
+            return Route.WARM if warm else Route.POOL
         if not fusable(request):
             return Route.HOST
         if warm and self.mode in (None, Route.POOL, Route.WARM):

@@ -57,8 +57,8 @@ from ..core import estimators
 from ..core.fused import fused_l2miss_batch
 from ..core.sampling import GroupedData, SampleStore
 from ..kernels import resolve_use_kernel
-from .lane_pool import LanePool
-from .planner import Planner, Route, fusable
+from .lane_pool import GroupPoolResponse, LanePool
+from .planner import Planner, Route, fusable, grouped_fusable
 from .warm_cache import CachedAnswer, WarmCache, WarmEntry
 
 Array = jax.Array
@@ -93,6 +93,12 @@ class SessionResponse:
     rows_sampled: int
     deadline_s: Optional[float] = None
     slo_met: Optional[bool] = None      # None when no deadline was set
+    # GROUP BY requests (phase I): ``theta``/``n`` hold one row per group,
+    # ``error``/``success`` the scalar summary (max over groups / the
+    # conjunction), and the per-group quantiles and verdicts land here.
+    group_by: bool = False
+    group_error: Optional[np.ndarray] = None     # (G,)
+    group_success: Optional[np.ndarray] = None   # (G,)
 
 
 def _request_eps(q: Query) -> float:
@@ -228,7 +234,8 @@ class AQPSession:
         warm-start state (predicted ``n0`` + cached coefficients) for the
         WARM route and returns False."""
         q = entry.request.query
-        entry.sig = self.cache.signature(q)
+        entry.sig = self.cache.signature(
+            q, num_groups=self._m if q.group_by else None)
         if entry.sig is None:
             return False        # opaque callable predicate: uncacheable
         kind, ce = self.cache.lookup(entry.sig, epsilon=_request_eps(q))
@@ -241,21 +248,29 @@ class AQPSession:
                 entry, theta=a.theta.copy(), error=a.error,
                 success=a.success, n=a.n.copy(), wall_time_s=0.0,
                 queue_wait_s=0.0, route=Route.WARM, rows_sampled=0,
-                count_epoch=False)
+                count_epoch=False,
+                group_error=None if a.group_error is None
+                else a.group_error.copy(),
+                group_success=None if a.group_success is None
+                else a.group_success.copy())
             return True
-        if kind == "warm" and fusable(entry.request):
+        if kind == "warm" and (fusable(entry.request)
+                               or grouped_fusable(entry.request)):
             entry.warm_n0 = self.cache.predict_n0(
                 ce, epsilon=float(q.epsilon), n_min=self.n_min)
             entry.warm_beta = np.asarray(ce.beta, np.float32).copy()
         return False
 
     def _cache_insert(self, entry: _InFlight, *, beta, n, theta, error,
-                      success: bool, failed: bool, iterations: int) -> None:
+                      success: bool, failed: bool, iterations: int,
+                      group_error=None, group_success=None) -> None:
         """Teach the cache what one completed run learned.  Skipped for
         pinned-key runs (``entry.sig`` is None then), unsuccessful or
         Algorithm-2-failed runs, and entries whose signature predates the
         current epoch -- a rotation fired while this run was in flight, so
-        its rows were drawn under the dead slot->row binding."""
+        its rows were drawn under the dead slot->row binding.  Grouped runs
+        pass their per-group quantiles/verdicts so an exact replay restores
+        the full per-group response."""
         if (self.cache is None or entry.sig is None or failed
                 or not success or entry.sig[0][0] != self.cache.epoch):
             return
@@ -265,9 +280,13 @@ class AQPSession:
         eps = _request_eps(entry.request.query)
         self.cache.insert(entry.sig, WarmEntry(
             beta=b, n_star=n.copy(), iterations=int(iterations), epsilon=eps,
-            answer=CachedAnswer(theta=np.asarray(theta).copy(),
-                                error=float(error), success=True,
-                                n=n.copy(), epsilon=eps)))
+            answer=CachedAnswer(
+                theta=np.asarray(theta).copy(), error=float(error),
+                success=True, n=n.copy(), epsilon=eps,
+                group_error=None if group_error is None
+                else np.asarray(group_error).copy(),
+                group_success=None if group_success is None
+                else np.asarray(group_success).copy())))
 
     def poll(self, ticket: Union[SessionTicket, int]
              ) -> Optional[SessionResponse]:
@@ -286,7 +305,8 @@ class AQPSession:
         self._retune()
         self._admit()
         pool = self._pool
-        if pool is not None and (pool.busy_lanes or pool.queue_depth):
+        if pool is not None and (pool.busy_lanes or pool.busy_blocks
+                                 or pool.queue_depth):
             d0 = pool.dispatches
             pool.tick()
             self.fused_dispatches += pool.dispatches - d0
@@ -365,7 +385,8 @@ class AQPSession:
     def _complete(self, entry: _InFlight, *, theta, error, success, n,
                   wall_time_s: float, queue_wait_s: float, route: Route,
                   rows_sampled: int, now: Optional[float] = None,
-                  count_epoch: bool = True) -> None:
+                  count_epoch: bool = True, group_error=None,
+                  group_success=None) -> None:
         now = time.perf_counter() if now is None else now
         latency = now - entry.ticket.submitted_s
         ddl = entry.request.deadline_s
@@ -374,7 +395,9 @@ class AQPSession:
             n=n, wall_time_s=wall_time_s, latency_s=latency,
             queue_wait_s=queue_wait_s, route=route,
             rows_sampled=rows_sampled, deadline_s=ddl,
-            slo_met=None if ddl is None else latency <= ddl)
+            slo_met=None if ddl is None else latency <= ddl,
+            group_by=bool(entry.request.query.group_by),
+            group_error=group_error, group_success=group_success)
         del self._inflight[entry.request.rid]
         if count_epoch:
             self._account_completion()
@@ -411,8 +434,8 @@ class AQPSession:
         if plan.ticks_per_sync != pool.ticks_per_sync:
             pool.ticks_per_sync = plan.ticks_per_sync
             self.planner.retunes += 1
-        if (plan.rebuild and not pool.busy_lanes and not pool.queue_depth
-                and not pool.results):
+        if (plan.rebuild and not pool.busy_lanes and not pool.busy_blocks
+                and not pool.queue_depth and not pool.results):
             # Idle: no resident state, no uncollected retirees.  The new
             # pool starts at the CURRENT epoch key, so a rotation the old
             # pool had parked is applied by construction.
@@ -430,7 +453,7 @@ class AQPSession:
         self._arrivals.clear()
         pool = self._pool
         pool_busy = pool is not None and bool(
-            pool.busy_lanes or pool.queue_depth)
+            pool.busy_lanes or pool.busy_blocks or pool.queue_depth)
         # Warm-cache hits are short-lived lanes by construction; feeding
         # them into the planner's sliding windows would let a burst of
         # repeats inflate the lane-count drift signal and trigger rebuilds.
@@ -485,11 +508,19 @@ class AQPSession:
         pool = self._ensure_pool()
         for e, key in zip(entries, self._lane_keys(entries)):
             req = e.request
-            deadline_at = (None if req.deadline_s is None
-                           else e.ticket.submitted_s + req.deadline_s)
-            qid = pool.submit(req.query, key=key, priority=req.priority,
-                              deadline_at=deadline_at,
-                              warm_n0=e.warm_n0, warm_beta=e.warm_beta)
+            if req.query.group_by:
+                # Phase I: a grouped request admits atomically as a lane
+                # BLOCK -- no ticket queue, no priority/deadline reorder
+                # (it starts ticking immediately).
+                qid = pool.submit_group(req.query, key=key,
+                                        warm_n0=e.warm_n0,
+                                        warm_beta=e.warm_beta)
+            else:
+                deadline_at = (None if req.deadline_s is None
+                               else e.ticket.submitted_s + req.deadline_s)
+                qid = pool.submit(req.query, key=key, priority=req.priority,
+                                  deadline_at=deadline_at,
+                                  warm_n0=e.warm_n0, warm_beta=e.warm_beta)
             self._pool_rids[qid] = req.rid
 
     def _harvest_pool(self) -> None:
@@ -507,23 +538,31 @@ class AQPSession:
                 continue        # foreign ticket (pool shared out-of-band)
             entry = self._inflight[rid]
             warm = entry.warm_n0 is not None
-            if warm and r.iterations > 1:
+            grouped = isinstance(r, GroupPoolResponse)
+            its = int(np.max(r.iterations)) if grouped else int(r.iterations)
+            if warm and its > 1:
                 # The cached prediction did not verify in one tick; the
                 # lane fell through to the normal extend loop (still
                 # correct, just not O(1) -- the counter is the signal).
                 self.warm_verify_failures += 1
+            err = float(np.max(r.error)) if grouped else float(r.error)
             self._cache_insert(
-                entry, beta=r.beta, n=r.n, theta=r.theta, error=r.error,
+                entry, beta=r.beta, n=r.n, theta=r.theta, error=err,
                 success=bool(r.success), failed=bool(r.failed),
-                iterations=int(r.iterations))
+                iterations=its,
+                group_error=r.error if grouped else None,
+                group_success=r.group_success if grouped else None)
             wall = now - entry.ticket.submitted_s
             resident = r.wall_time_s - r.queue_wait_s
             self._complete(
-                entry, theta=r.theta, error=r.error, success=r.success,
+                entry, theta=r.theta, error=err, success=bool(r.success),
                 n=r.n, wall_time_s=wall,
                 queue_wait_s=max(wall - resident, 0.0),
                 route=Route.WARM if warm else Route.POOL,
-                rows_sampled=r.rows_sampled, now=now)
+                rows_sampled=r.rows_sampled, now=now,
+                group_error=np.asarray(r.error) if grouped else None,
+                group_success=(np.asarray(r.group_success) if grouped
+                               else None))
 
     # -- synchronous routes -------------------------------------------------
     def _group_scale(self, func: str, k: int):
@@ -607,8 +646,11 @@ class AQPSession:
 
     def _run_host(self, entry: _InFlight) -> None:
         """Host-engine fallback (order/diff/lp/linf/predicates/relative
-        bounds/quantiles)."""
+        bounds/quantiles; grouped queries a pool block cannot serve --
+        predicates, relative bounds, sharded layouts)."""
         t0 = time.perf_counter()
+        if entry.request.query.group_by:
+            return self._run_host_grouped(entry, t0)
         tr = self.engine.execute(entry.request.query)
         beta = tr.info.get("beta") if isinstance(tr.info, dict) else None
         self._cache_insert(
@@ -619,3 +661,29 @@ class AQPSession:
             entry, theta=tr.theta, error=tr.error, success=tr.success,
             n=tr.n, wall_time_s=time.perf_counter() - t0, queue_wait_s=0.0,
             route=Route.HOST, rows_sampled=0)
+
+    def _run_host_grouped(self, entry: _InFlight, t0: float) -> None:
+        """Engine-side grouped execution (``AQPEngine.execute_grouped``):
+        the same shared-scan block program, dispatched synchronously
+        outside the pool.  Serves grouped clauses the pool block cannot
+        (predicates fold into the measure, relative bounds resolve against
+        the pilot) and every grouped request of a sharded session."""
+        res = self.engine.execute(entry.request.query)
+        theta = np.asarray(res.theta)[:, 0]
+        gerr, gok = np.asarray(res.error), np.asarray(res.success)
+        n = np.asarray(res.n)
+        rows = int(np.asarray(res.rows_sampled).sum())
+        self._fused_rows += rows
+        self.fused_dispatches += 1
+        self._cache_insert(
+            entry, beta=np.asarray(res.beta), n=n, theta=theta,
+            error=float(gerr.max()), success=bool(gok.all()),
+            failed=bool(np.asarray(res.failed).any()),
+            iterations=int(np.asarray(res.iterations).max()),
+            group_error=gerr, group_success=gok)
+        self._complete(
+            entry, theta=theta, error=float(gerr.max()),
+            success=bool(gok.all()), n=n,
+            wall_time_s=time.perf_counter() - t0, queue_wait_s=0.0,
+            route=Route.HOST, rows_sampled=rows,
+            group_error=gerr, group_success=gok)

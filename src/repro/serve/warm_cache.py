@@ -53,20 +53,32 @@ WARM_MARGIN = 1.10
 
 @dataclasses.dataclass
 class CachedAnswer:
-    """The exact answer of one completed run (bit-replayable)."""
+    """The exact answer of one completed run (bit-replayable).
+
+    A GROUPED run's answer additionally carries the per-group error
+    quantiles and verdicts (``error``/``success`` hold the scalar summary:
+    max error over groups, conjunction of verdicts)."""
     theta: np.ndarray
     error: float
     success: bool
     n: np.ndarray
     epsilon: float          # the exact bound this answer satisfied
+    group_error: Optional[np.ndarray] = None     # (G,) grouped runs only
+    group_success: Optional[np.ndarray] = None   # (G,)
 
 
 @dataclasses.dataclass
 class WarmEntry:
-    """What one completed run taught the cache."""
-    beta: np.ndarray        # (m+1,) fitted error-model coefficients
-    n_star: np.ndarray      # (m,) final converged sizes
-    iterations: int         # iterations the producing run took
+    """What one completed run taught the cache.
+
+    Solo entries hold the ``(m+1,)`` joint-profile coefficients; GROUPED
+    entries hold ``(G, 2)`` per-group rows (each group fits its OWN log-log
+    model in its lane) with ``n_star (G,)`` -- ``beta.ndim`` discriminates.
+    """
+    beta: np.ndarray        # (m+1,) solo | (G, 2) grouped coefficients
+    n_star: np.ndarray      # (m,) | (G,) final converged sizes
+    iterations: int         # iterations the producing run took (max over
+                            #   groups for a grouped entry)
     epsilon: float          # the producing run's exact bound
     answer: Optional[CachedAnswer] = None
 
@@ -74,7 +86,11 @@ class WarmEntry:
     def nbytes(self) -> int:
         n = self.beta.nbytes + self.n_star.nbytes + 64
         if self.answer is not None:
-            n += self.answer.theta.nbytes + self.answer.n.nbytes + 64
+            a = self.answer
+            n += a.theta.nbytes + a.n.nbytes + 64
+            for arr in (a.group_error, a.group_success):
+                if arr is not None:
+                    n += arr.nbytes
         return n
 
 
@@ -139,10 +155,16 @@ class WarmCache:
         self.epoch += 1
 
     # -- lookup / insert ----------------------------------------------------
-    def signature(self, query: Query) -> Optional[Tuple[Tuple, int]]:
+    def signature(self, query: Query,
+                  num_groups: Optional[int] = None
+                  ) -> Optional[Tuple[Tuple, int]]:
         """The query's cache identity under the CURRENT epoch (None =
-        uncacheable: opaque callable predicate)."""
-        return cache_signature(query, dataset_epoch=self.epoch)
+        uncacheable: opaque callable predicate).  Grouped queries require
+        the dataset's ``num_groups`` -- their signatures carry the grouping
+        cardinality so a grouped entry never collides with the solo entry
+        of the same clause."""
+        return cache_signature(query, dataset_epoch=self.epoch,
+                               num_groups=num_groups)
 
     def lookup(self, sig: Optional[Tuple[Tuple, int]], *,
                epsilon: float) -> Tuple[str, Optional[WarmEntry]]:
@@ -225,6 +247,18 @@ class WarmCache:
         """
         if float(epsilon) == entry.epsilon:
             return np.maximum(entry.n_star.astype(np.int64), n_min)
+        if entry.beta.ndim == 2:
+            # Grouped entry: (G, 2) per-group (b0, b1) rows, each its own
+            # single-variable model -- the Lagrange optimum decouples into
+            # G scalar inversions ``n_g = exp((b0_g - log eps) / b1_g)``.
+            b0 = entry.beta[:, 0].astype(np.float64)
+            b = np.maximum(entry.beta[:, 1].astype(np.float64), 1e-9)
+            with np.errstate(over="ignore"):
+                n_hat = np.exp((b0 - np.log(float(epsilon))) / b)
+            n0 = np.where(np.isfinite(n_hat),
+                          np.ceil(n_hat * WARM_MARGIN),
+                          entry.n_star).astype(np.int64)
+            return np.maximum(n0, n_min)
         b0, b = float(entry.beta[0]), np.maximum(
             entry.beta[1:].astype(np.float64), 1e-9)
         s = float(b.sum())

@@ -1,0 +1,98 @@
+"""Stratified SampleStore binding invariants (DESIGN.md phase I).
+
+A grouped lane block binds lane g to ``stratified_slot_tables(key,
+offsets, n_cap)[g]`` -- stratum g's own counter-PRNG slot->row stream.
+These tests pin the invariants the shared-scan parity argument rests on:
+per-stratum tables equal the solo tables a run on the group's slice would
+build (shifted to global rows), prefixes nest across capacities, rows stay
+in range, and the binding is a pure function of the key.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sampling import (bucket_cap, counter_slot_table,
+                                 stratified_slot_tables, stratum_key)
+
+KEY = jax.random.PRNGKey(17)
+OFFSETS = np.array([0, 37, 37 + 512, 37 + 512 + 129, 37 + 512 + 129 + 2048],
+                   np.int64)
+SIZES = OFFSETS[1:] - OFFSETS[:-1]
+N_CAP = 256
+
+
+def test_shapes_and_dtype():
+    t = stratified_slot_tables(KEY, OFFSETS, N_CAP)
+    assert t.shape == (4, 1, N_CAP)
+    assert t.dtype == jnp.int32
+
+
+def test_stratum_equals_solo_table_shifted():
+    """Table g == the solo table of group g's SLICE (seeded with
+    stratum_key(key, g)) shifted by the group's start -- the parity anchor:
+    a block lane gathers exactly the rows a solo run on the slice would."""
+    t = np.asarray(stratified_slot_tables(KEY, OFFSETS, N_CAP))
+    for g in range(4):
+        solo = np.asarray(counter_slot_table(
+            stratum_key(KEY, g), jnp.asarray([0], jnp.int32),
+            jnp.asarray([int(SIZES[g])], jnp.int32), N_CAP))
+        assert np.array_equal(t[g, 0], solo[0] + int(OFFSETS[g])), g
+
+
+def test_rows_in_group_range():
+    t = np.asarray(stratified_slot_tables(KEY, OFFSETS, N_CAP))
+    for g in range(4):
+        assert t[g].min() >= OFFSETS[g], g
+        assert t[g].max() < OFFSETS[g + 1], g
+
+
+def test_nested_prefix_across_capacities():
+    """The first k slots of a stratum's table are identical at ANY capacity
+    >= k -- the carried-buffer guarantee: growing n_cap never rewrites the
+    prefix a resident lane already gathered."""
+    small = np.asarray(stratified_slot_tables(KEY, OFFSETS, 128))
+    large = np.asarray(stratified_slot_tables(KEY, OFFSETS, 1024))
+    assert np.array_equal(small, large[:, :, :128])
+
+
+def test_pure_function_of_key():
+    a = np.asarray(stratified_slot_tables(KEY, OFFSETS, N_CAP))
+    b = np.asarray(stratified_slot_tables(KEY, OFFSETS, N_CAP))
+    c = np.asarray(stratified_slot_tables(jax.random.PRNGKey(18), OFFSETS,
+                                          N_CAP))
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_strata_decorrelated():
+    """Two strata of similar size must not share a stream: fold_in gives
+    each group its own counter sequence (equal streams would correlate
+    neighboring groups' samples)."""
+    off = np.array([0, 1000, 2000], np.int64)
+    t = np.asarray(stratified_slot_tables(KEY, off, N_CAP))
+    assert not np.array_equal(t[0, 0], t[1, 0] - 1000)
+
+
+def test_jit_matches_eager():
+    jitted = jax.jit(stratified_slot_tables, static_argnames=("n_cap",))
+    a = np.asarray(jitted(KEY, jnp.asarray(OFFSETS), n_cap=N_CAP))
+    b = np.asarray(stratified_slot_tables(KEY, OFFSETS, N_CAP))
+    assert np.array_equal(a, b)
+
+
+def test_roughly_uniform_within_stratum():
+    """Slot rows spread ~uniformly over the stratum (loose moment check:
+    the binding is how rare groups get USABLE samples, not just in-range
+    ones)."""
+    off = np.array([0, 5000], np.int64)
+    t = np.asarray(stratified_slot_tables(KEY, off, 2048))[0, 0]
+    u = t / 5000.0
+    assert abs(u.mean() - 0.5) < 0.03
+    assert abs(u.var() - 1 / 12) < 0.01
+
+
+@pytest.mark.parametrize("n,cap", [(1, 256), (100, 256), (257, 512),
+                                   (4096, 4096)])
+def test_bucket_cap_monotone(n, cap):
+    assert bucket_cap(n) == cap

@@ -13,7 +13,8 @@ from repro.kernels.poisson_bootstrap import ops as pb_ops
 from repro.kernels.poisson_bootstrap import ref as pb_ref
 from repro.kernels.poisson_bootstrap.kernel import poisson_bootstrap_moments
 from repro.kernels.segment_agg import ops as sa_ops
-from repro.kernels.segment_agg.ref import segment_aggregate_ref
+from repro.kernels.segment_agg.ref import (segment_aggregate_ref,
+                                           segment_bootstrap_moments_ref)
 
 # ---------------------------------------------------------------------------
 # prng
@@ -246,6 +247,94 @@ def test_segment_agg_group_means_match_numpy():
     means = np.asarray(got["sum"]) / np.asarray(got["count"])
     for g in range(m):
         assert_allclose(means[g], x[gid == g].mean(), rtol=1e-4)
+
+
+def test_segment_agg_multipass_m300():
+    """m > 128 tiles across ceil(m/128) passes over the same stream; the
+    stitched output must equal the oracle on every group, including the
+    boundary groups 127/128 and 255/256."""
+    rng = np.random.default_rng(300)
+    n, m = 20000, 300
+    gid = jnp.asarray(rng.integers(0, m, n).astype(np.int32))
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    mask = jnp.asarray((rng.uniform(size=n) > 0.05).astype(np.float32))
+    got = sa_ops.segment_aggregate(gid, x, mask, m, tn=1024, interpret=True)
+    want = segment_aggregate_ref(x=x, gid=gid, mask=mask, m=m)
+    assert got["count"].shape == (m,)
+    for key in ("count", "sum", "sumsq", "sum3", "sum4"):
+        assert_allclose(np.asarray(got[key]), np.asarray(want[key]),
+                        rtol=2e-4, atol=2e-3, err_msg=key)
+    nonempty = np.asarray(want["count"]) > 0
+    assert nonempty.all()  # 20k rows over 300 groups: every group hit
+    assert_allclose(np.asarray(got["min"]), np.asarray(want["min"]),
+                    rtol=1e-6)
+    assert_allclose(np.asarray(got["max"]), np.asarray(want["max"]),
+                    rtol=1e-6)
+
+
+def _bootstrap_case(seed, n, m, B):
+    rng = np.random.default_rng(seed)
+    gid = rng.integers(0, m, n).astype(np.int32)
+    # Absolute slot indices: unique per (group, position), like a packed
+    # lane stream.
+    slot = np.empty(n, np.int32)
+    for g in range(m):
+        idx = np.flatnonzero(gid == g)
+        slot[idx] = np.arange(len(idx)) + 10000 * g
+    x = rng.standard_normal(n).astype(np.float32)
+    mask = (rng.uniform(size=n) > 0.1).astype(np.float32)
+    lane_seed = (np.uint32(0xABC) + gid.astype(np.uint32) * np.uint32(977))
+    return (jnp.asarray(gid), jnp.asarray(slot), jnp.asarray(x),
+            jnp.asarray(mask), jnp.asarray(lane_seed))
+
+
+@pytest.mark.parametrize("n,m,B", [(2048, 3, 64), (999, 8, 100)])
+def test_segment_bootstrap_kernel_bit_equals_ref(n, m, B):
+    """The jnp ref mirrors the kernel tile-for-tile (same tile shapes, same
+    dot_general accumulation order), so interpret-mode runs are BIT-identical
+    -- the guarantee that lets the fused loop swap paths without perturbing
+    trajectories."""
+    gid, slot, x, mask, seed = _bootstrap_case(n + m, n, m, B)
+    got = sa_ops.segment_bootstrap_moments(gid, slot, x, mask, seed, m, B,
+                                           interpret=True)
+    want = segment_bootstrap_moments_ref(gid, slot, x, mask, seed, m, B)
+    assert got.shape == (m, B, 3)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segment_bootstrap_matches_direct_poisson_weights():
+    """Replicate moments equal a naive per-group computation with the same
+    counter-PRNG Poisson weights w = poisson1(uniform01(hash3(seed, slot,
+    b))) -- i.e. the kernel computes the statistic it claims, not just a
+    self-consistent one."""
+    n, m, B = 1500, 4, 32
+    gid, slot, x, mask, seed = _bootstrap_case(42, n, m, B)
+    got = np.asarray(sa_ops.segment_bootstrap_moments(
+        gid, slot, x, mask, seed, m, B, interpret=True))
+    rep = jnp.arange(B, dtype=jnp.uint32)
+    w = np.asarray(prng.poisson1_from_uniform(prng.uniform01(prng.hash3(
+        jnp.asarray(seed)[:, None].astype(jnp.uint32),
+        jnp.asarray(slot)[:, None].astype(jnp.uint32),
+        rep[None, :]))))                                   # (n, B)
+    gid_np, x_np, mask_np = (np.asarray(gid), np.asarray(x), np.asarray(mask))
+    for g in range(m):
+        sel = (gid_np == g) & (mask_np > 0)
+        for p, feat in enumerate([np.ones(n, np.float32), x_np, x_np * x_np]):
+            want = (w[sel] * (mask_np * feat)[sel, None]).sum(axis=0)
+            assert_allclose(got[g, :, p], want, rtol=1e-5, atol=1e-4,
+                            err_msg=f"group {g} moment {p}")
+
+
+def test_segment_bootstrap_mean_weight_is_one():
+    """Poisson(1) replicate weights: E[w] = 1, so replicate count-moments
+    scatter around the true per-group masked counts."""
+    n, m, B = 4096, 2, 256
+    gid, slot, x, mask, seed = _bootstrap_case(9, n, m, B)
+    got = np.asarray(sa_ops.segment_bootstrap_moments(
+        gid, slot, x, mask, seed, m, B, interpret=True))
+    counts = np.asarray(segment_aggregate_ref(gid=gid, x=x, mask=mask,
+                                              m=m)["count"])
+    assert_allclose(got[:, :, 0].mean(axis=1), counts, rtol=0.05)
 
 
 # ---------------------------------------------------------------------------
