@@ -99,10 +99,13 @@ def _serve_all(services, queries, repeats: int, on_warm=None):
     return out
 
 
-def _open_loop(sess: AQPSession, specs, gaps, deadline_s: float):
+def _open_loop(sess: AQPSession, specs, gaps, deadline_s: float,
+               tenants=None):
     """Drive one open-loop pass: submit ``specs[i]`` at ``cumsum(gaps)[i]``
     (seeded offered load, wall-clock submit times), pump until drained.
-    Returns (responses in submit order, wall seconds)."""
+    ``tenants`` optionally tags requests round-robin with traffic classes
+    (phase-J WFQ benchmarks).  Returns (responses in submit order, wall
+    seconds)."""
     q = len(specs)
     start = time.perf_counter()
     arrivals = start + np.cumsum(gaps)
@@ -112,9 +115,10 @@ def _open_loop(sess: AQPSession, specs, gaps, deadline_s: float):
         now = time.perf_counter()
         while i < q and now >= arrivals[i]:
             f, e = specs[i]
+            tenant = "" if tenants is None else tenants[i % len(tenants)]
             tickets.append(sess.submit(
                 Request(query=Query(func=f, epsilon=e),
-                        deadline_s=deadline_s)))
+                        deadline_s=deadline_s, tenant=tenant)))
             i += 1
         if i < q and not sess.in_flight and now < arrivals[i]:
             time.sleep(arrivals[i] - now)   # idle until the next arrival
@@ -125,7 +129,8 @@ def _open_loop(sess: AQPSession, specs, gaps, deadline_s: float):
 
 
 def run_open_loop(emit: CsvEmitter, *, full: bool = False,
-                  smoke: bool = False, seed: int = 7):
+                  smoke: bool = False, seed: int = 7,
+                  offered_load: "float | None" = None):
     """Open-loop serving: seeded Poisson arrivals into the AQPSession.
 
     Calibration keeps the benchmark machine-portable: after a compile
@@ -171,7 +176,8 @@ def run_open_loop(emit: CsvEmitter, *, full: bool = False,
         sess.submit(Request(query=Query(func=f, epsilon=e)))
     sess.drain()
     per_q = (time.perf_counter() - t0) / q      # saturated per-query cost
-    rate_qps = 0.6 / per_q                      # ~60% utilization
+    load = 0.6 if offered_load is None else float(offered_load)
+    rate_qps = load / per_q                     # fraction of capacity
     deadline_s = 8.0 * per_q
 
     rng = np.random.default_rng(seed)
@@ -190,6 +196,7 @@ def run_open_loop(emit: CsvEmitter, *, full: bool = False,
         "rows_touched": sess.rows_touched - rows0,
         "dispatches": sess.fused_dispatches - disp0,
         "queries": q, "lanes": lanes,
+        "offered_load": round(load, 2),
         "rate_qps": round(rate_qps, 2),
         "achieved_qps": round(q / wall, 2),
         "p50_ms": round(p50 * 1e3, 2),
@@ -200,6 +207,119 @@ def run_open_loop(emit: CsvEmitter, *, full: bool = False,
         "active_frac": round(pool_stats["active_lane_fraction"], 3),
         "rows_per_tick": int(pool_stats["rows_per_tick"]),
         "all_success": ok})
+
+
+def run_overload(emit: CsvEmitter, *, full: bool = False,
+                 smoke: bool = False, seed: int = 11,
+                 offered_load: "float | None" = None):
+    """Overload-native scheduling (DESIGN.md SS7 phase J): the SAME seeded
+    arrival process offered at 100% and 150% of measured capacity to two
+    sessions -- a non-degrading baseline and an overload-native session
+    (deadline-driven degradation + load shedding + WFQ + migration).
+
+    The acceptance claim: at 150% offered load the overload-native session
+    has strictly better p99 and slo_miss than the baseline, while every
+    answer still satisfies its DELIVERED (possibly relaxed, always
+    reported) epsilon/delta contract -- ``contract_ok`` checks exactly
+    that per response: shed/degraded answers against their
+    ``delivered_epsilon``, full-fidelity answers against success.
+
+    ``offered_load`` overrides the load sweep with a single point (shared
+    with the poisson bench via ``--offered-load``).
+    """
+    q = 12 if smoke else 36
+    rows = 40_000 if smoke else 120_000
+    n_cap = 1 << 12 if smoke else (1 << 14 if full else 1 << 13)
+    lanes = 2 if smoke else 4
+    data = make_grouped(["normal", "exp"], rows, seed=5, biases=[4.0, 2.0])
+    scale_max = float(np.max(data.scale))
+    specs = []
+    for i in range(q):
+        f = ("avg", "var", "sum")[i % 3]
+        e = 0.08 if i % 9 == 0 else 0.18 + 0.01 * (i % 5)
+        specs.append((f, e * scale_max if f == "sum" else e))
+    tenants = ("interactive", "batch")
+    weights = {"interactive": 4.0, "batch": 1.0}
+
+    def make_sess(native: bool) -> AQPSession:
+        return AQPSession(
+            data, n_cap=n_cap,
+            planner=Planner(mode=Route.POOL, pool_lanes=lanes),
+            degrade=native, wfq=native,
+            tenant_weights=weights if native else None,
+            migrate=native, **SKW)
+
+    def saturate(sess: AQPSession) -> float:
+        # Two saturated passes: the first absorbs compiles, the second is
+        # the measured sustainable capacity.  For the overload-native
+        # session this doubles as cost-model priming: observe_round
+        # learns the per-rung tick cost, the retirements the sqrt-law
+        # coefficients -- degradation never triggers on an unprimed model.
+        for _ in range(2):
+            t0 = time.perf_counter()
+            for f, e in specs:
+                sess.submit(Request(query=Query(func=f, epsilon=e)))
+            sess.drain()
+        return (time.perf_counter() - t0) / q
+
+    base, native = make_sess(False), make_sess(True)
+    per_q = saturate(base)
+    saturate(native)
+    deadline_s = 4.0 * per_q
+    # One discarded open-loop pass per session: incremental admission
+    # waves compile per-wave-size key-split programs the saturated (one
+    # big wave) passes never touch; they must not land in the first
+    # measured load point.
+    warm_gaps = np.random.default_rng(seed + 1).exponential(
+        scale=per_q, size=q)
+    for sess in (base, native):
+        _open_loop(sess, specs, warm_gaps, deadline_s, tenants=tenants)
+    # Compile the shed pilot (one program per estimator func): a blown
+    # deadline sheds at submit, before any lane is touched.
+    for f, e in specs[:3]:
+        native.submit(Request(query=Query(func=f, epsilon=e),
+                              deadline_s=1e-9))
+    native.drain()
+    loads = ((float(offered_load),) if offered_load is not None
+             else (1.0, 1.5))
+    for load in loads:
+        rate_qps = load / per_q
+        # Same seed at every load point and for BOTH sessions: identical
+        # arrival gaps, so the comparison is policy-only.
+        rng = np.random.default_rng(seed)
+        gaps = rng.exponential(scale=1.0 / rate_qps, size=q)
+        for label, sess in (("baseline", base), ("native", native)):
+            pool0 = sess._pool.stats()
+            rs, wall = _open_loop(sess, specs, gaps, deadline_s,
+                                  tenants=tenants)
+            lat = np.asarray([r.latency_s for r in rs])
+            p50, p95, p99 = np.percentile(lat, [50, 95, 99])
+            slo_miss = float(np.mean([not r.slo_met for r in rs]))
+            pool1 = sess._pool.stats()
+            # Delivered contract, per response: degraded/shed answers
+            # must satisfy their reported (relaxed/measured) bound;
+            # full-fidelity answers their requested one.
+            contract_ok = all(
+                (float(r.error) <= float(r.delivered_epsilon) + 1e-12
+                 if (r.degraded or r.shed) else bool(r.success))
+                for r in rs)
+            emit.add(
+                f"serve/overload-{label}-{int(round(load * 100))}",
+                float(lat.mean()), {
+                    "queries": q, "lanes": lanes,
+                    "offered_load": round(load, 2),
+                    "rate_qps": round(rate_qps, 2),
+                    "achieved_qps": round(q / wall, 2),
+                    "deadline_ms": round(deadline_s * 1e3, 2),
+                    "p50_ms": round(p50 * 1e3, 2),
+                    "p95_ms": round(p95 * 1e3, 2),
+                    "p99_ms": round(p99 * 1e3, 2),
+                    "slo_miss": round(slo_miss, 3),
+                    "shed": int(pool1["shed"] - pool0["shed"]),
+                    "degraded": int(pool1["degraded"] - pool0["degraded"]),
+                    "migrations": int(pool1["migrations"]
+                                      - pool0["migrations"]),
+                    "contract_ok": bool(contract_ok)})
 
 
 def run_cache(emit: CsvEmitter, *, full: bool = False, smoke: bool = False,
@@ -616,7 +736,8 @@ def run_groupby(emit: CsvEmitter, *, full: bool = False, smoke: bool = False,
 
 
 def run(emit: CsvEmitter, *, full: bool = False, smoke: bool = False,
-        arrivals: "str | None" = None):
+        arrivals: "str | None" = None,
+        offered_load: "float | None" = None):
     q = 6 if smoke else 16
     rows = 40_000 if smoke else 120_000
     n_cap = 1 << 12 if smoke else (1 << 14 if full else 1 << 13)
@@ -675,7 +796,8 @@ def run(emit: CsvEmitter, *, full: bool = False, smoke: bool = False,
             "speedup_vs_batched": round(t_batch / max(t_pool, 1e-9), 2)})
 
     if arrivals == "poisson":
-        run_open_loop(emit, full=full, smoke=smoke)
+        run_open_loop(emit, full=full, smoke=smoke,
+                      offered_load=offered_load)
     elif arrivals is not None:
         raise ValueError(f"unknown arrival process {arrivals!r} "
                          f"(supported: 'poisson')")

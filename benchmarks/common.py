@@ -82,10 +82,16 @@ class CsvEmitter:
 
     def json_rows(self, prefix: str, keys=("bench", "us_per_call",
                                            "rows_touched")):
-        """Machine-readable rows for one section (names under ``prefix``)."""
+        """Machine-readable rows for one section (names under ``prefix``).
+
+        Rows are SPARSE: only keys a benchmark actually populated are
+        emitted -- sections share one artifact, and padding every row
+        with the union schema's nulls buries the real fields.  Consumers
+        must ``.get()`` tolerantly.
+        """
         out = []
         for rec in self.records:
             if not rec["bench"].startswith(prefix):
                 continue
-            out.append({k: rec.get(k) for k in keys})
+            out.append({k: rec[k] for k in keys if k in rec})
         return out

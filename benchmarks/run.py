@@ -31,7 +31,9 @@ SERVE_JSON_KEYS = (
     "hit_rate", "dispatches_per_query", "warm_speedup_p50", "cache_served",
     "warm_verify_failures", "num_groups", "speedup_vs_indep",
     "rows_scanned_block", "rows_scanned_indep", "rows_ratio", "parity_exact",
-    "parity_theta", "parity_error", "rare_group_ok")
+    "parity_theta", "parity_error", "rare_group_ok",
+    "offered_load", "rate_qps", "achieved_qps", "deadline_ms",
+    "shed", "degraded", "migrations", "contract_ok")
 
 
 def _run_fig1(emit, args):
@@ -78,7 +80,14 @@ def _run_fused(emit, args):
 def _run_serve(emit, args):
     from . import bench_serve_pool
     bench_serve_pool.run(emit, full=args.full, smoke=args.smoke,
-                         arrivals=args.arrivals)
+                         arrivals=args.arrivals,
+                         offered_load=args.offered_load)
+
+
+def _run_overload(emit, args):
+    from . import bench_serve_pool
+    bench_serve_pool.run_overload(emit, full=args.full, smoke=args.smoke,
+                                  offered_load=args.offered_load)
 
 
 def _run_distributed(emit, args):
@@ -111,6 +120,7 @@ SECTIONS = {
     "distributed": _run_distributed,
     "cache": _run_cache,
     "groupby": _run_groupby,
+    "overload": _run_overload,
 }
 
 
@@ -144,6 +154,12 @@ def main() -> None:
                     help="also run the open-loop serve benchmark with this "
                          "arrival process (serve section: seeded Poisson "
                          "arrivals, p50/p95/p99 latency, SLO-miss rate)")
+    ap.add_argument("--offered-load", type=float, default=None,
+                    metavar="FRAC",
+                    help="offered load as a fraction of measured capacity, "
+                         "shared by the poisson open-loop bench (default "
+                         "0.6) and the overload section (default sweep "
+                         "1.0,1.5)")
     ap.add_argument("--devices", type=int, default=None, metavar="N",
                     help="simulate an N-device host mesh for the "
                          "distributed section (sets XLA_FLAGS before jax "
@@ -177,9 +193,10 @@ def main() -> None:
             wrote_json = True
     if args.json and any(s in sections
                          for s in ("serve", "distributed", "cache",
-                                   "groupby")):
-        # serve + distributed + cache + groupby share one artifact (all
-        # emit serve/ rows); written once, after every selected section.
+                                   "groupby", "overload")):
+        # serve + distributed + cache + groupby + overload share one
+        # artifact (all emit serve/ rows); written once, after every
+        # selected section.
         with open("BENCH_serve.json", "w") as fh:
             json.dump(emit.json_rows("serve/", keys=SERVE_JSON_KEYS),
                       fh, indent=2)

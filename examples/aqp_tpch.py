@@ -99,6 +99,52 @@ def main():
           f"{st['fused_dispatches']} fused dispatches, "
           f"{st['rows_touched']:,} rows touched")
 
+    # --- overload-native serving (DESIGN.md SS7 phase J) ------------------
+    # With degrade=True the deadline becomes load-bearing: admission
+    # relaxes epsilon to the largest bucket rung whose predicted cost fits
+    # the remaining budget (a DEGRADED answer, relaxed bound reported in
+    # delivered_epsilon), and a deadline that cannot be met even degraded
+    # is SHED -- an immediate partial answer from a small pilot sample,
+    # its measured error bar reported instead of queueing into a miss.
+    print("\n--- overload-native: degraded + shed answers (phase J) ---")
+    sess2 = AQPSession(data, B=300, n_min=1000, n_max=2000, seed=3,
+                       degrade=True)
+    tight = Query(func="avg", epsilon=0.005 * avg_mag)
+    # Prime the admission cost model: a few full-fidelity runs teach it
+    # the per-rung tick cost and the epsilon-vs-n sqrt law (an unprimed
+    # model admits everything untouched -- degradation is never blind).
+    for _ in range(3):
+        sess2.submit(Request(query=tight, deadline_s=300.0))
+    t0 = time.perf_counter()
+    sess2.drain()
+    full_s = (time.perf_counter() - t0) / 3
+    # One throwaway shed compiles the pilot program (one per estimator
+    # func); the showcased shed below is then a single warm dispatch.
+    sess2.submit(Request(query=tight, deadline_s=1e-6))
+    sess2.drain()
+
+    def show(label, r, eps_req):
+        kind = "shed" if r.shed else ("degraded" if r.degraded else "full")
+        print(f"[{label}] {kind}: requested eps {eps_req:.4g} -> "
+              f"delivered eps {r.delivered_epsilon:.4g} "
+              f"(B={r.delivered_B}), n={np.round(np.mean(r.n)):.0f} "
+              f"rows/group, {r.latency_s * 1e3:.1f}ms, "
+              f"SLO {'met' if r.slo_met else 'MISSED'}")
+
+    # Budget ~40% of the measured full-fidelity latency: enough for a
+    # coarser rung, not for the requested epsilon.
+    t_deg = sess2.submit(Request(query=tight, deadline_s=0.4 * full_s))
+    r_deg = next(o for o in sess2.drain() if o.rid == t_deg.rid)
+    show("tight deadline", r_deg, tight.epsilon)
+    # A ~10ms budget is hopeless at any rung: shed at submit, answered
+    # from the pilot before this call returns.
+    t_shed = sess2.submit(Request(query=tight, deadline_s=0.010))
+    r_shed = next(o for o in sess2.drain() if o.rid == t_shed.rid)
+    show("blown deadline", r_shed, tight.epsilon)
+    pst = sess2.stats()["pool"]
+    print(f"pool counters: shed={pst['shed']} degraded={pst['degraded']} "
+          f"migrations={pst['migrations']}")
+
     # --- the synchronous compat wrapper over the same machinery ---
     svc = AQPService(data, B=300, n_min=1000, n_max=2000, seed=1)
     batch = [Query(func="avg", epsilon=0.02 * avg_mag),

@@ -270,6 +270,12 @@ class Request:
     it was met (``SessionResponse.slo_met``).  ``priority`` breaks ties
     first: higher values are admitted ahead of lower ones.
 
+    ``tenant`` names the traffic class the request bills to.  Under
+    weighted fair queueing (``AQPSession(wfq=True)``) each tenant's
+    backlog advances its own virtual clock, so one tenant's burst cannot
+    starve the others; the default ``""`` tenant keeps single-tenant
+    deployments on plain (priority, deadline, FIFO) order.
+
     ``rid`` is a stable process-unique id assigned at construction, so a
     request can be correlated across submit / poll / logs even before the
     session sees it.
@@ -277,6 +283,7 @@ class Request:
     query: Query
     deadline_s: Optional[float] = None     # latency budget (s from submit)
     priority: int = 0                      # higher = admitted first
+    tenant: str = ""                       # fair-queueing traffic class
     rid: int = dataclasses.field(
         default_factory=lambda: next(_RID))
 

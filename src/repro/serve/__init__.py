@@ -4,6 +4,8 @@ from .batching import ContinuousBatcher
 from .lane_pool import GroupPoolResponse, LanePool, PoolResponse
 from .planner import Planner, PoolPlan, Route
 from .session import AQPSession, SessionResponse, SessionTicket
+from .slo import (AdmissionController, CostModel, DegradePlan, FairQueue,
+                  eps_for_budget)
 from .warm_cache import CachedAnswer, WarmCache, WarmEntry
 
 # NOTE: ``Request`` here is the AQP serving request (aqp/query.py: Query +
@@ -11,8 +13,9 @@ from .warm_cache import CachedAnswer, WarmCache, WarmEntry
 # request lives at ``repro.serve.batching.Request``; import it from the
 # submodule.
 __all__ = [
-    "AQPResponse", "AQPService", "AQPSession", "CachedAnswer",
-    "ContinuousBatcher", "GroupPoolResponse", "LanePool", "Planner",
-    "PoolPlan", "PoolResponse", "Request", "Route", "SessionResponse",
-    "SessionTicket", "WarmCache", "WarmEntry",
+    "AQPResponse", "AQPService", "AQPSession", "AdmissionController",
+    "CachedAnswer", "ContinuousBatcher", "CostModel", "DegradePlan",
+    "FairQueue", "GroupPoolResponse", "LanePool", "Planner", "PoolPlan",
+    "PoolResponse", "Request", "Route", "SessionResponse", "SessionTicket",
+    "WarmCache", "WarmEntry", "eps_for_budget",
 ]

@@ -67,6 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..aqp.query import Query
+from ..core import bootstrap
 from ..core import mesh as core_mesh
 from ..core.fused import (LaneParams, LaneState, ShardSpec, bucket_ladder,
                           fused_step, grouped_seg_cap, init_lane_state,
@@ -78,6 +79,8 @@ from ..core.fused import (LaneParams, LaneState, ShardSpec, bucket_ladder,
 from ..core import estimators
 from ..core.sampling import (GroupedData, ShardLayout, counter_slot_table,
                              stratified_slot_tables)
+from .slo import (PILOT_B_FLOOR, AdmissionController, FairQueue,
+                  predict_n0)
 
 Array = jax.Array
 
@@ -98,10 +101,23 @@ class PoolResponse:
     queue_wait_s: float     # submit -> splice
     ticks_in_lane: int      # loop ticks while resident
     lane: int               # global lane id (tier * tier_lanes + local)
-    tier: int               # width tier the query rode in
+    tier: int               # width tier the query rode in (-1: shed, no lane)
     spliced_tier_width: int  # tier's max active watermark at splice time
     beta: Optional[np.ndarray] = None   # (m+1,) final fitted coefficients
     warm: bool = False      # lane was warm-started from a cached prediction
+    # Phase J (overload-native scheduling): the delivered contract.  A
+    # degraded answer ran at ``delivered_epsilon > epsilon`` (relaxed along
+    # Eq. 13 to fit the deadline); a shed answer is an n_min pilot whose
+    # ``delivered_epsilon`` is its MEASURED bootstrap quantile.  Either way
+    # ``error <= delivered_epsilon`` holds -- degradation trades the bound,
+    # never the correctness of the bound it reports.
+    epsilon: Optional[float] = None           # requested bound
+    delivered_epsilon: Optional[float] = None  # bound actually satisfied
+    delivered_B: Optional[int] = None          # replicate count actually run
+    degraded: bool = False   # epsilon was relaxed at admission
+    shed: bool = False       # answered by pilot, never occupied a lane
+    migrations: int = 0      # cross-tier migrations while resident
+    tenant: str = ""         # fair-queueing traffic class
 
 
 @dataclasses.dataclass
@@ -157,17 +173,33 @@ class _Ticket:
     deadline_at: Optional[float] = None     # absolute perf_counter deadline
     warm_n0: Optional[np.ndarray] = None    # (m,) cached n* prediction
     warm_beta: Optional[np.ndarray] = None  # (m+1,) cached coefficients
+    tenant: str = ""                        # fair-queueing traffic class
+    vft: float = 0.0                        # WFQ virtual finish time
+    delivered_epsilon: Optional[float] = None  # set when degraded
+    degraded: bool = False
+    migrations: int = 0                     # cross-tier moves while resident
     spliced_s: float = 0.0
     spliced_tick: int = 0
     spliced_width: int = 0
 
     @property
     def order(self):
-        """Admission order: priority class first, then earliest deadline,
-        then FIFO.  Ordering changes WHEN a query is spliced, never its
+        """Admission order: priority class first, then weighted-fair
+        virtual finish time, then earliest deadline, then FIFO.  With fair
+        queueing off every ticket's ``vft`` is 0.0, so the order reduces
+        exactly to the phase-E (priority, deadline, FIFO) scan; with it on,
+        each tenant's backlog advances its own virtual clock
+        (``slo.FairQueue``), so a burst from one tenant cannot starve the
+        others.  Ordering changes WHEN a query is spliced, never its
         trajectory (a lane's draws depend only on its own key and age)."""
         ddl = self.deadline_at if self.deadline_at is not None else np.inf
-        return (-self.priority, ddl, self.qid)
+        return (-self.priority, self.vft, ddl, self.qid)
+
+    @property
+    def eps_run(self) -> float:
+        """The bound the lane actually runs at (degraded or requested)."""
+        return (self.delivered_epsilon if self.delivered_epsilon is not None
+                else self.epsilon)
 
 
 @dataclasses.dataclass
@@ -239,6 +271,57 @@ def _splice(state: LaneState, params: LaneParams, lanes, keys, scale_rows,
     return st, pr
 
 
+# The per-lane rows a cross-tier migration must carry: every LaneState leaf
+# (the whole MISS trajectory: buffer, profile, fit, flags) plus the
+# per-lane LaneParams rows _splice swaps.  ``slot_idx`` / ``group_sizes``
+# are POOL-shared (every tier is built from the same sample key), so the
+# moved lane rebinds to an identical table -- which is why a migrated
+# trajectory is bit-equal to its solo run: the lane's draws depend only on
+# its own rows, and the ESTIMATE bucket it rides is compute width only
+# (width invariance is asserted bitwise in tests/test_core_fused_buckets).
+_STATE_LEAVES = ("keys", "k", "iters", "n_cur", "filled", "buf", "prof_n",
+                 "prof_loge", "e", "theta", "done", "failed", "beta", "r2")
+_PARAM_LANE_LEAVES = ("scale", "epsilons", "deltas", "est_fids", "boot_base",
+                      "warm", "warm_n0", "warm_beta")
+
+
+@jax.jit
+def _migrate(src_st: LaneState, src_pr: LaneParams, dst_st: LaneState,
+             dst_pr: LaneParams, src_lane, dst_lane):
+    """Splice lane ``src_lane`` of one tier into ``dst_lane`` of another,
+    mid-flight: row-copy the full carry (phase-J cross-tier migration) and
+    park the source lane as done.  One jitted program for the whole move,
+    shared by every (tier, tier) pair -- equal tier shapes."""
+    st = dst_st._replace(**{
+        f: getattr(dst_st, f).at[dst_lane].set(getattr(src_st, f)[src_lane])
+        for f in _STATE_LEAVES})
+    pr = dst_pr._replace(**{
+        f: getattr(dst_pr, f).at[dst_lane].set(getattr(src_pr, f)[src_lane])
+        for f in _PARAM_LANE_LEAVES})
+    parked = src_st._replace(done=src_st.done.at[src_lane].set(True))
+    return parked, st, pr
+
+
+@partial(jax.jit, static_argnames=("est_name", "B", "metric"))
+def _pilot_estimate(values, slot_tab, sizes, scale_row, key, delta, *,
+                    est_name: str, B: int, metric: str):
+    """The shed path's answer: one n_min-wide stratified pilot ESTIMATE.
+
+    Gathers each group's pilot prefix through its own counter slot table
+    (the same permuted-prefix contract resident lanes use) and returns the
+    measured ``(1 - delta)`` bootstrap quantile plus the point estimate --
+    a real answer with a real (wide) error bar, at the cost of ONE tiny
+    dispatch instead of a lane residency.
+    """
+    est = estimators.get(est_name)
+    n_pilot = slot_tab.shape[1]
+    sample = values[slot_tab]                               # (m, n_pilot, c)
+    mask = (jnp.arange(n_pilot, dtype=jnp.int32)[None, :]
+            < jnp.minimum(sizes, n_pilot)[:, None]).astype(jnp.float32)
+    return bootstrap.estimate_error(
+        est, sample, mask, scale_row, key, delta, B=B, metric=metric)
+
+
 class LanePool:
     """A fixed pool of query lanes with width-aware admission and
     retire-and-refill.
@@ -260,7 +343,10 @@ class LanePool:
                  gate_gather: bool = True, seed: int = 0,
                  sample_key: Optional[Array] = None,
                  ticks_per_sync: int = 1, tiers: "int | str" = "auto",
-                 data_shards: int = 1, mesh=None):
+                 data_shards: int = 1, mesh=None,
+                 degrade: bool = False, wfq: bool = False,
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 migrate: bool = False, max_degrade: float = 8.0):
         self.data = data
         self.lanes = int(lanes)
         if tiers == "auto":
@@ -396,6 +482,29 @@ class LanePool:
         self.grouped_retired = 0     # blocks harvested
         self.block_ticks = 0         # block-resident loop ticks
         self.warm_spliced = 0     # warm-started lanes admitted (phase H)
+        # Phase J: overload-native scheduling.  ``degrade`` arms the
+        # deadline-driven admission controller (relax epsilon along Eq. 13
+        # when the predicted cost misses the deadline; shed with a pilot
+        # answer when it is already blown); ``wfq`` arms per-tenant
+        # weighted fair queueing; ``migrate`` arms cross-tier lane
+        # migration (tiers >= 2, single-device layout only: a sharded
+        # pool's tiers cover SEGMENT fills).  All default off -- the
+        # phase-E pool is the exact special case.
+        self.degrade_enabled = bool(degrade)
+        self._slo = AdmissionController(
+            bucket_ladder(self._spec["n_cap"], self._spec["n_max"]),
+            num_groups=m, n_min=self._spec["n_min"],
+            max_degrade=max_degrade) if degrade else None
+        self._wfq = FairQueue(tenant_weights) if wfq else None
+        self.migrate_enabled = (bool(migrate) and self.tiers >= 2
+                                and self.data_shards == 1)
+        self.shed = 0             # requests answered by pilot, never laned
+        self.degraded = 0         # requests admitted at a relaxed epsilon
+        self.migrations = 0       # cross-tier lane moves
+        self._group_sizes_host = np.diff(
+            np.asarray(data.offsets)).astype(np.int64)
+        self._pilot_tab: Optional[Array] = None   # per-epoch pilot tables
+        self._pilot_values: Optional[Array] = None
         self.peak_queue_depth = 0
         self._active_frac_sum = 0.0   # sum over dispatches of busy/tier_lanes
         self._retired_rows = 0        # rows_sampled of retired queries
@@ -436,12 +545,18 @@ class LanePool:
                priority: int = 0,
                deadline_at: Optional[float] = None,
                warm_n0: Optional[np.ndarray] = None,
-               warm_beta: Optional[np.ndarray] = None) -> int:
+               warm_beta: Optional[np.ndarray] = None,
+               tenant: str = "") -> int:
         """Enqueue one query; returns its qid (results keyed on it).
 
         ``priority`` / ``deadline_at`` (an absolute ``time.perf_counter``
         timestamp) shape ADMISSION ordering only -- higher priority first,
-        then earliest deadline, then FIFO; see ``_Ticket.order``.
+        then earliest deadline, then FIFO; see ``_Ticket.order``.  With
+        ``wfq=True`` the scan inserts the tenant's weighted-fair virtual
+        finish time between priority and deadline; with ``degrade=True`` a
+        deadline already blown at submit is shed HERE -- the pilot answer
+        lands in :attr:`results` before this call returns, and the queue
+        never sees the ticket.
 
         ``warm_n0``/``warm_beta`` (phase H, both or neither) splice the
         query as a WARM lane: tick 0 jumps to the cached prediction and
@@ -476,13 +591,41 @@ class LanePool:
                 np.asarray(warm_n0, np.int64).reshape((m,)),
                 1, self._spec["n_cap"]).astype(np.int32)
             warm_beta = np.asarray(warm_beta, np.float32).reshape((m + 1,))
-        self._queue.append(_Ticket(
+        vft = 0.0
+        if self._wfq is not None:
+            # The WFQ cost quantum is the predicted watermark -- rows a
+            # lane will hold, the resource tenants actually contend for.
+            # Falls back to n_min (every lane's floor) while unprimed.
+            wm = None
+            if self._slo is not None:
+                wm = self._slo.cost.predict_watermark(
+                    query.func, float(query.epsilon), warm_n0=warm_n0)
+            if wm is None:
+                wm = (int(np.max(warm_n0)) if warm_n0 is not None
+                      else self._spec["n_min"])
+            vft = self._wfq.stamp(tenant, float(wm))
+        tk = _Ticket(
             qid=qid, func=query.func, fid=self._family[query.func],
             epsilon=float(query.epsilon), delta=float(query.delta),
             key=np.asarray(key), scale_row=scale_row,
             submitted_s=time.perf_counter(),
             priority=int(priority), deadline_at=deadline_at,
-            warm_n0=warm_n0, warm_beta=warm_beta))
+            warm_n0=warm_n0, warm_beta=warm_beta,
+            tenant=str(tenant), vft=vft)
+        if self._slo is not None and deadline_at is not None:
+            # Shed at SUBMIT, not just when already blown: once the
+            # predicted queue wait plus the CHEAPEST degraded service
+            # exceeds the budget, queueing only converts a fast partial
+            # answer into a late one.  An unprimed cost model never
+            # predicts hopeless -- the ticket queues and we find out.
+            if (deadline_at <= tk.submitted_s
+                    or self._slo.hopeless(
+                        queue_ahead=len(self._queue),
+                        busy=self.busy_lanes, lanes=self.lanes,
+                        deadline_at=deadline_at, now=tk.submitted_s)):
+                self._shed(tk, tk.submitted_s, blown=True)
+                return qid
+        self._queue.append(tk)
         self.peak_queue_depth = max(self.peak_queue_depth, len(self._queue))
         return qid
 
@@ -584,18 +727,51 @@ class LanePool:
         now = time.perf_counter()
         m = self.data.num_groups
         tl = self.tier_lanes
+        if self._slo is not None:
+            # Load shedding, sweep half: a queued ticket whose deadline
+            # passed while it waited is answered by pilot NOW instead of
+            # burning a lane on an already-missed SLO.
+            for tk in [t for t in self._queue
+                       if t.deadline_at is not None and t.deadline_at <= now]:
+                self._queue.remove(tk)
+                self._shed(tk, now, blown=True)
         # One padded splice batch per tier that receives lanes this round.
         rounds: Dict[int, list] = {}
         while self._queue:
             ti = self._place_tier()
             if ti is None:
                 break
-            tier = self._tiers[ti]
-            lane = next(i for i, t in enumerate(tier.occupant) if t is None)
-            # SLO-aware admission: highest priority, then earliest
-            # deadline, then FIFO (queues are small; linear scan is fine).
+            # SLO-aware admission: highest priority, then WFQ virtual
+            # finish time, then earliest deadline, then FIFO (queues are
+            # small; linear scan is fine).
             tk = min(self._queue, key=lambda t: t.order)
             self._queue.remove(tk)
+            if self._slo is not None and tk.deadline_at is not None:
+                # Deadline-driven degradation: if the cost model predicts
+                # the full-fidelity run cannot fit the remaining budget,
+                # relax epsilon along Eq. 13 to the largest configuration
+                # that does; if nothing fits, shed.  The splice below runs
+                # the lane AT the delivered bound.
+                plan = self._slo.plan(
+                    func=tk.func, epsilon=tk.epsilon,
+                    deadline_at=tk.deadline_at, now=now,
+                    warm_n0=tk.warm_n0, warm_beta=tk.warm_beta)
+                if plan.action == "shed":
+                    self._shed(tk, now, blown=False)
+                    continue
+                if plan.action == "degrade":
+                    tk.delivered_epsilon = plan.epsilon
+                    tk.degraded = True
+                    self.degraded += 1
+                    if tk.warm_n0 is not None:
+                        # Re-aim the warm tick-0 jump at the RELAXED bound
+                        # (Eq. 13 forward on the cached coefficients).
+                        tk.warm_n0 = np.clip(
+                            predict_n0(tk.warm_beta, plan.epsilon,
+                                       n_min=self._spec["n_min"]),
+                            1, self._spec["n_cap"]).astype(np.int32)
+            tier = self._tiers[ti]
+            lane = next(i for i, t in enumerate(tier.occupant) if t is None)
             tk.spliced_s, tk.spliced_tick = now, self.ticks
             tk.spliced_width = tier.width
             tier.occupant[lane] = tk
@@ -603,6 +779,8 @@ class LanePool:
             # host-side so the lane's RETIRED predecessor's width neither
             # repels the next placement nor inflates ``spliced_width``.
             tier.filled_host[lane] = 0
+            if self._wfq is not None:
+                self._wfq.on_admit(tk.vft)
             rounds.setdefault(ti, []).append((lane, tk))
         for ti, picks in rounds.items():
             tier = self._tiers[ti]
@@ -621,13 +799,70 @@ class LanePool:
             wb = np.zeros((tl, m + 1), np.float32)
             for j, (lane, tk) in enumerate(picks):
                 lanes[j], keys[j], rows[j] = lane, tk.key, tk.scale_row
-                eps[j], dts[j], fids[j] = tk.epsilon, tk.delta, tk.fid
+                eps[j], dts[j], fids[j] = tk.eps_run, tk.delta, tk.fid
                 if tk.warm_n0 is not None:
                     warm[j], wn0[j], wb[j] = True, tk.warm_n0, tk.warm_beta
                     self.warm_spliced += 1
             tier.state, tier.params = _splice(
                 tier.state, tier.params, lanes, keys, rows, eps, dts, fids,
                 warm, wn0, wb, n_min=self._spec["n_min"])
+
+    # -- phase J: load shedding ---------------------------------------------
+    def _pilot_table(self) -> Array:
+        """The shed path's (m, n_pilot) slot tables under the CURRENT
+        sample key -- built once per epoch (rotation invalidates), shared
+        by every pilot answer in it."""
+        if self._pilot_tab is None:
+            offs = jnp.asarray(np.asarray(self.data.offsets))
+            starts = offs[:-1].astype(jnp.int32)
+            sizes = (offs[1:] - offs[:-1]).astype(jnp.int32)
+            n_pilot = int(min(self._spec["n_min"], self._spec["n_cap"]))
+            self._pilot_tab = counter_slot_table(
+                self._sample_key, starts, sizes, n_pilot)
+        return self._pilot_tab
+
+    def _shed(self, tk: _Ticket, now: float, *, blown: bool) -> None:
+        """Answer ``tk`` immediately from an n_min pilot sample.
+
+        The response carries the MEASURED pilot error as its delivered
+        epsilon (the bound the answer actually satisfies) and the reduced
+        pilot replicate count -- the delivered-B half of the degradation
+        contract.  One pilot B per pool means one compiled pilot program
+        per estimator func; an overloaded refill may shed a whole sweep of
+        blown tickets, and each must stay a single warm dispatch.  The
+        request never occupies a lane.
+        """
+        del blown
+        if self._pilot_values is None:
+            # The pilot gathers on the UNSHARDED host values: one tiny
+            # (m, n_min) dispatch, layout-independent, so shedding works
+            # identically for flat, tiered, and sharded pools.
+            self._pilot_values = jnp.asarray(np.asarray(self.data.values))
+        pilot_B = max(PILOT_B_FLOOR, int(self._spec["B"]) // 4)
+        e, theta = _pilot_estimate(
+            self._pilot_values, self._pilot_table(),
+            jnp.asarray(self._group_sizes_host.astype(np.int32)),
+            jnp.asarray(tk.scale_row, jnp.float32), jnp.asarray(tk.key),
+            tk.delta, est_name=tk.func, B=pilot_B,
+            metric=self._spec["metric"])
+        err = float(e)
+        n_pilot = int(min(self._spec["n_min"], self._spec["n_cap"]))
+        n = np.minimum(self._group_sizes_host, n_pilot)
+        rows = int(n.sum())
+        self.results[tk.qid] = PoolResponse(
+            qid=tk.qid, func=tk.func, theta=np.asarray(theta),
+            error=err, success=bool(err <= tk.epsilon), failed=False,
+            n=n, iterations=0, rows_sampled=rows,
+            wall_time_s=time.perf_counter() - tk.submitted_s,
+            queue_wait_s=now - tk.submitted_s,
+            ticks_in_lane=0, lane=-1, tier=-1, spliced_tier_width=0,
+            beta=None, warm=False, epsilon=tk.epsilon,
+            delivered_epsilon=max(tk.epsilon, err), delivered_B=pilot_B,
+            degraded=False, shed=True, tenant=tk.tenant)
+        self.shed += 1
+        self.retired += 1
+        self._retired_rows += rows
+        self._shard_rows_retired[0] += rows
 
     def _harvest(self) -> int:
         """Retire finished lanes; returns the number retired this sync."""
@@ -663,7 +898,17 @@ class LanePool:
                     lane=ti * self.tier_lanes + lane, tier=ti,
                     spliced_tier_width=t.spliced_width,
                     beta=np.asarray(beta[lane]),
-                    warm=t.warm_n0 is not None)
+                    warm=t.warm_n0 is not None, epsilon=t.epsilon,
+                    delivered_epsilon=t.eps_run,
+                    delivered_B=int(self._spec["B"]),
+                    degraded=t.degraded, migrations=t.migrations,
+                    tenant=t.tenant)
+                if self._slo is not None:
+                    # Teach the cost model: the bound the lane ran at, how
+                    # wide it grew, how long it stayed resident.
+                    self._slo.cost.observe_retirement(
+                        t.func, t.eps_run, int(filled[lane].max()),
+                        self.ticks - t.spliced_tick)
                 tier.occupant[lane] = None
                 self.retired += 1
                 self._retired_rows += rows
@@ -712,17 +957,61 @@ class LanePool:
             del self._blocks[qid]
         return len(finished)
 
+    def _maybe_migrate(self) -> None:
+        """Cross-tier lane migration (phase J): when ONE straggler's
+        watermark drives a tier's ESTIMATE bucket above what its
+        tier-mates need, splice it into a tier already riding that bucket
+        (or an empty one) at this sync point.  The move is a full row copy
+        of the lane's carry (:func:`_migrate`), so the trajectory is
+        bit-equal to staying put -- migration changes what the lane's OLD
+        neighbors pay, never any answer.  At most one move per sync: the
+        watermark view refreshes per harvest anyway."""
+        if not self.migrate_enabled:
+            return
+        for si, src in enumerate(self._tiers):
+            occ = [(int(src.filled_host[i].max()), i)
+                   for i, tk in enumerate(src.occupant) if tk is not None]
+            if len(occ) < 2:
+                continue
+            occ.sort(reverse=True)
+            (w1, lane1), (w2, _) = occ[0], occ[1]
+            if self.bucket_of(w1) <= self.bucket_of(w2):
+                continue   # the straggler isn't (alone) driving the bucket
+            for di, dst in enumerate(self._tiers):
+                if di == si or dst.busy == self.tier_lanes:
+                    continue
+                if dst.busy and self.bucket_of(dst.width) \
+                        < self.bucket_of(w1):
+                    continue   # would widen the destination's bucket
+                dst_lane = next(i for i, t in enumerate(dst.occupant)
+                                if t is None)
+                src.state, dst.state, dst.params = _migrate(
+                    src.state, src.params, dst.state, dst.params,
+                    lane1, dst_lane)
+                tk = src.occupant[lane1]
+                src.occupant[lane1] = None
+                dst.occupant[dst_lane] = tk
+                dst.filled_host[dst_lane] = src.filled_host[lane1]
+                src.filled_host[lane1] = 0
+                tk.migrations += 1
+                self.migrations += 1
+                return
+
     def tick(self) -> int:
         """One scheduling round: refill, run ``ticks_per_sync`` loop ticks
         per busy tier (one dispatch each) plus one shared-scan dispatch per
-        resident grouped block, harvest.  Returns busy lanes + blocks."""
+        resident grouped block, harvest, maybe migrate a straggler lane.
+        Returns busy lanes + blocks."""
+        t0 = time.perf_counter()
         self._maybe_rotate()
         self._refill()
         ran = False
+        round_rung = 0
         for tier in self._tiers:
             busy = tier.busy
             if not busy:
                 continue
+            round_rung = max(round_rung, tier.width)
             if self._mesh is not None:
                 step = self._step_cache.get(self.ticks_per_sync)
                 if step is None:
@@ -764,6 +1053,13 @@ class LanePool:
         self.ticks += self.ticks_per_sync
         self._harvest()
         self._harvest_blocks()
+        if self._slo is not None:
+            # Teach the cost model what a scheduling round costs at this
+            # compute rung (the harvest's device_get closed the round, so
+            # the wall time covers dispatch + sync).
+            self._slo.cost.observe_round(
+                time.perf_counter() - t0, self.ticks_per_sync, round_rung)
+        self._maybe_migrate()
         return self.busy_lanes + self.busy_blocks
 
     def drain(self, max_ticks: int = 100_000) -> List[PoolResponse]:
@@ -833,10 +1129,11 @@ class LanePool:
                 self._sample_key, starts, sizes, self._spec["n_cap"])
         for tier in self._tiers:
             tier.params = tier.params._replace(slot_idx=slot_idx)
-        # Grouped blocks build their stratified tables from the pool key at
-        # admission; rotation (idle-only: no blocks resident here) just
-        # invalidates the per-epoch cache.
+        # Grouped blocks and shed pilots build their tables from the pool
+        # key; rotation (idle-only: no blocks resident here) just
+        # invalidates the per-epoch caches.
         self._gtables = None
+        self._pilot_tab = None
         self.sample_epochs += 1
 
     # -- accounting ---------------------------------------------------------
@@ -915,6 +1212,10 @@ class LanePool:
             "sample_epochs": self.sample_epochs,
             "pending_rotation": self._pending_sample_key is not None,
             "warm_spliced": self.warm_spliced,
+            # Phase-J overload counters (0 with the policies off).
+            "shed": self.shed,
+            "degraded": self.degraded,
+            "migrations": self.migrations,
             # The process-wide make_sharded_step memo LRU (bounded; every
             # pool shares it, so this is global occupancy, not per-pool).
             "sharded_step_cache": sharded_step_cache_size(),

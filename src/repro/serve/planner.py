@@ -113,10 +113,16 @@ class Planner:
     def __init__(self, *, mode: Optional[Route] = None, window: int = 32,
                  cooldown: int = 32, pool_lanes: Optional[int] = None,
                  pool_ticks_per_sync: Optional[int] = None,
-                 data_shards: int = 1):
+                 data_shards: int = 1, slo_native: bool = False):
         if mode is not None and not isinstance(mode, Route):
             raise TypeError(f"mode must be a Route or None; got {mode!r}")
         self.mode = mode
+        # Phase J: with a degrade-armed pool behind the session, a fusable
+        # request that CARRIES a deadline should always ride the pool --
+        # only the pool can relax its epsilon or shed it with a pilot
+        # answer; the singleton LOOP would just run it to completion and
+        # miss.  Auto mode only (forced modes stay forced).
+        self.slo_native = bool(slo_native)
         self.window = int(window)
         self.cooldown = int(cooldown)
         # Mesh-aware tier sizing (phase G): a sharded pool's per-tick
@@ -164,7 +170,11 @@ class Planner:
         # Auto: join a busy pool (mid-flight admission is the point of the
         # session API); build/use the pool for multi-request waves; serve
         # the cold singleton with one dispatch -- no pool to build, and a
-        # solo closed loop beats pool ticking overhead.
+        # solo closed loop beats pool ticking overhead.  Under slo_native
+        # a deadline-carrying request routes POOL unconditionally: the
+        # pool is where degradation and shedding live.
+        if self.slo_native and request.deadline_s is not None:
+            return Route.POOL
         if pool_busy or pending_fusable >= 2:
             return Route.POOL
         return Route.LOOP

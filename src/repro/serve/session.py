@@ -93,6 +93,16 @@ class SessionResponse:
     rows_sampled: int
     deadline_s: Optional[float] = None
     slo_met: Optional[bool] = None      # None when no deadline was set
+    # Phase J: the delivered contract under overload.  A ``degraded``
+    # answer ran at ``delivered_epsilon > epsilon`` (relaxed at admission
+    # to fit the deadline); a ``shed`` answer is an n_min pilot whose
+    # delivered epsilon is its measured error bar.  Either way the answer
+    # satisfies ``error <= delivered_epsilon`` at the request's delta.
+    epsilon: Optional[float] = None            # requested bound
+    delivered_epsilon: Optional[float] = None  # bound actually satisfied
+    delivered_B: Optional[int] = None          # replicate count actually run
+    degraded: bool = False
+    shed: bool = False
     # GROUP BY requests (phase I): ``theta``/``n`` hold one row per group,
     # ``error``/``success`` the scalar summary (max over groups / the
     # conjunction), and the per-group quantiles and verdicts land here.
@@ -136,7 +146,10 @@ class AQPSession:
                  planner: Optional[Planner] = None,
                  pool_tiers: "int | str" = "auto",
                  data_shards: int = 1, mesh=None,
-                 warm_cache: "bool | WarmCache" = False):
+                 warm_cache: "bool | WarmCache" = False,
+                 degrade: bool = False, wfq: bool = False,
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 migrate: bool = False, max_degrade: float = 8.0):
         self.data = data
         self.store = SampleStore(data, seed=seed)
         self.engine = AQPEngine(data, B=B, n_min=n_min, n_max=n_max,
@@ -150,8 +163,21 @@ class AQPSession:
         # ceiling scales with it, the rest of the host scheduler is unaware.
         self.data_shards = max(int(data_shards), 1)
         self.mesh = mesh
+        # Phase J: overload-native scheduling, all OPT-IN (the phase-E/F
+        # session is the exact special case).  ``degrade`` arms
+        # deadline-driven epsilon relaxation + load shedding in the pool
+        # (and biases the auto planner toward POOL for deadline-carrying
+        # requests -- only the pool can degrade); ``wfq`` arms per-tenant
+        # weighted fair queueing; ``migrate`` arms cross-tier lane
+        # migration.
+        self.degrade = bool(degrade)
+        self.wfq = bool(wfq)
+        self.tenant_weights = tenant_weights
+        self.migrate = bool(migrate)
+        self.max_degrade = float(max_degrade)
         self.planner = (planner if planner is not None
-                        else Planner(data_shards=self.data_shards))
+                        else Planner(data_shards=self.data_shards,
+                                     slo_native=self.degrade))
         self.pool_tiers = pool_tiers
         self.key = jax.random.PRNGKey(seed)
         self._offsets = jnp.asarray(data.offsets)
@@ -310,7 +336,10 @@ class AQPSession:
             d0 = pool.dispatches
             pool.tick()
             self.fused_dispatches += pool.dispatches - d0
-            self._harvest_pool()
+        # Unconditional: a shed request (phase J) is pilot-answered inside
+        # submit()/tick() without ever occupying a lane, so the pool can
+        # hold results while reporting zero busy lanes and an empty queue.
+        self._harvest_pool()
         return self.in_flight
 
     def drain(self, max_pumps: int = 100_000) -> List[SessionResponse]:
@@ -386,7 +415,9 @@ class AQPSession:
                   wall_time_s: float, queue_wait_s: float, route: Route,
                   rows_sampled: int, now: Optional[float] = None,
                   count_epoch: bool = True, group_error=None,
-                  group_success=None) -> None:
+                  group_success=None, delivered_epsilon=None,
+                  delivered_B=None, degraded: bool = False,
+                  shed: bool = False) -> None:
         now = time.perf_counter() if now is None else now
         latency = now - entry.ticket.submitted_s
         ddl = entry.request.deadline_s
@@ -397,7 +428,10 @@ class AQPSession:
             rows_sampled=rows_sampled, deadline_s=ddl,
             slo_met=None if ddl is None else latency <= ddl,
             group_by=bool(entry.request.query.group_by),
-            group_error=group_error, group_success=group_success)
+            group_error=group_error, group_success=group_success,
+            epsilon=entry.request.query.epsilon,
+            delivered_epsilon=delivered_epsilon, delivered_B=delivered_B,
+            degraded=degraded, shed=shed)
         del self._inflight[entry.request.rid]
         if count_epoch:
             self._account_completion()
@@ -412,7 +446,9 @@ class AQPSession:
             use_kernel=self.use_kernel, seed=self.seed,
             sample_key=self._sample_key, ticks_per_sync=ticks_per_sync,
             tiers=self.pool_tiers, data_shards=self.data_shards,
-            mesh=self.mesh)
+            mesh=self.mesh, degrade=self.degrade, wfq=self.wfq,
+            tenant_weights=self.tenant_weights, migrate=self.migrate,
+            max_degrade=self.max_degrade)
         self.planner.built_pool(lanes)
         return pool
 
@@ -420,6 +456,12 @@ class AQPSession:
         if self._pool is None:
             plan = self.planner.pool_plan()
             self._pool = self._build_pool(plan.lanes, plan.ticks_per_sync)
+            # Pre-warm every admission-wave split bucket (see _KEY_BUCKETS):
+            # one-time ~log2 compiles here instead of latency spikes on the
+            # first burst of each novel size mid-serving.
+            warm = jax.random.PRNGKey(0)
+            for b in self._KEY_BUCKETS:
+                jax.random.split(warm, b)
         return self._pool
 
     def _retune(self) -> None:
@@ -497,12 +539,24 @@ class AQPSession:
             self._arrivals.extendleft(reversed(stranded))
             raise
 
+    # Admission-wave key splits are bucketed to powers of two: jax compiles
+    # one split program PER SPLIT COUNT, and open-loop arrival bursts make
+    # the wave size effectively random -- unbucketed, a novel burst size
+    # costs a ~100-300ms compile in the middle of the serving hot path
+    # (a deadline-killer under phase-J load).  Buckets bound the program
+    # count to log2(max wave) and are pre-warmed at pool build.
+    _KEY_BUCKETS = (2, 4, 8, 16, 32, 64)
+
     def _lane_keys(self, entries: List[_InFlight]) -> List[Array]:
         """Per-entry bootstrap keys: ONE split covers the group (one host
-        round-trip), with explicitly pinned keys taking their slot."""
-        self.key, *ks = jax.random.split(self.key, len(entries) + 1)
+        round-trip), with explicitly pinned keys taking their slot.  The
+        split count rounds up to a pre-warmed power-of-two bucket; surplus
+        keys are discarded."""
+        n = len(entries)
+        m = next((b for b in self._KEY_BUCKETS if b > n), n + 1)
+        self.key, *ks = jax.random.split(self.key, m)
         return [k if e.key is None else jnp.asarray(e.key)
-                for e, k in zip(entries, ks)]
+                for e, k in zip(entries, ks[:n])]
 
     def _admit_pool(self, entries: List[_InFlight]) -> None:
         pool = self._ensure_pool()
@@ -520,7 +574,8 @@ class AQPSession:
                                else e.ticket.submitted_s + req.deadline_s)
                 qid = pool.submit(req.query, key=key, priority=req.priority,
                                   deadline_at=deadline_at,
-                                  warm_n0=e.warm_n0, warm_beta=e.warm_beta)
+                                  warm_n0=e.warm_n0, warm_beta=e.warm_beta,
+                                  tenant=req.tenant)
             self._pool_rids[qid] = req.rid
 
     def _harvest_pool(self) -> None:
@@ -539,19 +594,25 @@ class AQPSession:
             entry = self._inflight[rid]
             warm = entry.warm_n0 is not None
             grouped = isinstance(r, GroupPoolResponse)
+            degraded = bool(getattr(r, "degraded", False))
+            shed = bool(getattr(r, "shed", False))
             its = int(np.max(r.iterations)) if grouped else int(r.iterations)
-            if warm and its > 1:
+            if warm and not shed and its > 1:
                 # The cached prediction did not verify in one tick; the
                 # lane fell through to the normal extend loop (still
                 # correct, just not O(1) -- the counter is the signal).
                 self.warm_verify_failures += 1
             err = float(np.max(r.error)) if grouped else float(r.error)
-            self._cache_insert(
-                entry, beta=r.beta, n=r.n, theta=r.theta, error=err,
-                success=bool(r.success), failed=bool(r.failed),
-                iterations=its,
-                group_error=r.error if grouped else None,
-                group_success=r.group_success if grouped else None)
+            if not (degraded or shed):
+                # A degraded run satisfied the RELAXED bound, a shed run
+                # only its measured pilot bar -- neither may teach the
+                # cache an answer keyed on the requested epsilon.
+                self._cache_insert(
+                    entry, beta=r.beta, n=r.n, theta=r.theta, error=err,
+                    success=bool(r.success), failed=bool(r.failed),
+                    iterations=its,
+                    group_error=r.error if grouped else None,
+                    group_success=r.group_success if grouped else None)
             wall = now - entry.ticket.submitted_s
             resident = r.wall_time_s - r.queue_wait_s
             self._complete(
@@ -562,7 +623,10 @@ class AQPSession:
                 rows_sampled=r.rows_sampled, now=now,
                 group_error=np.asarray(r.error) if grouped else None,
                 group_success=(np.asarray(r.group_success) if grouped
-                               else None))
+                               else None),
+                delivered_epsilon=getattr(r, "delivered_epsilon", None),
+                delivered_B=getattr(r, "delivered_B", None),
+                degraded=degraded, shed=shed)
 
     # -- synchronous routes -------------------------------------------------
     def _group_scale(self, func: str, k: int):

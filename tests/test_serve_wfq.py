@@ -1,0 +1,167 @@
+"""Property tests for the phase-J admission order: ``_Ticket.order``
+(priority, WFQ virtual finish time, deadline, FIFO) and the SCFQ
+:class:`~repro.serve.slo.FairQueue` it composes with.
+
+The properties that make the scheduler safe to reason about:
+
+  * ``order`` is a strict TOTAL order over any ticket population (qid is
+    the final tiebreaker), so ``min(queue, key=order)`` is deterministic;
+  * with WFQ off every vft is 0.0 and the order degenerates to the exact
+    phase-E ``(-priority, deadline, qid)`` -- stable FIFO within
+    (priority, deadline) ties;
+  * per-tenant virtual finish times are strictly increasing, so a
+    backlogged tenant's own queue is FIFO;
+  * SCFQ fairness: backlogged tenants are served in proportion to their
+    weights, and no tenant starves -- any stamped ticket is admitted
+    after a bounded number of competitor admissions.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis extra")
+import hypothesis.strategies as st
+
+from repro.serve.lane_pool import _Ticket
+from repro.serve.slo import FairQueue
+
+_INF = float("inf")
+
+
+def _tk(qid, *, priority=0, deadline_at=None, vft=0.0, tenant=""):
+    return _Ticket(qid=qid, func="avg", fid=0, epsilon=0.05, delta=0.05,
+                   key=np.zeros(2, np.uint32), scale_row=np.ones(1),
+                   submitted_s=0.0, priority=priority, deadline_at=deadline_at,
+                   tenant=tenant, vft=vft)
+
+
+priorities = st.integers(min_value=-3, max_value=3)
+deadlines = st.one_of(st.none(), st.floats(min_value=0.0, max_value=100.0,
+                                           allow_nan=False))
+vfts = st.floats(min_value=0.0, max_value=1e6, allow_nan=False)
+
+
+@hypothesis.given(st.lists(st.tuples(priorities, deadlines, vfts),
+                           min_size=1, max_size=40))
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_order_is_a_strict_total_order(rows):
+    """Distinct tickets always compare distinct (qid tiebreaker), so the
+    admission scan has exactly one minimum and sorting is deterministic."""
+    tks = [_tk(i, priority=p, deadline_at=d, vft=v)
+           for i, (p, d, v) in enumerate(rows)]
+    keys = [t.order for t in tks]
+    assert len(set(keys)) == len(keys)
+    # Sorting twice (and from a rotated start) lands the same sequence.
+    a = sorted(tks, key=lambda t: t.order)
+    b = sorted(tks[::-1], key=lambda t: t.order)
+    assert [t.qid for t in a] == [t.qid for t in b]
+
+
+@hypothesis.given(st.lists(st.tuples(priorities, deadlines),
+                           min_size=2, max_size=40))
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_fifo_within_priority_deadline_ties(rows):
+    """WFQ off (vft = 0.0 everywhere): within a (priority, deadline) tie
+    class, tickets are admitted in SUBMISSION order -- the exact phase-E
+    semantics, asserted as the degenerate case of the phase-J key."""
+    tks = [_tk(i, priority=p, deadline_at=d) for i, (p, d) in enumerate(rows)]
+    ranked = sorted(tks, key=lambda t: t.order)
+    for x, y in itertools.combinations(range(len(ranked)), 2):
+        a, b = ranked[x], ranked[y]
+        if a.priority == b.priority and a.deadline_at == b.deadline_at:
+            assert a.qid < b.qid
+    # And the legacy key is reproduced exactly.
+    legacy = sorted(tks, key=lambda t: (
+        -t.priority, t.deadline_at if t.deadline_at is not None else _INF,
+        t.qid))
+    assert [t.qid for t in ranked] == [t.qid for t in legacy]
+
+
+@hypothesis.given(st.lists(st.tuples(priorities, deadlines, vfts),
+                           min_size=2, max_size=40))
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_priority_dominates_vft_dominates_deadline(rows):
+    """The lexicographic contract: priority classes are absolute (WFQ
+    never reorders across them), vft orders within a class, deadline only
+    breaks vft ties."""
+    tks = [_tk(i, priority=p, deadline_at=d, vft=v)
+           for i, (p, d, v) in enumerate(rows)]
+    ranked = sorted(tks, key=lambda t: t.order)
+    for a, b in zip(ranked, ranked[1:]):
+        assert a.priority >= b.priority
+        if a.priority == b.priority:
+            assert a.vft <= b.vft
+
+
+# ---------------------------------------------------------------------------
+# FairQueue (SCFQ) itself
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    st.lists(st.tuples(st.sampled_from(["a", "b", "c"]),
+                       st.floats(min_value=1.0, max_value=1e4,
+                                 allow_nan=False)),
+             min_size=1, max_size=60))
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_vft_strictly_increasing_per_tenant(stamps):
+    """A tenant's successive stamps get strictly increasing virtual
+    finish times (cost > 0), so its own backlog drains FIFO."""
+    fq = FairQueue({"a": 2.0, "b": 1.0, "c": 0.5})
+    last = {}
+    for tenant, cost in stamps:
+        vft = fq.stamp(tenant, cost)
+        if tenant in last:
+            assert vft > last[tenant]
+        last[tenant] = vft
+
+
+@hypothesis.given(st.integers(min_value=1, max_value=8),
+                  st.integers(min_value=1, max_value=8))
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_backlogged_service_proportional_to_weights(wa, wb):
+    """Two always-backlogged tenants with unit-cost tickets are served in
+    proportion to their weights (the WFQ invariant), within one quantum."""
+    fq = FairQueue({"a": float(wa), "b": float(wb)})
+    head = {t: fq.stamp(t, 1.0) for t in ("a", "b")}
+    served = {"a": 0, "b": 0}
+    rounds = 200
+    for _ in range(rounds):
+        t = min(head, key=lambda k: (head[k], k))
+        fq.on_admit(head[t])
+        served[t] += 1
+        head[t] = fq.stamp(t, 1.0)
+    ideal = rounds * wa / (wa + wb)
+    # SCFQ keeps each backlogged tenant within one quantum of its ideal
+    # share at every prefix; ±2 absorbs the startup round.
+    assert abs(served["a"] - ideal) <= 2
+
+
+@hypothesis.given(st.integers(min_value=1, max_value=50),
+                  st.floats(min_value=0.1, max_value=10.0, allow_nan=False),
+                  st.floats(min_value=0.1, max_value=10.0, allow_nan=False))
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_no_starvation_bounded_overtake(n_heavy, w_light, w_heavy):
+    """SCFQ's starvation bound: once a light tenant's ticket is stamped,
+    at most ceil(w_heavy / w_light) unit-cost tickets stamped LATER by a
+    heavy tenant can be admitted ahead of it -- however many the heavy
+    tenant piles on."""
+    fq = FairQueue({"light": w_light, "heavy": w_heavy})
+    light_vft = fq.stamp("light", 1.0)
+    heavies = [fq.stamp("heavy", 1.0) for _ in range(n_heavy)]
+    overtakers = sum(v < light_vft for v in heavies)
+    assert overtakers <= int(np.ceil(w_heavy / w_light))
+    # And admitting in vft order really does reach the light ticket after
+    # at most that many heavy admissions.
+    queue = [("heavy", v) for v in heavies] + [("light", light_vft)]
+    queue.sort(key=lambda kv: (kv[1], kv[0]))
+    ahead = next(i for i, kv in enumerate(queue) if kv[0] == "light")
+    assert ahead <= int(np.ceil(w_heavy / w_light))
+
+
+def test_unknown_tenant_uses_default_weight():
+    fq = FairQueue({"a": 4.0}, default_weight=2.0)
+    assert fq.weight("a") == 4.0
+    assert fq.weight("stranger") == 2.0
+    assert fq.weight("") == 2.0
