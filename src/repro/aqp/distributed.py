@@ -13,6 +13,7 @@ Also provides the exact distributed GROUP BY (segment_agg partials + psum).
 """
 from __future__ import annotations
 
+from functools import lru_cache
 from typing import Tuple
 
 import jax
@@ -29,8 +30,11 @@ from ..kernels import prng
 Array = jax.Array
 
 
-def sharded_group_stats(mesh, gid: Array, x: Array, m: int):
-    """Exact distributed GROUP BY count/sum/sumsq/min/max via psum."""
+@lru_cache(maxsize=16)
+def _group_stats_fn(mesh, m: int):
+    """Jit-compiled exact GROUP BY for one (mesh, m) -- memoized so repeat
+    calls reuse the compiled program instead of re-wrapping per call
+    (misslint ML302)."""
 
     def local(gid_l, x_l):
         valid = (gid_l >= 0).astype(jnp.float32)
@@ -49,10 +53,54 @@ def sharded_group_stats(mesh, gid: Array, x: Array, m: int):
         mx = jax.lax.pmax(mx, "data")
         return cnt, s1, s2, mn, mx
 
-    fn = shard_map(local, mesh=mesh, in_specs=(P("data"), P("data")),
-                   out_specs=(P(), P(), P(), P(), P()))
-    cnt, s1, s2, mn, mx = jax.jit(fn)(gid, x)
+    return jax.jit(shard_map(
+        local, mesh=mesh, in_specs=(P("data"), P("data")),
+        out_specs=(P(), P(), P(), P(), P())))
+
+
+def sharded_group_stats(mesh, gid: Array, x: Array, m: int):
+    """Exact distributed GROUP BY count/sum/sumsq/min/max via psum."""
+    cnt, s1, s2, mn, mx = _group_stats_fn(mesh, m)(gid, x)
     return {"count": cnt, "sum": s1, "sumsq": s2, "min": mn, "max": mx}
+
+
+@lru_cache(maxsize=16)
+def _bootstrap_fn(mesh, m: int, B: int):
+    """Jit-compiled sharded sample+bootstrap body for one (mesh, m, B).
+
+    ``rate`` and the two seeds are TRACED (replicated) operands rather than
+    closure captures: baking them in as constants would both defeat this
+    memo (a new program per MISS iteration's rate) and silently pin stale
+    values (misslint ML302's failure mode)."""
+
+    def local(gid_l, x_l, rate_r, boot_seed, samp_seed):
+        n_l = gid_l.shape[0]
+        shard = jax.lax.axis_index("data")
+        valid = gid_l >= 0
+        g = jnp.maximum(gid_l, 0)
+        # --- shard-local Bernoulli(rate_g) sampling via counter PRNG ---
+        rows = jnp.arange(n_l, dtype=jnp.uint32)
+        u = prng.uniform01(prng.hash3(
+            samp_seed, rows, jnp.full_like(rows, shard)))
+        sampled = valid & (u < rate_r[g])
+        w_mask = sampled.astype(jnp.float32)
+        feats = jnp.stack([w_mask, w_mask * x_l, w_mask * x_l * x_l], axis=1)
+        onehot = jax.nn.one_hot(g, m, dtype=jnp.float32) * w_mask[:, None]
+        # --- replicate weights: Poisson(1) per (row, replicate) ---
+        cols = jnp.arange(1, B + 1, dtype=jnp.uint32)
+        w = prng.poisson1_weights_at(
+            boot_seed,
+            rows[:, None] + shard * jnp.uint32(n_l), cols[None, :])  # (n,B)
+        # replicate 0 = the plain sample (weights all 1).
+        w_all = jnp.concatenate([jnp.ones((n_l, 1), jnp.float32), w], axis=1)
+        # M[g, b, p] = sum_rows onehot[row,g] * w_all[row,b] * feats[row,p]
+        M = jnp.einsum("ng,nb,np->gbp", onehot, w_all, feats)
+        return jax.lax.psum(M, "data")
+
+    return jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(P("data"), P("data"), P(), P(), P()),
+        out_specs=P()))
 
 
 def sharded_bootstrap_estimate(
@@ -82,34 +130,10 @@ def sharded_bootstrap_estimate(
         raise ValueError(f"{est_name} is not a moment estimator")
     if sample_seed is None:
         sample_seed = seed
-
-    def local(gid_l, x_l):
-        n_l = gid_l.shape[0]
-        shard = jax.lax.axis_index("data")
-        valid = gid_l >= 0
-        g = jnp.maximum(gid_l, 0)
-        # --- shard-local Bernoulli(rate_g) sampling via counter PRNG ---
-        rows = jnp.arange(n_l, dtype=jnp.uint32)
-        u = prng.uniform01(prng.hash3(
-            jnp.uint32(sample_seed), rows, jnp.full_like(rows, shard)))
-        sampled = valid & (u < rate[g])
-        w_mask = sampled.astype(jnp.float32)
-        feats = jnp.stack([w_mask, w_mask * x_l, w_mask * x_l * x_l], axis=1)
-        onehot = jax.nn.one_hot(g, m, dtype=jnp.float32) * w_mask[:, None]
-        # --- replicate weights: Poisson(1) per (row, replicate) ---
-        cols = jnp.arange(1, B + 1, dtype=jnp.uint32)
-        w = prng.poisson1_weights_at(
-            jnp.uint32(seed ^ 0x5BD1E995),
-            rows[:, None] + shard * jnp.uint32(n_l), cols[None, :])  # (n,B)
-        # replicate 0 = the plain sample (weights all 1).
-        w_all = jnp.concatenate([jnp.ones((n_l, 1), jnp.float32), w], axis=1)
-        # M[g, b, p] = sum_rows onehot[row,g] * w_all[row,b] * feats[row,p]
-        M = jnp.einsum("ng,nb,np->gbp", onehot, w_all, feats)
-        return jax.lax.psum(M, "data")
-
-    fn = shard_map(local, mesh=mesh, in_specs=(P("data"), P("data")),
-                   out_specs=P())
-    M = jax.jit(fn)(gid, x)                    # (m, B+1, 3)
+    boot_seed = (seed ^ 0x5BD1E995) & 0xFFFFFFFF
+    M = _bootstrap_fn(mesh, m, B)(
+        gid, x, rate,
+        jnp.uint32(boot_seed), jnp.uint32(sample_seed))  # (m, B+1, 3)
     theta = est.moments_finish(M[:, 0])        # (m, 1)
     reps = est.moments_finish(M[:, 1:])        # (m, B, 1)
     err = jnp.sqrt(jnp.sum((reps - theta[:, None]) ** 2, axis=-1))  # (m, B)

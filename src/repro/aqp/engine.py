@@ -24,7 +24,7 @@ import numpy as np
 from ..core import estimators, extensions
 from ..core.framework import MissTrace
 from ..core.l2miss import MissConfig, run_l2miss
-from ..core.sampling import GroupedData, SampleStore
+from ..core.sampling import GroupedData, SampleStore, root_key
 from .query import Query, compile_predicate
 
 
@@ -122,7 +122,7 @@ class AQPEngine:
         if eps is None:
             eps = q.epsilon_rel * self._pilot_scale(q)
         scale = estimators.population_scale_row(q.func, data.scale)
-        key = jax.random.PRNGKey(self.seed)
+        key = root_key(self.seed)
         return fused.fused_grouped(
             data.values, np.asarray(data.offsets), scale, key,
             float(eps), float(q.delta), est_name=q.func, B=self.B,

@@ -116,7 +116,7 @@ def run_blk(
     n = np.ceil((z**2) * avar * (scale**2) / (eps_i**2)).astype(np.int64)
     n = np.minimum(np.maximum(n, 2), data.sizes)
     # Final answer from a sample of the computed size.
-    key = jax.random.PRNGKey(seed)
+    key = S.root_key(seed)
     n_cap = S.bucket_cap(int(n.max()))
     sample, mask = S.stratified_sample(
         key, data.values, jnp.asarray(data.offsets), jnp.asarray(n), n_cap)
@@ -205,7 +205,7 @@ def run_ifocus(
         if not unresolved:
             break
         step = int(step0 * growth ** rounds)
-        for i in set(unresolved):
+        for i in sorted(set(unresolved)):
             lo, hi = data.offsets[i], data.offsets[i + 1]
             k = int(min(step, hi - lo))
             idx = rng.integers(lo, hi, size=k)
@@ -231,7 +231,7 @@ def run_minibatch(
     m = data.num_groups
     scale = (np.asarray(data.scale, np.float32)
              if est.needs_population_scale else np.ones((m,), np.float32))
-    key = jax.random.PRNGKey(seed)
+    key = S.root_key(seed)
     n = np.full((m,), step, np.int64)
     total = 0
     it = 0
@@ -258,7 +258,7 @@ def run_minibatch(
 from functools import lru_cache
 
 
-@lru_cache(maxsize=128)
+@lru_cache(maxsize=64)
 def _mb_estimate(est_name: str, m: int, n_cap: int, c: int, B: int):
     est = get_estimator(est_name)
 

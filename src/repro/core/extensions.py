@@ -23,7 +23,7 @@ import numpy as np
 from .estimators import Estimator, get as get_estimator
 from .framework import MissTrace
 from .l2miss import MissConfig, run_l2miss
-from .sampling import GroupedData
+from .sampling import GroupedData, root_key
 
 Array = jax.Array
 
@@ -124,7 +124,7 @@ def run_ordermiss(
     from . import sampling as S
     from .estimators import evaluate
 
-    key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+    key = root_key(cfg.seed if seed is None else seed)
     m = data.num_groups
     n_vec = jnp.minimum(jnp.full((m,), pilot_n), jnp.asarray(data.sizes))
     thetas = []

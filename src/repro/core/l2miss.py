@@ -67,7 +67,7 @@ class MissConfig:
     cost_weights: Optional[Tuple[float, ...]] = None
 
 
-@lru_cache(maxsize=256)
+@lru_cache(maxsize=64)
 def _estimate_fn(est_name: str, m: int, n_cap: int, c: int, B: int,
                  backend: str, metric: str, use_kernel: bool):
     """Jit-compiled ESTIMATE for one shape bucket.
@@ -106,7 +106,7 @@ class _L2MissSubroutines:
         self.cfg = cfg
         self.m = data.num_groups
         self.sizes = data.sizes.astype(np.int64)
-        self.key = jax.random.PRNGKey(cfg.seed)
+        self.key = sampling.root_key(cfg.seed)
         # Incremental permuted-prefix sampler: nested across iterations, so
         # growing n touches only the extension (DESIGN.md SS3.2).  A caller
         # may pass a resident store (AQPEngine/AQPService) to reuse prefixes

@@ -1,0 +1,145 @@
+"""Runtime sanitizer: give the misslint contracts teeth at test time.
+
+Three of misslint's static rules assert properties that only manifest at
+runtime -- an implicit device->host sync (ML102), a steady-state recompile
+(ML30x), a rogue PRNG root (ML201).  The static pass catches the patterns
+it knows; this module catches the ones it doesn't, by turning each
+contract into something that FAILS a test instead of quietly costing
+latency or repeatability:
+
+* :func:`no_implicit_sync` -- ``jax.transfer_guard`` scoped to
+  device->host: any ``.item()`` / ``float()`` / ``np.asarray`` on a device
+  value inside the region raises.  Explicit ``jax.device_get`` stays legal
+  -- that IS the sanctioned harvest idiom, the guard only bans the
+  accidental syncs.  Host->device transfers (scalar operands at dispatch)
+  are deliberately left alone.
+* :func:`no_new_roots` -- monkeypatches ``jax.random.PRNGKey`` /
+  ``jax.random.key`` for the region; steady-state serving derives every
+  key by split/fold_in from roots built at init, so a fresh root inside
+  the loop is a smuggled stream the repeatability audit never saw.
+* :func:`compile_sentinel` -- snapshots a jit wrapper's ``_cache_size()``
+  and raises on exit if the region compiled anything new.  Wrap the
+  steady-state portion of a serving test after warmup: a cache miss there
+  is the PR 9 ``_unstack`` bug class resurfacing.
+* :func:`steady_state` -- the three composed, for serving-loop tests.
+
+Everything is gated on ``MISS_SANITIZE`` (see :func:`enabled`) so
+production code paths can call :func:`guarded` unconditionally; with the
+variable unset the wrappers are inert pass-throughs.  CI sets
+``MISS_SANITIZE=1`` for the tier-1 job.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Iterator, Optional, Sequence
+
+import jax
+
+__all__ = [
+    "SanitizerError", "enabled", "no_implicit_sync", "no_new_roots",
+    "compile_sentinel", "steady_state", "guarded",
+]
+
+
+class SanitizerError(AssertionError):
+    """A runtime contract of the serving stack was violated under
+    MISS_SANITIZE.  Subclasses AssertionError so pytest reports it as a
+    failure, not an error."""
+
+
+def enabled() -> bool:
+    """True when the MISS_SANITIZE environment variable is set truthy."""
+    return os.environ.get("MISS_SANITIZE", "").lower() not in (
+        "", "0", "false", "off", "no")
+
+
+@contextlib.contextmanager
+def no_implicit_sync() -> Iterator[None]:
+    """Raise on any IMPLICIT device->host transfer inside the region.
+
+    ``jax.device_get`` (and ``device_put``) remain allowed: the contract
+    is not "no syncs" but "every sync is a named harvest point".
+    """
+    if not enabled():
+        yield
+        return
+    with jax.transfer_guard_device_to_host("disallow"):
+        yield
+
+
+@contextlib.contextmanager
+def no_new_roots() -> Iterator[None]:
+    """Forbid fresh PRNG root construction inside the region.
+
+    Steady-state serving must derive all randomness via split/fold_in
+    from the roots audited at init (misslint ML201); a root minted inside
+    the loop is an unaudited stream.
+    """
+    if not enabled():
+        yield
+        return
+    def _refuse(*a, **k):
+        raise SanitizerError(
+            "raw PRNG root constructed inside a sanitized region -- "
+            "steady-state code must derive keys via jax.random.split / "
+            "fold_in from the init-time roots (sampling.root_key)")
+    saved = [(jax.random, n, getattr(jax.random, n))
+             for n in ("PRNGKey", "key") if hasattr(jax.random, n)]
+    try:
+        for mod, name, _ in saved:
+            setattr(mod, name, _refuse)
+        yield
+    finally:
+        for mod, name, orig in saved:
+            setattr(mod, name, orig)
+
+
+def _cache_size(fn) -> Optional[int]:
+    probe = getattr(fn, "_cache_size", None)
+    if callable(probe):
+        return int(probe())
+    return None
+
+
+@contextlib.contextmanager
+def compile_sentinel(*fns, label: str = "jit cache") -> Iterator[None]:
+    """Fail if any of ``fns`` (jit wrappers) compiles inside the region.
+
+    Use AFTER warmup: drive one full request through the serving loop,
+    then wrap the steady-state repeats.  A tracing cache miss there means
+    some per-request value reached a static argument or shape.
+    """
+    if not enabled():
+        yield
+        return
+    before = [_cache_size(f) for f in fns]
+    yield
+    for f, b in zip(fns, before):
+        a = _cache_size(f)
+        if b is not None and a is not None and a > b:
+            raise SanitizerError(
+                f"{label}: `{getattr(f, '__name__', f)}` compiled "
+                f"{a - b} new program(s) inside a steady-state region "
+                f"(cache {b} -> {a}) -- a per-request value is reaching "
+                f"a static argname or changing an operand shape")
+
+
+@contextlib.contextmanager
+def steady_state(*fns) -> Iterator[None]:
+    """All three sanitizers composed, for steady-state serving tests."""
+    with no_implicit_sync(), no_new_roots(), \
+            compile_sentinel(*fns, label="steady_state"):
+        yield
+
+
+@contextlib.contextmanager
+def guarded() -> Iterator[None]:
+    """The production-safe guard: transfer discipline only.
+
+    LanePool.tick wraps its dispatch round in this -- inert unless
+    MISS_SANITIZE is set, in which case any implicit sync in the pump
+    path fails the calling test.
+    """
+    with no_implicit_sync():
+        yield

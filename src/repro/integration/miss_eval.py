@@ -26,7 +26,7 @@ import numpy as np
 
 from ..core import bootstrap, error_model
 from ..core.framework import MissFailure, MissTrace, run_miss
-from ..core.sampling import two_point_init_sizes
+from ..core.sampling import root_key, two_point_init_sizes
 
 Array = jax.Array
 
@@ -64,7 +64,7 @@ class MissEvaluator:
         self._losses: List[np.ndarray] = [
             np.zeros((0,), np.float32) for _ in range(self.m)]
         self.model_forwards = 0
-        self.key = jax.random.PRNGKey(cfg.seed)
+        self.key = root_key(cfg.seed)
         self._prev_n = None
 
     # -- incremental evaluation --------------------------------------------

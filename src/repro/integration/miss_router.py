@@ -20,7 +20,7 @@ from ..core import bootstrap as bs
 from ..core.estimators import Estimator
 from ..core import error_model
 from ..core.framework import MissFailure, run_miss
-from ..core.sampling import two_point_init_sizes
+from ..core.sampling import root_key, two_point_init_sizes
 
 
 def _colmean_estimator(E: int) -> Estimator:
@@ -61,7 +61,7 @@ def estimate_router_load(
     """route_fn(tokens (n, S)) -> (n*S*top_k,) expert indices (flattened);
     token_source(n) -> (n, S) fresh token batch."""
     est = _colmean_estimator(num_experts)
-    key = jax.random.PRNGKey(seed)
+    key = root_key(seed)
     state = {"onehots": np.zeros((0, num_experts), np.float32), "tokens": 0}
 
     class Subs:

@@ -77,6 +77,7 @@ from ..core.fused import (LaneParams, LaneState, ShardSpec, bucket_ladder,
                           resolve_ext_cap, resolve_seg_window,
                           sharded_step_cache_size)
 from ..core import estimators
+from ..core import sanitize
 from ..core.sampling import (GroupedData, ShardLayout, counter_slot_table,
                              stratified_slot_tables)
 from .slo import (PILOT_B_FLOOR, AdmissionController, FairQueue,
@@ -410,6 +411,14 @@ class LanePool:
                 metric=metric, growth_cap=growth_cap,
                 ext_cap=resolve_ext_cap(n_cap, n_max, ext_cap), adaptive=True,
                 use_kernel=use_kernel, gate_gather=gate_gather)
+        # Steady-state recompile sentinel (misslint ML30x at runtime): a
+        # snapshot of the resident-program cache, re-armed whenever a NEW
+        # program config legitimately enters (retuned cadence, a fresh
+        # tier/block warming up).  Growth between two ticks with no such
+        # event is a recompile in the dispatch hot path.
+        self.steady_recompiles = 0
+        self._steady_cache0: Optional[int] = None
+        self._warmed_tiers: set = set()
         self.ticks_per_sync = int(ticks_per_sync)
         self.key = jax.random.PRNGKey(seed)
         if sample_key is None:
@@ -607,7 +616,7 @@ class LanePool:
         tk = _Ticket(
             qid=qid, func=query.func, fid=self._family[query.func],
             epsilon=float(query.epsilon), delta=float(query.delta),
-            key=np.asarray(key), scale_row=scale_row,
+            key=jax.device_get(key), scale_row=scale_row,
             submitted_s=time.perf_counter(),
             priority=int(priority), deadline_at=deadline_at,
             warm_n0=warm_n0, warm_beta=warm_beta,
@@ -705,6 +714,9 @@ class LanePool:
             qid=qid, func=query.func, state=state, params=params,
             submitted_s=time.perf_counter(), admitted_tick=self.ticks,
             warm=warm is not None)
+        # A grouped block's shared-scan program (seg_cap static) may not
+        # have compiled yet; admission is a config event, not steady state.
+        self._note_new_program_config()
         return qid
 
     # -- scheduling ---------------------------------------------------------
@@ -845,12 +857,16 @@ class LanePool:
             jnp.asarray(tk.scale_row, jnp.float32), jnp.asarray(tk.key),
             tk.delta, est_name=tk.func, B=pilot_B,
             metric=self._spec["metric"])
-        err = float(e)
+        # One explicit sync for both outputs -- the pilot result is
+        # consumed host-side here by design (implicit syncs in the tick
+        # path trip the sanitizer's transfer guard).
+        err, theta_host = jax.device_get((e, theta))
+        err = float(err)
         n_pilot = int(min(self._spec["n_min"], self._spec["n_cap"]))
         n = np.minimum(self._group_sizes_host, n_pilot)
         rows = int(n.sum())
         self.results[tk.qid] = PoolResponse(
-            qid=tk.qid, func=tk.func, theta=np.asarray(theta),
+            qid=tk.qid, func=tk.func, theta=theta_host,
             error=err, success=bool(err <= tk.epsilon), failed=False,
             n=n, iterations=0, rows_sampled=rows,
             wall_time_s=time.perf_counter() - tk.submitted_s,
@@ -997,20 +1013,66 @@ class LanePool:
                 self.migrations += 1
                 return
 
+    @property
+    def ticks_per_sync(self) -> int:
+        return self._ticks_per_sync
+
+    @ticks_per_sync.setter
+    def ticks_per_sync(self, value: int) -> None:
+        value = int(value)
+        if getattr(self, "_ticks_per_sync", None) != value:
+            self._ticks_per_sync = value
+            # num_ticks is static: a retuned cadence compiles one new
+            # program, legitimately.
+            self._note_new_program_config()
+
+    def _note_new_program_config(self) -> None:
+        """A new static/shape configuration is about to compile; re-arm the
+        steady-state sentinel so the expected miss isn't counted."""
+        self._steady_cache0 = None
+
+    def _program_cache_size(self) -> int:
+        size = fused_step._cache_size()
+        if self._mesh is not None:
+            size += sharded_step_cache_size()
+        return int(size)
+
     def tick(self) -> int:
         """One scheduling round: refill, run ``ticks_per_sync`` loop ticks
         per busy tier (one dispatch each) plus one shared-scan dispatch per
         resident grouped block, harvest, maybe migrate a straggler lane.
-        Returns busy lanes + blocks."""
+        Returns busy lanes + blocks.
+
+        The round runs under :func:`sanitize.guarded` (inert unless
+        MISS_SANITIZE is set): every device->host sync in the pump path
+        must be an explicit ``jax.device_get`` harvest.  Afterwards the
+        recompile sentinel attributes any program-cache growth not
+        explained by a config event to ``steady_recompiles``.
+        """
+        with sanitize.guarded():
+            out = self._tick_inner()
+        size = self._program_cache_size()
+        if self._steady_cache0 is None:
+            self._steady_cache0 = size
+        elif size > self._steady_cache0:
+            self.steady_recompiles += size - self._steady_cache0
+            self._steady_cache0 = size
+        return out
+
+    def _tick_inner(self) -> int:
         t0 = time.perf_counter()
         self._maybe_rotate()
         self._refill()
         ran = False
         round_rung = 0
-        for tier in self._tiers:
+        for ti, tier in enumerate(self._tiers):
             busy = tier.busy
             if not busy:
                 continue
+            if ti not in self._warmed_tiers:
+                # This tier's first dispatch compiles its width's program.
+                self._warmed_tiers.add(ti)
+                self._note_new_program_config()
             round_rung = max(round_rung, tier.width)
             if self._mesh is not None:
                 step = self._step_cache.get(self.ticks_per_sync)
@@ -1216,6 +1278,10 @@ class LanePool:
             "shed": self.shed,
             "degraded": self.degraded,
             "migrations": self.migrations,
+            # Recompile sentinel: programs compiled mid-steady-state (no
+            # retune / warmup event to explain them).  Anything nonzero is
+            # the PR 9 `_unstack` bug class; tests assert it stays 0.
+            "steady_recompiles": self.steady_recompiles,
             # The process-wide make_sharded_step memo LRU (bounded; every
             # pool shares it, so this is global occupancy, not per-pool).
             "sharded_step_cache": sharded_step_cache_size(),

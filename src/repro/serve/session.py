@@ -188,8 +188,8 @@ class AQPSession:
         self.reshuffle_every = int(reshuffle_every)
         self._queries_in_epoch = 0
         self._epoch_counter = 0
-        self._sample_key = jax.random.fold_in(
-            jax.random.PRNGKey(seed ^ 0x5A17), 0)
+        self._sample_root = jax.random.PRNGKey(seed ^ 0x5A17)
+        self._sample_key = jax.random.fold_in(self._sample_root, 0)
         # Live scheduling state.
         self._arrivals: Deque[int] = deque()            # rids awaiting route
         self._inflight: Dict[int, _InFlight] = {}       # rid -> entry
@@ -392,7 +392,7 @@ class AQPSession:
         self._epoch_counter += 1
         self._queries_in_epoch = 0
         self._sample_key = jax.random.fold_in(
-            jax.random.PRNGKey(self.store.seed ^ 0x5A17), self._epoch_counter)
+            self._sample_root, self._epoch_counter)
         if self.cache is not None:
             # Cached answers/coefficients were learned under the old
             # slot->row binding -- drop them (and bump the signature epoch
@@ -458,10 +458,10 @@ class AQPSession:
             self._pool = self._build_pool(plan.lanes, plan.ticks_per_sync)
             # Pre-warm every admission-wave split bucket (see _KEY_BUCKETS):
             # one-time ~log2 compiles here instead of latency spikes on the
-            # first burst of each novel size mid-serving.
-            warm = jax.random.PRNGKey(0)
+            # first burst of each novel size mid-serving.  Only the split
+            # SHAPES matter; self.key is untouched (no split consumed).
             for b in self._KEY_BUCKETS:
-                jax.random.split(warm, b)
+                jax.random.split(self.key, b)
         return self._pool
 
     def _retune(self) -> None:

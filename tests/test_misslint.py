@@ -1,0 +1,397 @@
+"""misslint: every rule family proven on a true-positive fixture, the
+sanctioned idioms proven clean, and the live tree proven clean modulo the
+checked-in baseline (the same invariant CI's lint job enforces).
+
+Fixtures are written to tmp_path and linted from disk -- the linter never
+imports what it analyzes, so none of these snippets needs to run.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from tools.misslint import (RULES, apply_baseline, lint_paths, load_baseline,
+                            write_baseline)
+
+REPO = Path(__file__).resolve().parent.parent
+BASELINE = REPO / "tools" / "misslint" / "baseline.txt"
+
+
+def lint_snippet(tmp_path, source, relname="src/repro/core/mod.py",
+                 select=None):
+    """Write ``source`` at ``relname`` under tmp_path and lint it."""
+    f = tmp_path / relname
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(textwrap.dedent(source))
+    return lint_paths([str(f)], select=select, rel_to=str(tmp_path))
+
+
+def rules_hit(violations):
+    return {v.rule for v in violations}
+
+
+# ---------------------------------------------------------------------------
+# trace-safety
+# ---------------------------------------------------------------------------
+
+def test_ml101_flags_python_branch_on_traced_value(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            e = jnp.sqrt(jnp.sum(x * x))
+            if e < 1.0:                 # traced bool -> ConcretizationError
+                return x
+            return x * 0.5
+        """)
+    assert "ML101" in rules_hit(vs)
+
+
+def test_ml101_flags_host_sync_in_lax_combinator_body(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        import jax, jax.numpy as jnp
+        from jax import lax
+
+        def run(x):
+            def body(c):
+                e = jnp.sum(c)
+                return c * float(e)     # host sync inside while_loop
+            def cond(c):
+                return True
+            return lax.while_loop(cond, body, x)
+        """)
+    assert "ML101" in rules_hit(vs)
+
+
+def test_ml101_allows_static_branches_and_none_checks(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def step(x, flag=True, cap=None):
+            if cap is None:             # is-None: static, sanctioned
+                cap = 8
+            if flag:                    # python value, not traced
+                x = x * 2
+            y = jnp.sum(x)
+            return jnp.where(y > 0, y, -y)    # traced branch done right
+        """)
+    assert "ML101" not in rules_hit(vs)
+
+
+def test_ml102_flags_implicit_sync_in_pump_path(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        import jax, numpy as np
+
+        @jax.jit
+        def fused(x):
+            return x
+
+        class Pool:
+            def tick(self):
+                out = fused(self.state)
+                return float(out)       # implicit D2H in the hot path
+        """, relname="src/repro/serve/pool.py")
+    assert "ML102" in rules_hit(vs)
+
+
+def test_ml102_allows_explicit_device_get_harvest(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        import jax, numpy as np
+
+        @jax.jit
+        def fused(x):
+            return x
+
+        class Pool:
+            def tick(self):
+                out = fused(self.state)
+                host = jax.device_get(out)    # the sanctioned harvest
+                return float(host)
+        """, relname="src/repro/serve/pool.py")
+    assert "ML102" not in rules_hit(vs)
+
+
+# ---------------------------------------------------------------------------
+# prng
+# ---------------------------------------------------------------------------
+
+def test_ml201_flags_raw_root_outside_sanctioned_sites(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        import jax
+
+        def estimate(seed):
+            key = jax.random.PRNGKey(seed)   # unaudited stream root
+            return jax.random.normal(key, (4,))
+        """)
+    assert "ML201" in rules_hit(vs)
+
+
+def test_ml201_allows_sanctioned_construction_sites(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        import jax
+
+        def root_key(seed):
+            return jax.random.PRNGKey(seed)
+        """, relname="src/repro/core/sampling.py")
+    assert "ML201" not in rules_hit(vs)
+
+
+def test_ml202_flags_key_reuse_without_split(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        import jax
+        from .sampling import root_key
+
+        def draw(seed):
+            key = root_key(seed)
+            a = jax.random.normal(key, (4,))
+            b = jax.random.uniform(key, (4,))   # same key, correlated draws
+            return a + b
+        """)
+    assert "ML202" in rules_hit(vs)
+
+
+def test_ml202_allows_split_between_uses_and_carry_idiom(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        import jax
+        from .sampling import root_key
+
+        def draw(seed):
+            key = root_key(seed)
+            key, k1 = jax.random.split(key)
+            a = jax.random.normal(k1, (4,))
+            key, k2 = jax.random.split(key)     # carry reassigned: fine
+            b = jax.random.uniform(k2, (4,))
+            return a + b
+        """)
+    assert "ML202" not in rules_hit(vs)
+
+
+# ---------------------------------------------------------------------------
+# recompile
+# ---------------------------------------------------------------------------
+
+def test_ml301_flags_static_argnames_drift_and_mutable_default(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, static_argnames=("B", "gone"))
+        def step(x, *, B=100, shapes=[1, 2]):
+            return x
+
+        @partial(jax.jit, static_argnames=("shapes",))
+        def step2(x, *, shapes=[1, 2]):
+            return x
+        """)
+    assert sum(v.rule == "ML301" for v in vs) == 2
+
+
+def test_ml302_flags_per_call_jit_and_respects_lru_factory(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        import jax
+        from functools import lru_cache
+
+        def bad(mesh, x):
+            def local(v):
+                return v * 2
+            return jax.jit(local)(x)    # fresh wrapper every call
+
+        @lru_cache(maxsize=16)
+        def good_factory(m):
+            def local(v):
+                return v * m
+            return jax.jit(local)       # memoized: compiled once per m
+        """)
+    ml302 = [v for v in vs if v.rule == "ML302"]
+    assert len(ml302) == 1 and ml302[0].scope == "bad"
+
+
+def test_ml303_flags_unbounded_and_oversized_program_caches(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        import functools, jax
+
+        @functools.cache
+        def unbounded(m):
+            return jax.jit(lambda x: x * m)
+
+        @functools.lru_cache(maxsize=4096)
+        def oversized(m):
+            return jax.jit(lambda x: x + m)
+
+        @functools.lru_cache(maxsize=16)
+        def bounded(m):
+            return jax.jit(lambda x: x - m)
+        """, select=["ML303"])
+    assert sum(v.rule == "ML303" for v in vs) == 2
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def test_ml401_flags_set_iteration_feeding_order(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        def lanes(groups):
+            out = []
+            for g in set(groups):        # salted order
+                out.append(g)
+            return out
+
+        def fine(groups):
+            return [g for g in sorted(set(groups))]
+        """)
+    ml401 = [v for v in vs if v.rule == "ML401"]
+    assert len(ml401) == 1 and ml401[0].scope == "lanes"
+
+
+def test_ml402_flags_ambient_entropy_under_core(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        import random
+        import time
+        import numpy as np
+
+        def jitter():
+            return time.time() + random.random() + np.random.rand()
+
+        def fine(seed):
+            rng = np.random.default_rng(seed)   # seeded: sanctioned
+            return time.perf_counter(), rng.normal()
+        """)
+    assert sum(v.rule == "ML402" for v in vs) >= 3
+
+
+def test_ml402_scope_is_core_and_kernels_only(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        import time
+
+        def wall():
+            return time.time()          # launch scaffolding: allowed
+        """, relname="src/repro/launch/bench.py")
+    assert "ML402" not in rules_hit(vs)
+
+
+# ---------------------------------------------------------------------------
+# pallas
+# ---------------------------------------------------------------------------
+
+def test_ml501_flags_unguarded_store_allows_accumulator(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def bad_kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...] * 2         # no predication anywhere
+
+        def acc_kernel(x_ref, acc_ref):
+            i = pl.program_id(0)
+
+            @pl.when(i == 0)
+            def _init():
+                acc_ref[...] = jnp.zeros_like(acc_ref)
+
+            acc_ref[...] += x_ref[...]          # sanctioned accumulator
+        """, relname="src/repro/kernels/foo/kernel.py")
+    ml501 = [v for v in vs if v.rule == "ML501"]
+    assert len(ml501) == 1 and "bad_kernel" in ml501[0].message
+
+
+def test_ml502_flags_grid_floordiv_without_divisibility_guard(tmp_path):
+    vs = lint_snippet(tmp_path, """
+        from jax.experimental import pallas as pl
+
+        def bad_launch(x, B):
+            grid = (x.shape[0] // B,)           # silently drops remainder
+            return pl.pallas_call(lambda r, o: None, grid=grid)(x)
+
+        def good_launch(x, B):
+            assert x.shape[0] % B == 0
+            grid = (x.shape[0] // B,)
+            return pl.pallas_call(lambda r, o: None, grid=grid)(x)
+        """, relname="src/repro/kernels/foo/kernel.py")
+    ml502 = [v for v in vs if v.rule == "ML502"]
+    assert len(ml502) == 1 and "bad_launch" in ml502[0].message
+
+
+def test_ml503_flags_ref_vs_kernel_signature_drift(tmp_path):
+    (tmp_path / "src/repro/kernels/foo").mkdir(parents=True)
+    (tmp_path / "src/repro/kernels/foo/ops.py").write_text(textwrap.dedent("""
+        def moments(values, weights, offsets):
+            return values
+        """))
+    (tmp_path / "src/repro/kernels/foo/ref.py").write_text(textwrap.dedent("""
+        def moments_ref(values, offsets, weights):   # reordered!
+            return values
+        """))
+    vs = lint_paths([str(tmp_path / "src")], rel_to=str(tmp_path))
+    assert "ML503" in rules_hit(vs)
+
+
+# ---------------------------------------------------------------------------
+# baseline mechanics + the live tree
+# ---------------------------------------------------------------------------
+
+def test_baseline_suppresses_by_fingerprint_not_line(tmp_path):
+    src = """
+        import jax
+
+        def estimate(seed):
+            return jax.random.PRNGKey(seed)
+        """
+    vs = lint_snippet(tmp_path, src)
+    assert rules_hit(vs) == {"ML201"}
+    bl = tmp_path / "baseline.txt"
+    write_baseline(str(bl), vs)
+
+    # Same violation, shifted 3 lines down: fingerprint unchanged.
+    shifted = "# pad\n# pad\n# pad\n" + textwrap.dedent(src)
+    (tmp_path / "src/repro/core/mod.py").write_text(shifted)
+    vs2 = lint_paths([str(tmp_path / "src")], rel_to=str(tmp_path))
+    fresh, stale = apply_baseline(vs2, load_baseline(str(bl)))
+    assert fresh == [] and stale == []
+
+    # Violation fixed: the entry goes stale, nothing is suppressed.
+    (tmp_path / "src/repro/core/mod.py").write_text(
+        "def estimate(seed):\n    return None\n")
+    vs3 = lint_paths([str(tmp_path / "src")], rel_to=str(tmp_path))
+    fresh, stale = apply_baseline(vs3, load_baseline(str(bl)))
+    assert fresh == [] and len(stale) == 1
+
+
+def test_every_rule_has_a_fixture_test_here():
+    """Adding a rule without a true-positive fixture fails this test."""
+    import tools.misslint.rules  # noqa: F401  (register)
+    covered = {"ML101", "ML102", "ML201", "ML202", "ML301", "ML302",
+               "ML303", "ML401", "ML402", "ML501", "ML502", "ML503"}
+    assert set(RULES) == covered
+
+
+def test_live_tree_clean_modulo_baseline():
+    """The same gate CI enforces: src/repro lints clean against the
+    checked-in baseline, and the baseline carries no stale entries."""
+    vs = lint_paths([str(REPO / "src" / "repro")], rel_to=str(REPO))
+    fresh, stale = apply_baseline(vs, load_baseline(str(BASELINE)))
+    assert fresh == [], "\n".join(v.format() for v in fresh)
+    assert stale == [], "\n".join(stale)
+
+
+def test_cli_exit_codes_and_seeded_violation_fails(tmp_path):
+    """`python -m tools.misslint` exits 0 on a clean tree and 1 the moment
+    a fixture violation is seeded -- the CI blocking contract."""
+    tree = tmp_path / "src/repro/core"
+    tree.mkdir(parents=True)
+    (tree / "ok.py").write_text("def f(x):\n    return x\n")
+    env_cmd = [sys.executable, "-m", "tools.misslint", "--no-baseline",
+               str(tmp_path / "src")]
+    r = subprocess.run(env_cmd, cwd=REPO, capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+    (tree / "bad.py").write_text(
+        "import jax\n\ndef g(seed):\n"
+        "    return jax.random.PRNGKey(seed)\n")
+    r = subprocess.run(env_cmd, cwd=REPO, capture_output=True, text=True)
+    assert r.returncode == 1
+    assert "ML201" in r.stdout

@@ -368,3 +368,46 @@ def test_answer_compat_wrapper_roundtrip(data):
         truth = svc.engine.exact(q).ravel()
         tol = 2 * (q.epsilon if q.epsilon is not None else 0.3)
         assert np.linalg.norm(r.theta.ravel() - truth) <= tol
+
+
+# ---------------------------------------------------------------------------
+# Steady-state recompile sentinel (misslint/sanitize harness, phase K)
+# ---------------------------------------------------------------------------
+
+def test_steady_state_serving_never_recompiles(data, monkeypatch):
+    """After warmup, a submit/pump/poll loop over repeated request shapes
+    compiles NOTHING: the fused_step cache is frozen, the pool's
+    steady_recompiles counter stays 0, and the full sanitizer (transfer
+    guard + PRNG-root lock + compile sentinel) holds over the loop."""
+    from repro.core import sanitize
+    from repro.core.fused import fused_step
+
+    monkeypatch.setenv("MISS_SANITIZE", "1")
+    sess = AQPSession(data, planner=Planner(mode=Route.POOL, pool_lanes=2,
+                                            pool_ticks_per_sync=1), **KW)
+    # Warmup: drive one request per estimator family end to end, so every
+    # program a steady stream needs (admission-wave splits, both tier
+    # widths, both finishers) is resident.
+    wkeys = jax.random.split(jax.random.PRNGKey(7), 2)
+    _pump_done(sess, [
+        sess.submit(Request(query=Query(func=f, epsilon=0.3)), key=k)
+        for f, k in zip(("avg", "var"), wkeys)])
+
+    cache0 = fused_step._cache_size()
+    keys = jax.random.split(jax.random.PRNGKey(23), 12)
+    with sanitize.steady_state(fused_step):
+        tickets = []
+        for i, k in enumerate(keys):
+            f = ("avg", "var")[i % 2]
+            tickets.append(sess.submit(
+                Request(query=Query(func=f, epsilon=0.25)), key=k))
+            sess.pump()                 # interleave admission with ticking
+        rs = _pump_done(sess, tickets)
+
+    assert all(r.route is Route.POOL for r in rs)
+    assert fused_step._cache_size() == cache0
+    assert sess._pool.stats()["steady_recompiles"] == 0
+    # The answers are still the real thing, not a warm-cache short-circuit.
+    l = sess._pool._spec["l"]
+    _assert_solo_parity(data, rs[0], keys[0], "avg", 0.25,
+                        sess._sample_key, l)

@@ -1,0 +1,16 @@
+"""misslint: repo-specific static analysis for the MISS serving stack.
+
+Rule families (see tools/misslint/README.md for the catalog):
+  trace-safety  ML101 ML102    python-control-flow / host syncs under jit
+  prng          ML201 ML202    key construction + reuse discipline
+  recompile     ML301-ML303    jit-boundary and program-cache hygiene
+  determinism   ML401 ML402    unordered iteration, ambient entropy
+  pallas        ML501-ML503    kernel store guards, grids, ref parity
+
+Programmatic entry: :func:`lint_paths`.  CLI: ``python -m tools.misslint``.
+"""
+from .core import (RULES, Violation, apply_baseline, lint_paths,
+                   load_baseline, write_baseline)
+
+__all__ = ["RULES", "Violation", "apply_baseline", "lint_paths",
+           "load_baseline", "write_baseline"]

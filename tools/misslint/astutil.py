@@ -1,0 +1,237 @@
+"""Shared AST helpers for the misslint rules.
+
+Everything here is deliberately syntactic: misslint never imports the code
+it analyses (importing would execute jax, trigger compiles, and make the
+linter's verdict depend on the machine it runs on).  The cost is that every
+judgement is a heuristic over names -- the rules are tuned so that the
+codebase's sanctioned idioms come out clean and the known bug classes are
+caught, with the baseline file absorbing the deliberate exceptions.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Set
+
+FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+ScopeNode = FuncNode + (ast.Lambda, ast.ClassDef)
+
+# Roots that produce traced values when called under jit.  ``jax.random``
+# is included: its samplers return device arrays (and branching on them
+# inside a trace is exactly the bug ML101 exists for).
+TRACED_CALL_ROOTS = (
+    "jnp.", "jax.numpy.", "lax.", "jax.lax.", "jax.random.", "jax.nn.",
+)
+
+# lax/jax combinators whose callable arguments are traced bodies: a local
+# function handed to any of these is jit-reachable even without a decorator.
+TRACING_COMBINATORS = {
+    "while_loop", "fori_loop", "cond", "switch", "scan", "map",
+    "associative_scan", "vmap", "pmap", "shard_map", "checkpoint", "remat",
+    "custom_jvp", "custom_vjp", "grad", "value_and_grad", "pallas_call",
+}
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    return dotted_name(node.func)
+
+
+def last_segment(dotted: Optional[str]) -> Optional[str]:
+    return dotted.rsplit(".", 1)[-1] if dotted else None
+
+
+def decorator_calls(fn: ast.AST) -> Iterator[ast.AST]:
+    """Every decorator node, with ``partial(...)`` unwrapped one level so
+    ``@partial(jax.jit, ...)`` yields both the partial call and jax.jit."""
+    for dec in getattr(fn, "decorator_list", []):
+        yield dec
+        if isinstance(dec, ast.Call):
+            name = call_name(dec)
+            if name and last_segment(name) == "partial":
+                for arg in dec.args:
+                    yield arg
+
+
+def _names_of(node: ast.AST) -> Set[str]:
+    out = set()
+    d = dotted_name(node)
+    if d:
+        out.add(d)
+        out.add(last_segment(d))
+    if isinstance(node, ast.Call):
+        out |= _names_of(node.func)
+    return out
+
+
+def is_jit_decorated(fn: ast.AST) -> bool:
+    for dec in decorator_calls(fn):
+        names = _names_of(dec)
+        if names & {"jax.jit", "jit", "pjit", "jax.pjit"}:
+            return True
+    return False
+
+
+def has_cache_decorator(fn: ast.AST) -> bool:
+    """lru_cache / functools.cache on the def -- the sanctioned wrapper for
+    jit-returning factories (ML302's escape hatch; ML303 checks bounds)."""
+    for dec in decorator_calls(fn):
+        seg = last_segment(dotted_name(dec if not isinstance(dec, ast.Call)
+                                       else dec.func))
+        if seg in {"lru_cache", "cache"}:
+            return True
+    return False
+
+
+def build_parents(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def build_qualnames(tree: ast.AST) -> Dict[ast.AST, str]:
+    """Map every def/class to its dotted qualname (module scope = '')."""
+    out: Dict[ast.AST, str] = {}
+
+    def visit(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, FuncNode + (ast.ClassDef,)):
+                qn = f"{prefix}.{child.name}" if prefix else child.name
+                out[child] = qn
+                visit(child, qn)
+            else:
+                visit(child, prefix)
+
+    visit(tree, "")
+    return out
+
+
+def enclosing_qualname(node: ast.AST, parents: Dict[ast.AST, ast.AST],
+                       qualnames: Dict[ast.AST, str]) -> str:
+    cur = node
+    while cur is not None:
+        if cur in qualnames:
+            return qualnames[cur]
+        cur = parents.get(cur)
+    return "<module>"
+
+
+def own_scope_walk(fn: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function body without descending into nested defs/classes
+    (nested lambdas ARE descended -- they share the trace context)."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, FuncNode + (ast.ClassDef,)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def function_defs(tree: ast.AST) -> List[ast.AST]:
+    return [n for n in ast.walk(tree) if isinstance(n, FuncNode)]
+
+
+def jit_reachable_functions(tree: ast.AST) -> Set[ast.AST]:
+    """Defs whose bodies execute under a jax trace.
+
+    Seeds: jit-decorated defs and local defs/lambdas passed to tracing
+    combinators (lax.while_loop bodies, shard_map, pallas_call kernels...).
+    Closure: every def nested inside a reachable def is reachable (it runs
+    while tracing), and a local name handed to a combinator resolves to the
+    def of that name anywhere in the module (misslint has no scopes-perfect
+    resolver; same-name collisions are acceptable for a lint).
+    """
+    by_name: Dict[str, List[ast.AST]] = {}
+    for fn in function_defs(tree):
+        by_name.setdefault(fn.name, []).append(fn)
+
+    reachable: Set[ast.AST] = set()
+    for fn in function_defs(tree):
+        if is_jit_decorated(fn):
+            reachable.add(fn)
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        seg = last_segment(call_name(node))
+        if seg not in TRACING_COMBINATORS:
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Lambda):
+                reachable.add(arg)
+            elif isinstance(arg, ast.Name):
+                reachable.update(by_name.get(arg.id, ()))
+            elif isinstance(arg, ast.Call):
+                # functools.partial(body_fn, ...) / pl.when(...)(fn)
+                for inner in list(arg.args):
+                    if isinstance(inner, ast.Name):
+                        reachable.update(by_name.get(inner.id, ()))
+
+    # Nested defs of reachable functions trace too.
+    frontier = list(reachable)
+    while frontier:
+        fn = frontier.pop()
+        for node in ast.walk(fn):
+            if node is not fn and isinstance(node, FuncNode) \
+                    and node not in reachable:
+                reachable.add(node)
+                frontier.append(node)
+    return reachable
+
+
+def assign_targets(stmt: ast.AST) -> List[ast.AST]:
+    if isinstance(stmt, ast.Assign):
+        return list(stmt.targets)
+    if isinstance(stmt, (ast.AugAssign, ast.AnnAssign, ast.For)):
+        return [stmt.target]
+    if isinstance(stmt, (ast.withitem,)) and stmt.optional_vars is not None:
+        return [stmt.optional_vars]
+    return []
+
+
+def flatten_target_names(target: ast.AST) -> List[str]:
+    """Names (incl. dotted attr paths) bound by an assignment target."""
+    out: List[str] = []
+    stack = [target]
+    while stack:
+        t = stack.pop()
+        if isinstance(t, (ast.Tuple, ast.List)):
+            stack.extend(t.elts)
+        elif isinstance(t, ast.Starred):
+            stack.append(t.value)
+        else:
+            d = dotted_name(t)
+            if d:
+                out.append(d)
+    return out
+
+
+def expr_mentions(node: ast.AST, names: Set[str]) -> bool:
+    """True if any Name/dotted-attr inside ``node`` is in ``names``."""
+    for sub in ast.walk(node):
+        d = dotted_name(sub)
+        if d and (d in names or d.split(".", 1)[0] in names):
+            return True
+    return False
+
+
+def positional_params(fn: ast.AST) -> List[str]:
+    args = fn.args
+    return [a.arg for a in list(args.posonlyargs) + list(args.args)]
+
+
+def keyword_only_params(fn: ast.AST) -> List[str]:
+    return [a.arg for a in fn.args.kwonlyargs]

@@ -1,0 +1,107 @@
+"""misslint command line.
+
+    python -m tools.misslint src/repro                  # packaged baseline
+    python -m tools.misslint src/repro --baseline B     # explicit baseline
+    python -m tools.misslint src/repro --no-baseline    # raw findings
+    python -m tools.misslint src/repro --write-baseline # accept the present
+
+Exit codes: 0 clean (modulo baseline), 1 violations (or stale baseline
+entries under --strict-baseline), 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .core import (RULES, apply_baseline, lint_paths, load_baseline,
+                   write_baseline, _load_rules)
+
+_DEFAULT_BASELINE = Path(__file__).parent / "baseline.txt"
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m tools.misslint",
+        description="trace-safety / determinism / recompile static "
+                    "analysis for the MISS serving stack")
+    p.add_argument("paths", nargs="*", default=["src/repro"],
+                   help="files or directories to lint (default: src/repro)")
+    p.add_argument("--baseline", default=None, metavar="FILE",
+                   help=f"baseline file (default: {_DEFAULT_BASELINE} "
+                        f"when it exists)")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore any baseline; report every violation")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="write the current violations as the new baseline "
+                        "and exit 0")
+    p.add_argument("--select", default=None, metavar="RULES",
+                   help="comma-separated rule ids or families "
+                        "(e.g. ML303,prng)")
+    p.add_argument("--strict-baseline", action="store_true",
+                   help="fail (exit 1) on stale baseline entries")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    p.add_argument("--rel-to", default=None, metavar="DIR",
+                   help="base directory for reported paths/fingerprints "
+                        "(default: cwd)")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        _load_rules()
+        fam = None
+        for r in sorted(RULES.values(), key=lambda r: r.id):
+            if r.family != fam:
+                fam = r.family
+                print(f"[{fam}]")
+            print(f"  {r.id}  {r.summary}")
+        return 0
+
+    select = args.select.split(",") if args.select else None
+    try:
+        violations = lint_paths(args.paths, select=select,
+                                rel_to=args.rel_to)
+    except ValueError as e:
+        print(f"misslint: {e}", file=sys.stderr)
+        return 2
+
+    baseline_path = args.baseline
+    if baseline_path is None and _DEFAULT_BASELINE.exists() \
+            and not args.no_baseline:
+        baseline_path = str(_DEFAULT_BASELINE)
+
+    if args.write_baseline:
+        target = baseline_path or str(_DEFAULT_BASELINE)
+        write_baseline(target, violations)
+        print(f"misslint: wrote {len(violations)} baseline entries to "
+              f"{target}")
+        return 0
+
+    baseline = {} if (args.no_baseline or baseline_path is None) \
+        else load_baseline(baseline_path)
+    fresh, stale = apply_baseline(violations, baseline)
+
+    for v in fresh:
+        print(v.format())
+    if stale:
+        print(f"\nmisslint: {len(stale)} stale baseline entr"
+              f"{'y' if len(stale) == 1 else 'ies'} (debt paid -- delete "
+              f"the lines):", file=sys.stderr)
+        for line in stale:
+            print(f"  {line}", file=sys.stderr)
+
+    suppressed = len(violations) - len(fresh)
+    if fresh:
+        print(f"\nmisslint: {len(fresh)} violation"
+              f"{'' if len(fresh) == 1 else 's'}"
+              + (f" ({suppressed} baselined)" if suppressed else ""),
+              file=sys.stderr)
+        return 1
+    if stale and args.strict_baseline:
+        return 1
+    print(f"misslint: clean"
+          + (f" ({suppressed} baselined)" if suppressed else ""))
+    return 0

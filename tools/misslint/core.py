@@ -1,0 +1,241 @@
+"""misslint driver: file walking, rule registry, violations, baseline.
+
+A rule is a function ``check(ctx: FileContext) -> Iterable[Violation]``
+registered with :func:`rule`.  Cross-file rules (the Pallas signature-drift
+check) register with ``scope="tree"`` and receive the full list of file
+contexts once per run.
+
+Baselines: every violation has a stable fingerprint derived from
+(relpath, rule, enclosing qualname, normalized source line) -- NOT the line
+number, so unrelated edits above a baselined site don't churn the file.
+Baseline entries suppress exactly one violation each; entries that no
+longer match anything are reported as stale (the accepted debt was paid --
+delete the line).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import os
+from pathlib import Path, PurePosixPath
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from . import astutil
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str           # repo-relative posix path
+    line: int
+    col: int
+    rule: str           # e.g. "ML303"
+    message: str
+    scope: str          # enclosing qualname ("<module>" at top level)
+    snippet: str        # stripped source line (fingerprint component)
+
+    @property
+    def fingerprint(self) -> str:
+        norm = " ".join(self.snippet.split())
+        raw = f"{self.path}|{self.rule}|{self.scope}|{norm}"
+        return hashlib.sha1(raw.encode()).hexdigest()[:12]
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{self.scope}] {self.message}\n"
+                f"    {self.snippet.strip()}")
+
+
+class FileContext:
+    """One parsed source file plus the lazily-built shared analyses."""
+
+    def __init__(self, path: Path, relpath: str, source: str):
+        self.path = path
+        self.relpath = relpath          # posix, stable across machines
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=str(path))
+        self._parents = None
+        self._qualnames = None
+        self._jit_reachable = None
+
+    @property
+    def parents(self):
+        if self._parents is None:
+            self._parents = astutil.build_parents(self.tree)
+        return self._parents
+
+    @property
+    def qualnames(self):
+        if self._qualnames is None:
+            self._qualnames = astutil.build_qualnames(self.tree)
+        return self._qualnames
+
+    @property
+    def jit_reachable(self):
+        if self._jit_reachable is None:
+            self._jit_reachable = astutil.jit_reachable_functions(self.tree)
+        return self._jit_reachable
+
+    def scope_of(self, node: ast.AST) -> str:
+        return astutil.enclosing_qualname(node, self.parents, self.qualnames)
+
+    def snippet_at(self, node: ast.AST) -> str:
+        line = getattr(node, "lineno", 0)
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1]
+        return ""
+
+    def violation(self, node: ast.AST, rule: str, message: str) -> Violation:
+        return Violation(
+            path=self.relpath, line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0), rule=rule, message=message,
+            scope=self.scope_of(node), snippet=self.snippet_at(node))
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    family: str
+    summary: str
+    check: Callable
+    scope: str = "file"     # "file" -> check(ctx); "tree" -> check(ctxs)
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(id: str, family: str, summary: str, *, scope: str = "file"):
+    def register(fn):
+        if id in RULES:
+            raise ValueError(f"duplicate rule id {id}")
+        RULES[id] = Rule(id=id, family=family, summary=summary,
+                         check=fn, scope=scope)
+        return fn
+    return register
+
+
+def _load_rules() -> None:
+    from . import rules  # noqa: F401  (importing registers every rule)
+
+
+def iter_source_files(paths: Sequence[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(path)
+    seen, uniq = set(), []
+    for f in out:
+        r = f.resolve()
+        if r not in seen:
+            seen.add(r)
+            uniq.append(f)
+    return uniq
+
+
+def _relpath(path: Path, rel_to: Optional[Path]) -> str:
+    base = rel_to if rel_to is not None else Path.cwd()
+    try:
+        rel = path.resolve().relative_to(base.resolve())
+    except ValueError:
+        rel = path
+    return str(PurePosixPath(rel))
+
+
+def lint_paths(paths: Sequence[str], *,
+               select: Optional[Sequence[str]] = None,
+               rel_to: Optional[str] = None) -> List[Violation]:
+    """Run every (selected) rule over the .py files under ``paths``.
+
+    ``select``: rule ids or family names to run (default: all).
+    ``rel_to``: base for the reported/fingerprinted relative paths
+    (default: the current working directory).
+    """
+    _load_rules()
+    active = list(RULES.values())
+    if select:
+        sel = set(select)
+        active = [r for r in active if r.id in sel or r.family in sel]
+        unknown = sel - {r.id for r in active} - {r.family for r in active}
+        if unknown:
+            raise ValueError(f"unknown rule/family selector(s): "
+                             f"{sorted(unknown)}")
+    base = Path(rel_to) if rel_to is not None else None
+    ctxs: List[FileContext] = []
+    violations: List[Violation] = []
+    for f in iter_source_files(paths):
+        try:
+            source = f.read_text()
+            ctx = FileContext(f, _relpath(f, base), source)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            violations.append(Violation(
+                path=_relpath(f, base), line=getattr(e, "lineno", 0) or 0,
+                col=0, rule="ML000", message=f"unparseable: {e}",
+                scope="<module>", snippet=""))
+            continue
+        ctxs.append(ctx)
+    for ctx in ctxs:
+        for r in active:
+            if r.scope == "file":
+                violations.extend(r.check(ctx))
+    for r in active:
+        if r.scope == "tree":
+            violations.extend(r.check(ctxs))
+    violations.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
+    return violations
+
+
+# -- baseline ---------------------------------------------------------------
+
+def load_baseline(path: str) -> Dict[str, str]:
+    """fingerprint -> original line (for stale reporting)."""
+    entries: Dict[str, str] = {}
+    p = Path(path)
+    if not p.exists():
+        return entries
+    for line in p.read_text().splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith("#"):
+            continue
+        entries[stripped.split()[0]] = stripped
+    return entries
+
+
+def write_baseline(path: str, violations: Sequence[Violation]) -> None:
+    lines = [
+        "# misslint baseline -- accepted pre-existing violations.",
+        "# One entry suppresses exactly one violation; the fingerprint",
+        "# hashes (path, rule, scope, source line), so entries survive",
+        "# line drift but die when the flagged code actually changes.",
+        "# Regenerate:  python -m tools.misslint src/repro --write-baseline",
+        "#              (review the diff -- a GROWING baseline is a lint",
+        "#               failure someone decided to ship; say why here.)",
+        "",
+    ]
+    for v in violations:
+        snip = " ".join(v.snippet.split())[:72]
+        lines.append(f"{v.fingerprint}  {v.path}:{v.rule} {v.scope}  # {snip}")
+    Path(path).write_text("\n".join(lines) + "\n")
+
+
+def apply_baseline(
+    violations: Sequence[Violation], baseline: Dict[str, str]
+) -> Tuple[List[Violation], List[str]]:
+    """Returns (new violations, stale baseline lines).
+
+    Duplicate fingerprints (the same normalized line flagged twice in one
+    scope) are suppressed together -- one entry covers them all; that is
+    the pragmatic reading of "explicitly accepted".
+    """
+    matched: set = set()
+    fresh: List[Violation] = []
+    for v in violations:
+        if v.fingerprint in baseline:
+            matched.add(v.fingerprint)
+        else:
+            fresh.append(v)
+    stale = [line for fp, line in baseline.items() if fp not in matched]
+    return fresh, stale

@@ -1,0 +1,2 @@
+"""Importing this package registers every rule with the core registry."""
+from . import determinism, pallas, prng, recompile, trace_safety  # noqa: F401

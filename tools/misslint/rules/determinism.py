@@ -1,0 +1,113 @@
+"""Determinism rules.
+
+Lane ordering, pytree structure, and cache signatures must be pure
+functions of the inputs: the bit-parity contracts (mesh-vs-solo, replay,
+warm cache) compare trajectories ACROSS processes, so any iteration order
+that can differ between interpreter runs -- or any ambient entropy --
+breaks them without failing locally.
+
+ML401 -- iteration over a set expression (``set()``/``{...}``/
+``frozenset()``) feeding a for loop, comprehension, or tuple/list
+materialization.  Set order is salted per process; wrap in ``sorted()``.
+
+ML402 -- ambient nondeterminism under ``core/`` and ``kernels/``:
+``import random`` (the global Mersenne Twister), ``time.time`` (wall
+clock; ``perf_counter`` for durations is fine), and unseeded
+``np.random.*`` module-level samplers (``default_rng(seed)`` /
+``Generator`` are the sanctioned numpy entry points).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..astutil import call_name, dotted_name, last_segment
+from ..core import rule
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return last_segment(call_name(node)) in ("set", "frozenset")
+    return False
+
+
+@rule("ML401", "determinism",
+      "iteration over an unordered set expression")
+def check_set_iteration(ctx):
+    out: List = []
+    for node in ast.walk(ctx.tree):
+        iters: List[ast.AST] = []
+        if isinstance(node, ast.For):
+            iters.append(node.iter)
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            iters.extend(gen.iter for gen in node.generators)
+        elif isinstance(node, ast.Call) \
+                and last_segment(call_name(node)) in ("tuple", "list",
+                                                      "enumerate") \
+                and node.args:
+            iters.append(node.args[0])
+        for it in iters:
+            if _is_set_expr(it):
+                out.append(ctx.violation(
+                    it, "ML401",
+                    "iterating a set -- order is salted per process; any "
+                    "lane ordering / pytree / cache signature built from "
+                    "it differs across runs.  Wrap in sorted()"))
+    return out
+
+
+def _deterministic_scope(relpath: str) -> bool:
+    p = f"/{relpath}"
+    return "/core/" in p or "/kernels/" in p
+
+
+_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "BitGenerator",
+                 "PCG64", "Philox"}
+
+
+@rule("ML402", "determinism",
+      "wall clock / global RNG under core/ or kernels/")
+def check_ambient_entropy(ctx):
+    if not _deterministic_scope(ctx.relpath):
+        return []
+    out: List = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "random":
+                    out.append(ctx.violation(
+                        node, "ML402",
+                        "`import random` under core/ -- the global "
+                        "Mersenne Twister is process-global ambient "
+                        "state; use the counter PRNG (kernels/prng.py) "
+                        "or a seeded np.random.default_rng"))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "random":
+                out.append(ctx.violation(
+                    node, "ML402",
+                    "`from random import ...` under core/ -- use the "
+                    "counter PRNG or a seeded np.random.default_rng"))
+        elif isinstance(node, ast.Call):
+            name = call_name(node)
+            if not name:
+                continue
+            if name in ("time.time", "time"):
+                # Accept time(...) only when it is clearly time.time.
+                if name == "time" and not isinstance(node.func,
+                                                     ast.Attribute):
+                    continue
+                out.append(ctx.violation(
+                    node, "ML402",
+                    "time.time() under core/ -- wall clock leaks into a "
+                    "deterministic path (durations: time.perf_counter; "
+                    "timestamps belong to the serving layer)"))
+            elif name.startswith(("np.random.", "numpy.random.")) \
+                    and last_segment(name) not in _NP_RANDOM_OK:
+                out.append(ctx.violation(
+                    node, "ML402",
+                    f"`{name}(...)` draws from numpy's GLOBAL rng under "
+                    f"core/ -- seed an explicit np.random.default_rng"))
+    return out

@@ -1,0 +1,180 @@
+"""Pallas kernel-contract rules (kernels/*/kernel.py and their wrappers).
+
+ML501 -- every ref a kernel body writes must have at least one
+``pl.when``-guarded store site.  The repo's grids over-cover (n/B padded to
+tile multiples, lane grids with inactive groups): an output ref whose ONLY
+stores are unconditional top-level writes has no predication anywhere --
+padded/inactive tiles write garbage that the jnp oracle never sees, and
+interpret-mode parity hides it (the oracle masks, the kernel doesn't).
+The sanctioned idioms both pass: init-under-``pl.when(idx == 0)`` with
+top-level accumulation (flash-attention style), and fully predicated
+stores (the poisson_bootstrap gating).
+
+ML502 -- a ``//`` in the grid computation without a divisibility guard
+(an ``assert``/``raise`` mentioning ``%``) in the same function: a
+non-multiple shape silently drops the remainder tiles.
+
+ML503 -- ref-oracle signature drift: ``<name>_ref`` in ref.py must keep
+its positional parameters a prefix-match of ``<name>`` in the sibling
+kernel.py/ops.py.  The parity tests call both with the same argument list;
+a reordered parameter turns them into tests of nothing.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import PurePosixPath
+from typing import Dict, List, Set, Tuple
+
+from .. import astutil
+from ..astutil import call_name, dotted_name, last_segment, own_scope_walk
+from ..core import rule
+
+
+def _is_kernel_file(relpath: str) -> bool:
+    p = PurePosixPath(relpath)
+    return "kernels" in p.parts and p.name == "kernel.py"
+
+
+def _ref_params(fn: ast.AST) -> Set[str]:
+    return {a for a in astutil.positional_params(fn) if a.endswith("_ref")}
+
+
+def _stored_refs(node: ast.AST, refs: Set[str]) -> Set[str]:
+    """Ref names stored to (subscript assignment) in ``node``'s own scope."""
+    out: Set[str] = set()
+    for sub in own_scope_walk(node):
+        targets: List[ast.AST] = []
+        if isinstance(sub, ast.Assign):
+            targets = sub.targets
+        elif isinstance(sub, ast.AugAssign):
+            targets = [sub.target]
+        for tgt in targets:
+            if isinstance(tgt, ast.Subscript) \
+                    and isinstance(tgt.value, ast.Name) \
+                    and tgt.value.id in refs:
+                out.add(tgt.value.id)
+    return out
+
+
+def _is_when_guarded(fn: ast.AST) -> bool:
+    for dec in fn.decorator_list:
+        d = dec.func if isinstance(dec, ast.Call) else dec
+        if last_segment(dotted_name(d)) == "when":
+            return True
+    return False
+
+
+@rule("ML501", "pallas",
+      "kernel ref with no pl.when-guarded store site")
+def check_unguarded_store(ctx):
+    if not _is_kernel_file(ctx.relpath):
+        return []
+    out: List = []
+    for fn in astutil.function_defs(ctx.tree):
+        refs = _ref_params(fn)
+        if not refs:
+            continue
+        top_level = _stored_refs(fn, refs)
+        guarded: Set[str] = set()
+        for node in ast.walk(fn):
+            if node is fn or not isinstance(node, astutil.FuncNode):
+                continue
+            if _is_when_guarded(node):
+                guarded |= _stored_refs(node, refs)
+            else:
+                # unguarded nested def (e.g. a helper called in-line)
+                top_level |= _stored_refs(node, refs)
+        for ref in sorted(top_level - guarded):
+            out.append(ctx.violation(
+                fn, "ML501",
+                f"`{ref}` in `{fn.name}` is only ever stored "
+                f"unconditionally -- with an over-covering grid the "
+                f"padded/inactive tiles write garbage; guard the store "
+                f"(or its init) with pl.when"))
+    return out
+
+
+@rule("ML502", "pallas",
+      "grid tile division without a divisibility guard")
+def check_grid_divisibility(ctx):
+    if not _is_kernel_file(ctx.relpath):
+        return []
+    out: List = []
+    for fn in astutil.function_defs(ctx.tree):
+        grid_exprs: List[ast.AST] = []
+        for node in own_scope_walk(fn):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id == "grid":
+                        grid_exprs.append(node.value)
+            elif isinstance(node, ast.keyword) and node.arg == "grid":
+                grid_exprs.append(node.value)
+        if not grid_exprs:
+            continue
+        has_floordiv = any(
+            isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.FloorDiv)
+            for g in grid_exprs for sub in ast.walk(g))
+        if not has_floordiv:
+            continue
+        guarded = False
+        for node in own_scope_walk(fn):
+            if isinstance(node, (ast.Assert, ast.If)):
+                test = node.test
+                if any(isinstance(s, ast.BinOp)
+                       and isinstance(s.op, ast.Mod)
+                       for s in ast.walk(test)):
+                    guarded = True
+                    break
+        if not guarded:
+            out.append(ctx.violation(
+                fn, "ML502",
+                f"`{fn.name}` computes its grid with `//` but never "
+                f"checks divisibility -- a non-multiple shape silently "
+                f"drops the remainder tiles; assert `x % tile == 0` (or "
+                f"round up and predicate)"))
+    return out
+
+
+def _positional_sig(fn: ast.AST) -> Tuple[str, ...]:
+    return tuple(astutil.positional_params(fn))
+
+
+@rule("ML503", "pallas",
+      "kernel-vs-ref entry point signature drift", scope="tree")
+def check_ref_signature_drift(ctxs):
+    out: List = []
+    by_dir: Dict[str, Dict[str, "FileContext"]] = {}
+    for ctx in ctxs:
+        p = PurePosixPath(ctx.relpath)
+        if "kernels" not in p.parts:
+            continue
+        by_dir.setdefault(str(p.parent), {})[p.name] = ctx
+    for dirname, files in sorted(by_dir.items()):
+        ref_ctx = files.get("ref.py")
+        if ref_ctx is None:
+            continue
+        impl_sigs: Dict[str, Tuple[Tuple[str, ...], str]] = {}
+        for impl_name in ("ops.py", "kernel.py", "__init__.py"):
+            impl_ctx = files.get(impl_name)
+            if impl_ctx is None:
+                continue
+            for fn in astutil.function_defs(impl_ctx.tree):
+                impl_sigs.setdefault(
+                    fn.name, (_positional_sig(fn), impl_name))
+        for fn in astutil.function_defs(ref_ctx.tree):
+            if not fn.name.endswith("_ref"):
+                continue
+            stem = fn.name[:-len("_ref")]
+            if stem not in impl_sigs:
+                continue
+            ref_pos = _positional_sig(fn)
+            impl_pos, impl_file = impl_sigs[stem]
+            n = min(len(ref_pos), len(impl_pos))
+            if ref_pos[:n] != impl_pos[:n]:
+                out.append(ref_ctx.violation(
+                    fn, "ML503",
+                    f"`{fn.name}` positional args {ref_pos[:n]} drifted "
+                    f"from `{stem}` in {dirname}/{impl_file} "
+                    f"{impl_pos[:n]} -- the parity tests now compare "
+                    f"different operand orders"))
+    return out

@@ -1,0 +1,149 @@
+"""PRNG-discipline rules.
+
+Every bit-parity assertion in the repo (lane-vs-solo, mesh-vs-host,
+warm-vs-cold, migration) rests on ONE property: the sampling and bootstrap
+streams are pure functions of (seed, slot, replicate) counters rooted at a
+small number of audited key-construction sites.  A stray
+``jax.random.PRNGKey(...)`` deep in a helper silently forks a new stream --
+nothing fails until two paths that must agree draw from different roots.
+
+ML201 -- raw key construction outside the sanctioned sites
+(core/sampling.py owns ``root_key`` and the SampleStore; session/pool
+``__init__`` are the serving roots).  Deliberate exceptions (the launch/
+model-training scaffolding) are carried in the baseline file, visibly.
+
+ML202 -- the same key consumed by more than one sampler without an
+intervening ``split``/``fold_in``: the draws are identical, which is
+correlated-sample corruption, not randomness.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from .. import astutil
+from ..astutil import call_name, dotted_name, flatten_target_names, \
+    last_segment, own_scope_walk
+from ..core import rule
+
+# (relpath suffix, qualname prefix or None = whole module)
+_SANCTIONED = (
+    ("core/sampling.py", None),
+    ("serve/session.py", "AQPSession.__init__"),
+    ("serve/lane_pool.py", "LanePool.__init__"),
+)
+
+_KEY_CTORS = {"PRNGKey", "key"}
+
+
+def _is_key_ctor(node: ast.Call) -> bool:
+    name = call_name(node)
+    if not name:
+        return False
+    seg = last_segment(name)
+    if seg == "PRNGKey":
+        return True
+    # ``jax.random.key`` only -- a bare ``key(...)`` is anything.
+    return seg == "key" and name.endswith("random.key")
+
+
+@rule("ML201", "prng",
+      "raw PRNGKey construction outside a sanctioned site")
+def check_raw_key(ctx):
+    out: List = []
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and _is_key_ctor(node)):
+            continue
+        scope = ctx.scope_of(node)
+        sanctioned = False
+        for suffix, prefix in _SANCTIONED:
+            if ctx.relpath.endswith(suffix) and (
+                    prefix is None or scope == prefix
+                    or scope.startswith(prefix + ".")):
+                sanctioned = True
+                break
+        if not sanctioned:
+            out.append(ctx.violation(
+                node, "ML201",
+                "raw PRNGKey construction outside the sanctioned sites "
+                "(sampling.root_key / SampleStore / session/pool init) "
+                "forks an unaudited stream -- derive via "
+                "sampling.root_key, split, or fold_in"))
+    return out
+
+
+_DERIVERS = {"split", "fold_in", "key_data", "wrap_key_data", "clone",
+             "PRNGKey", "key", "root_key"}
+
+
+def _random_root(name: str) -> bool:
+    """Heuristic: dotted path through a jax.random-ish module."""
+    return (name.startswith(("jax.random.", "jrandom.", "jr."))
+            or ".random." in name)
+
+
+@rule("ML202", "prng",
+      "key consumed by >1 sampler without split/fold_in")
+def check_key_reuse(ctx):
+    out: List = []
+    for fn in astutil.function_defs(ctx.tree):
+        keys: Set[str] = set()
+        used_at = {}
+
+        def handle_expr(expr: ast.AST):
+            for node in ast.walk(expr):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = call_name(node)
+                if not name or not _random_root(name):
+                    continue
+                seg = last_segment(name)
+                if seg in _DERIVERS:
+                    continue
+                for arg in list(node.args) + \
+                        [kw.value for kw in node.keywords]:
+                    d = dotted_name(arg)
+                    if d in keys:
+                        if d in used_at:
+                            out.append(ctx.violation(
+                                node, "ML202",
+                                f"key `{d}` already consumed at line "
+                                f"{used_at[d]} -- identical draws; "
+                                f"split/fold_in a fresh subkey per "
+                                f"consumer"))
+                        else:
+                            used_at[d] = node.lineno
+
+        def handle_stmt(stmt: ast.AST):
+            # uses in the value first, THEN target rebinding resets state
+            # (`self.key, sub = split(self.key)` is the sanctioned idiom).
+            if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                if stmt.value is not None:
+                    handle_expr(stmt.value)
+                    fresh = any(
+                        isinstance(s, ast.Call)
+                        and last_segment(call_name(s)) in
+                        ("split", "fold_in", "PRNGKey", "root_key")
+                        for s in ast.walk(stmt.value))
+                    for tgt in astutil.assign_targets(stmt):
+                        for name in flatten_target_names(tgt):
+                            used_at.pop(name, None)
+                            if fresh:
+                                keys.add(name)
+                            else:
+                                keys.discard(name)
+            elif isinstance(stmt, ast.Expr):
+                handle_expr(stmt.value)
+            else:
+                for child in ast.iter_child_nodes(stmt):
+                    if isinstance(child, astutil.FuncNode
+                                  + (ast.ClassDef, ast.Lambda)):
+                        continue
+                    if isinstance(child, ast.stmt):
+                        handle_stmt(child)
+                    elif isinstance(child, ast.expr):
+                        handle_expr(child)
+
+        for stmt in fn.body:
+            handle_stmt(stmt)
+    return out

@@ -1,0 +1,225 @@
+"""Recompile-hygiene rules.
+
+The serving contract is "one compiled program per pool" (DESIGN.md phases
+C-J): a steady-state recompile costs 100ms-seconds in the middle of the
+dispatch hot path and shows up only as a latency-tail cliff (the PR 9
+``_unstack`` bug).  These rules catch the static patterns that cause it.
+
+ML301 -- jit boundary drift: ``static_argnames`` naming a parameter that
+does not exist on the decorated function (silent: jax only errors when a
+caller passes it), a static parameter with a mutable (unhashable) default,
+or ``jax.jit`` applied directly to a lambda expression.
+
+ML302 -- a fresh callable jitted per call: ``jax.jit(local_fn)`` inside an
+un-memoized function body creates a NEW jit wrapper -- and a new compile
+cache -- on every invocation.  The sanctioned pattern is an
+``lru_cache``-decorated factory (see core/l2miss._estimate_fn).
+
+ML303 -- compiled-program caches without a sane bound: an unbounded
+``lru_cache``/``functools.cache`` on a jit-returning factory pins every
+program it ever built (a long-lived server cycling configurations leaks
+compiled executables); an oversized bound (> 64) is the same leak with a
+delay (core/fused bounds its sharded-step memo to 16 for exactly this
+reason).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from .. import astutil
+from ..astutil import call_name, decorator_calls, dotted_name, last_segment
+from ..core import rule
+
+_MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                     ast.SetComp)
+
+
+def _jit_call_of(dec: ast.AST) -> Optional[ast.Call]:
+    """The Call node carrying jit kwargs for @jax.jit(...)/@partial(jax.jit,...)."""
+    if not isinstance(dec, ast.Call):
+        return None
+    name = call_name(dec)
+    seg = last_segment(name)
+    if seg in ("jit", "pjit"):
+        return dec
+    if seg == "partial" and dec.args:
+        inner = last_segment(dotted_name(dec.args[0]))
+        if inner in ("jit", "pjit"):
+            return dec
+    return None
+
+
+def _static_names(call: ast.Call) -> Optional[List[str]]:
+    """Literal static_argnames, or None when not statically resolvable."""
+    for kw in call.keywords:
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, str):
+            return [v.value]
+        if isinstance(v, (ast.Tuple, ast.List)) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, str)
+                for e in v.elts):
+            return [e.value for e in v.elts]
+        return None
+    return None
+
+
+@rule("ML301", "recompile",
+      "jit boundary: static_argnames drift / unhashable static default / "
+      "jitted lambda")
+def check_jit_boundary(ctx):
+    out: List = []
+    for fn in astutil.function_defs(ctx.tree):
+        params = set(astutil.positional_params(fn)
+                     + astutil.keyword_only_params(fn))
+        defaults = {}
+        args = fn.args
+        pos = list(args.posonlyargs) + list(args.args)
+        for a, d in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+            defaults[a.arg] = d
+        for a, d in zip(args.kwonlyargs, args.kw_defaults):
+            if d is not None:
+                defaults[a.arg] = d
+        for dec in decorator_calls(fn):
+            call = _jit_call_of(dec)
+            if call is None:
+                continue
+            statics = _static_names(call)
+            if statics is None:
+                continue
+            for s in statics:
+                if s not in params:
+                    out.append(ctx.violation(
+                        dec, "ML301",
+                        f"static_argnames names `{s}` which is not a "
+                        f"parameter of `{fn.name}` -- signature drift; "
+                        f"callers passing it will get a jax error, "
+                        f"callers relying on it being static won't"))
+                elif isinstance(defaults.get(s), _MUTABLE_LITERALS):
+                    out.append(ctx.violation(
+                        dec, "ML301",
+                        f"static parameter `{s}` of `{fn.name}` has an "
+                        f"unhashable (mutable) default -- every call with "
+                        f"the default raises or recompiles; use a tuple / "
+                        f"frozen value"))
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) \
+                and last_segment(call_name(node)) in ("jit", "pjit") \
+                and node.args and isinstance(node.args[0], ast.Lambda):
+            out.append(ctx.violation(
+                node, "ML301",
+                "jax.jit(lambda ...) -- a new callable (and compile-cache "
+                "key) at every evaluation site; name the function"))
+    return out
+
+
+@rule("ML302", "recompile",
+      "jit of a per-call local callable outside a memoized factory")
+def check_jit_factory(ctx):
+    out: List = []
+    for fn in astutil.function_defs(ctx.tree):
+        if astutil.has_cache_decorator(fn):
+            continue
+        local_names = set()
+        for node in astutil.own_scope_walk(fn):
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                for tgt in astutil.assign_targets(node):
+                    for name in astutil.flatten_target_names(tgt):
+                        if "." not in name:
+                            local_names.add(name)
+        for node in ast.walk(fn):
+            if node is fn or not isinstance(node, astutil.FuncNode):
+                continue
+            local_names.add(node.name)
+        for node in astutil.own_scope_walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if last_segment(call_name(node)) not in ("jit", "pjit"):
+                continue
+            if not node.args:
+                continue
+            target = node.args[0]
+            # lambdas are ML301's finding; flagging twice is noise
+            if isinstance(target, ast.Name) and target.id in local_names:
+                out.append(ctx.violation(
+                    node, "ML302",
+                    f"jax.jit of a callable created inside `{fn.name}` -- "
+                    f"a fresh wrapper (and recompile) every call; hoist to "
+                    f"module scope or wrap the factory in a bounded "
+                    f"lru_cache"))
+    return out
+
+
+_LRU_BOUND_MAX = 64
+
+
+def _contains_jit(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        d = dotted_name(node)
+        if d and last_segment(d) in ("jit", "pjit"):
+            return True
+    return False
+
+
+def _module_int_constants(tree: ast.Module) -> dict:
+    consts = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Constant) \
+                and isinstance(node.value.value, int):
+            consts[node.targets[0].id] = node.value.value
+    return consts
+
+
+@rule("ML303", "recompile",
+      "unbounded / oversized cache over compiled programs")
+def check_cache_bounds(ctx):
+    out: List = []
+    consts = _module_int_constants(ctx.tree)
+    for fn in astutil.function_defs(ctx.tree):
+        for dec in fn.decorator_list:
+            name = dotted_name(dec if not isinstance(dec, ast.Call)
+                               else dec.func)
+            seg = last_segment(name)
+            if seg == "cache":
+                out.append(ctx.violation(
+                    dec, "ML303",
+                    f"functools.cache on `{fn.name}` is unbounded; use "
+                    f"lru_cache with maxsize <= {_LRU_BOUND_MAX}"))
+                continue
+            if seg != "lru_cache":
+                continue
+            def _resolve(v):
+                if isinstance(v, ast.Constant):
+                    return v.value
+                if isinstance(v, ast.Name):
+                    return consts.get(v.id)
+                return None
+
+            maxsize = None
+            has_bound = False
+            if isinstance(dec, ast.Call):
+                if dec.args:
+                    maxsize = _resolve(dec.args[0])
+                    has_bound = maxsize is not None
+                for kw in dec.keywords:
+                    if kw.arg == "maxsize":
+                        maxsize = _resolve(kw.value)
+                        has_bound = maxsize is not None
+            if not has_bound or maxsize is None:
+                out.append(ctx.violation(
+                    dec, "ML303",
+                    f"lru_cache on `{fn.name}` without a finite maxsize is "
+                    f"unbounded -- a long-lived server pins every entry"))
+            elif isinstance(maxsize, int) and maxsize > _LRU_BOUND_MAX \
+                    and _contains_jit(fn):
+                out.append(ctx.violation(
+                    dec, "ML303",
+                    f"lru_cache(maxsize={maxsize}) on `{fn.name}` caches "
+                    f"COMPILED PROGRAMS -- each entry pins an executable; "
+                    f"bound it <= {_LRU_BOUND_MAX} (shape buckets are "
+                    f"O(log n), the bound should be too)"))
+    return out

@@ -1,0 +1,252 @@
+"""Trace-safety rules.
+
+ML101 -- Python control flow (`if`/`while`/`assert`) on traced values
+inside jit-reachable bodies, and host concretization (`float()`, `.item()`,
+`np.asarray()`) of traced values under trace.  Either aborts tracing with a
+ConcretizationTypeError at best; at worst (a value that happens to be
+concrete at trace time, e.g. a closure constant) it silently bakes one
+branch into the compiled program and the determinism contract breaks only
+for the shapes that retraced differently.
+
+ML102 -- host synchronization in the serving pump path.  `pump()`/`tick()`
+rounds are sync-free by contract (DESIGN.md phase F): the ONLY device
+reads are the explicit `jax.device_get` calls at harvest points.  An
+`.item()` / `float()` / `np.asarray()` on a device value anywhere else in
+the round blocks the host on the step's completion and serializes the
+dispatch pipeline -- the exact tail-latency class PR 9's pre-warmed key
+buckets were added to kill.  The runtime teeth for this rule live in
+repro.core.sanitize (transfer-guard over LanePool.tick).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from .. import astutil
+from ..astutil import (TRACED_CALL_ROOTS, call_name, dotted_name,
+                       flatten_target_names, last_segment, own_scope_walk)
+from ..core import rule
+
+_CONCRETIZERS = {"float", "int", "bool"}
+_NP_SYNC = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+            "onp.asarray", "onp.array"}
+
+
+def _is_traced_call(node: ast.Call) -> bool:
+    name = call_name(node)
+    return bool(name) and (name.startswith(TRACED_CALL_ROOTS)
+                           or name in ("jnp", "lax"))
+
+
+def _tainted_names(fn: ast.AST) -> Set[str]:
+    """Names assigned (in the fn's own scope) from jnp/lax expressions,
+    propagated to fixpoint through arithmetic/subscripts/attributes."""
+    tainted: Set[str] = set()
+    changed = True
+    while changed:
+        changed = False
+        for node in own_scope_walk(fn):
+            if not isinstance(node, (ast.Assign, ast.AugAssign,
+                                     ast.AnnAssign)):
+                continue
+            value = node.value
+            if value is None:
+                continue
+            is_traced = False
+            for sub in ast.walk(value):
+                if isinstance(sub, ast.Call) and _is_traced_call(sub):
+                    is_traced = True
+                    break
+                d = dotted_name(sub)
+                if d and (d in tainted or d.split(".", 1)[0] in tainted):
+                    is_traced = True
+                    break
+            if not is_traced:
+                continue
+            for tgt in astutil.assign_targets(node):
+                for name in flatten_target_names(tgt):
+                    if name not in tainted:
+                        tainted.add(name)
+                        changed = True
+    return tainted
+
+
+def _is_none_check(test: ast.AST) -> bool:
+    return (isinstance(test, ast.Compare)
+            and len(test.ops) == 1
+            and isinstance(test.ops[0], (ast.Is, ast.IsNot)))
+
+
+@rule("ML101", "trace-safety",
+      "Python branch / host concretization on a traced value under jit")
+def check_traced_branch(ctx):
+    out: List = []
+    for fn in ctx.jit_reachable:
+        tainted = _tainted_names(fn)
+
+        def touches_traced(expr: ast.AST) -> bool:
+            for sub in ast.walk(expr):
+                if isinstance(sub, ast.Call) and _is_traced_call(sub):
+                    return True
+                d = dotted_name(sub)
+                if d and (d in tainted or d.split(".", 1)[0] in tainted):
+                    return True
+            return False
+
+        for node in own_scope_walk(fn):
+            if isinstance(node, (ast.If, ast.While, ast.Assert, ast.IfExp)):
+                test = node.test
+                if _is_none_check(test):
+                    continue
+                if touches_traced(test):
+                    kind = type(node).__name__.lower()
+                    out.append(ctx.violation(
+                        node, "ML101",
+                        f"`{kind}` on a traced value inside a jitted body "
+                        f"-- use lax.cond/select/while_loop (or hoist the "
+                        f"decision to a static argument)"))
+            elif isinstance(node, ast.Call):
+                name = call_name(node)
+                seg = last_segment(name)
+                if seg == "item" and isinstance(node.func, ast.Attribute):
+                    recv = node.func.value
+                    if touches_traced(recv):
+                        out.append(ctx.violation(
+                            node, "ML101",
+                            ".item() on a traced value aborts tracing "
+                            "(host sync under jit)"))
+                elif (name in _CONCRETIZERS or name in _NP_SYNC) \
+                        and node.args and touches_traced(node.args[0]):
+                    out.append(ctx.violation(
+                        node, "ML101",
+                        f"{name}() concretizes a traced value inside a "
+                        f"jitted body"))
+    return out
+
+
+# -- ML102: pump-path host syncs -------------------------------------------
+
+_PUMP_ROOTS = ("pump", "tick", "drain")
+_PUMP_PREFIXES = ("_tick", "_pump")
+
+# Imported step entry points known to return device values.
+_KNOWN_DEVICE_FNS = {"fused_step", "make_sharded_step", "fused_l2miss",
+                     "fused_l2miss_lanes", "fused_grouped"}
+
+
+def _is_pump_module(relpath: str) -> bool:
+    return "/serve/" in f"/{relpath}"
+
+
+def _module_jitted_defs(ctx) -> Set[str]:
+    """Module-level defs that are jit-wrapped (decorator or name = jax.jit)."""
+    jitted: Set[str] = set()
+    for fn in astutil.function_defs(ctx.tree):
+        if astutil.is_jit_decorated(fn):
+            jitted.add(fn.name)
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            seg = last_segment(call_name(node.value))
+            if seg in ("jit", "pjit"):
+                for tgt in node.targets:
+                    d = dotted_name(tgt)
+                    if d:
+                        jitted.add(last_segment(d))
+    return jitted
+
+
+def _called_names(fn: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for node in own_scope_walk(fn):
+        if isinstance(node, ast.Call):
+            seg = last_segment(call_name(node))
+            if seg:
+                out.add(seg)
+    return out
+
+
+def _pump_path_functions(ctx) -> List[ast.AST]:
+    """Transitive same-module closure from pump()/tick()/drain() roots,
+    resolving calls by bare name (self.foo(...) -> foo)."""
+    fns = astutil.function_defs(ctx.tree)
+    by_name: Dict[str, List[ast.AST]] = {}
+    for fn in fns:
+        by_name.setdefault(fn.name, []).append(fn)
+    frontier = [fn for fn in fns
+                if fn.name in _PUMP_ROOTS
+                or fn.name.startswith(_PUMP_PREFIXES)]
+    reach: Set[ast.AST] = set(frontier)
+    while frontier:
+        fn = frontier.pop()
+        for callee in _called_names(fn):
+            for target in by_name.get(callee, ()):
+                if target not in reach:
+                    reach.add(target)
+                    frontier.append(target)
+    return list(reach)
+
+
+@rule("ML102", "trace-safety",
+      "implicit device->host sync in the serving pump path")
+def check_pump_path_sync(ctx):
+    if not _is_pump_module(ctx.relpath):
+        return []
+    out: List = []
+    device_fns = _module_jitted_defs(ctx) | _KNOWN_DEVICE_FNS
+
+    for fn in _pump_path_functions(ctx):
+        # Taint: names bound from device-returning calls; device_get
+        # launders (its results are host numpy by construction).
+        tainted: Set[str] = set()
+        for node in own_scope_walk(fn):
+            if not isinstance(node, (ast.Assign, ast.AugAssign,
+                                     ast.AnnAssign)):
+                continue
+            value = node.value
+            if value is None:
+                continue
+            launders = any(
+                isinstance(s, ast.Call)
+                and last_segment(call_name(s)) == "device_get"
+                for s in ast.walk(value))
+            taints = not launders and any(
+                isinstance(s, ast.Call)
+                and last_segment(call_name(s)) in device_fns
+                for s in ast.walk(value))
+            for tgt in astutil.assign_targets(node):
+                for name in flatten_target_names(tgt):
+                    if taints:
+                        tainted.add(name)
+                    elif name in tainted:    # reassigned clean
+                        tainted.discard(name)
+
+        def is_device(expr: ast.AST) -> bool:
+            for sub in ast.walk(expr):
+                d = dotted_name(sub)
+                if d and (d in tainted or d.split(".", 1)[0] in tainted):
+                    return True
+                if isinstance(sub, ast.Call) \
+                        and last_segment(call_name(sub)) in device_fns:
+                    return True
+            return False
+
+        for node in own_scope_walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            seg = last_segment(name)
+            if seg == "item" and isinstance(node.func, ast.Attribute) \
+                    and is_device(node.func.value):
+                out.append(ctx.violation(
+                    node, "ML102",
+                    ".item() on a device value in the pump path -- blocks "
+                    "the host on the in-flight step; read at the harvest "
+                    "point via jax.device_get"))
+            elif (name in _CONCRETIZERS or name in _NP_SYNC) \
+                    and node.args and is_device(node.args[0]):
+                out.append(ctx.violation(
+                    node, "ML102",
+                    f"{name}() on a device value in the pump path forces "
+                    f"an implicit device->host sync; use jax.device_get at "
+                    f"an explicit harvest point"))
+    return out
